@@ -1,0 +1,20 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, repeat: int = 3, **kwargs):
+    """Median wall time of fn(*args) over `repeat` runs, seconds."""
+    times = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

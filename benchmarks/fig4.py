@@ -1,0 +1,58 @@
+"""Paper Figure 4 reproduction: the cache-sorting cost model (Eq. 4 / Eq. 5).
+
+(a) fraction of accumulator cache-lines touched, unsorted vs sorted bound,
+    N=1M, alpha=2, B=16;
+(b) reduction factor E[C_unsort]/E[C_sort] as a function of B, N, alpha
+    (B of the unsorted index fixed to 16, as in the paper).
+
+Also: a *measured* counterpart on synthetic power-law data — the model is
+only useful if the real Algorithm 1 tracks it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+import repro.core.cache_sort as cs
+
+from .common import emit
+
+
+def main():
+    # ---- (a) fractions at the paper's setting -----------------------------
+    n, b, d = 1_000_000, 16, 1000
+    p = cs.power_law_probs(d, 2.0)
+    un = cs.expected_cost_unsorted(p, p, n, b)
+    so = cs.expected_cost_sorted_bound(p, p, n, b)
+    emit("fig4a_frac_unsorted", 0.0, f"value={un / (n / b):.4f}")
+    emit("fig4a_frac_sorted_bound", 0.0, f"value={so / (n / b):.4f}")
+    emit("fig4a_model_reduction", 0.0, f"value={un / so:.2f}x")
+
+    # ---- (b) reduction vs (B, N, alpha) ------------------------------------
+    for alpha in (1.5, 2.0, 2.5):
+        for nn in (10 ** 5, 10 ** 6, 10 ** 7):
+            for bb in (16, 32, 64):
+                pp = cs.power_law_probs(d, alpha)
+                u = cs.expected_cost_unsorted(pp, pp, nn, 16)
+                s = cs.expected_cost_sorted_bound(pp, pp, nn, bb)
+                emit(f"fig4b_alpha{alpha}_N{nn:.0e}_B{bb}", 0.0,
+                     f"reduction={u / max(s, 1e-9):.2f}x")
+
+    # ---- measured: Algorithm 1 on synthetic power-law data -----------------
+    rng = np.random.default_rng(0)
+    n, d = 20000, 2000
+    pj = np.minimum(1.0, cs.power_law_probs(d, 2.0) * 20)
+    x = sp.csr_matrix(((rng.random((n, d)) < pj[None, :])
+                       * rng.lognormal(0, 1, (n, d))).astype(np.float32))
+    pi = cs.cache_sort(x)
+    for b in (16, 32, 128):
+        qd = np.flatnonzero(rng.random(d) < pj)       # query from same law
+        c_un = cs.measured_block_cost(x, b, qd)
+        c_so = cs.measured_block_cost(x, b, qd, pi=pi)
+        emit(f"fig4_measured_B{b}", 0.0,
+             f"unsorted={c_un};sorted={c_so};reduction={c_un / max(c_so, 1):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

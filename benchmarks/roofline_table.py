@@ -1,0 +1,44 @@
+"""Emit the roofline table from dry-run artifacts (results/*.json)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = [
+    ("results/dryrun_single_pod.json", "16x16"),
+    ("results/dryrun_multi_pod.json", "2x16x16"),
+]
+
+
+def main():
+    for path, mesh in RESULTS:
+        if not os.path.exists(path):
+            emit(f"roofline_{mesh}", 0.0, "missing (run launch.dryrun)")
+            continue
+        with open(path) as f:
+            text = f.read().strip()
+        if text.startswith("["):
+            rows = json.loads(text)
+        else:                      # JSONL (incremental sweep output)
+            rows = [json.loads(l) for l in text.splitlines() if l.strip()]
+        for r in rows:
+            tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+            if r.get("status") == "ok" and "compute_s" in r:
+                bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                emit(tag, bound * 1e6,
+                     f"dominant={r['dominant']};useful={r['useful_ratio']:.3f};"
+                     f"bytes_per_dev={r['bytes_per_device']:.3e};"
+                     f"fits={r.get('fits_hbm')}")
+            elif r.get("status") == "ok":   # compile-proof-only rows
+                emit(tag, 0.0,
+                     f"compiled;bytes_per_dev={r.get('bytes_per_device', 0):.3e};"
+                     f"fits={r.get('fits_hbm')}")
+            else:
+                emit(tag, 0.0, r.get("status", "?"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving with the PQ-approximated hybrid LM head (the paper's technique
+applied to large-vocab next-token retrieval).
+
+    PYTHONPATH=src python examples/serve_pq_head.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serve import greedy_generate
+from repro.serve.hybrid_head import HybridLMHead
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg = get_config("qwen2-7b-smoke")
+    model = Model(cfg)
+    params = model.init(key)
+
+    prompt = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+    print("greedy decode, exact full-vocab head...")
+    exact = greedy_generate(model, params, prompt, 12, 64, use_pq_head=False,
+                            penalty=1.0)
+    print("greedy decode, PQ hybrid head (ADC + residual reorder)...")
+    pq = greedy_generate(model, params, prompt, 12, 64, use_pq_head=True,
+                         penalty=1.0)
+    # Greedy decoding cascades: a single near-tie flip early in a sequence
+    # desynchronizes everything after it, so sequence agreement understates
+    # head accuracy.  The robust metric is FIRST-token agreement (no cascade).
+    seq_agree = float((np.asarray(exact) == np.asarray(pq)).mean())
+    first_agree = float((np.asarray(exact)[:, 0]
+                         == np.asarray(pq)[:, 0]).mean())
+    print(f"first-token agreement: {first_agree:.3f} "
+          f"(sequence-level, cascade-affected: {seq_agree:.3f})")
+    agree = first_agree
+
+    # head-level cost accounting (what the technique buys at scale)
+    head = HybridLMHead(cfg)
+    hp = head.build(params["lm_head"])
+    v, d = cfg.vocab_size, cfg.d_model
+    exact_bytes = v * d * 4
+    pq_bytes = hp.codes.shape[0] * hp.codes.shape[1]
+    print(f"scan bytes/token: exact={exact_bytes:.2e} pq={pq_bytes:.2e} "
+          f"({exact_bytes / pq_bytes:.0f}x reduction)")
+    assert agree >= 0.8
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end training driver: train a ~100M-parameter dense LM for a few
+hundred steps on the deterministic synthetic stream, with checkpointing and
+resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig, register
+from repro.data.pipeline import DataConfig
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+# ~100M params: 12L, d=512, untied 32k vocab (2*32768*512 = 34M emb + 66M body)
+CFG_100M = ModelConfig(
+    name="demo-100m", family="dense", num_layers=12, d_model=512,
+    num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32768,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    model = Model(CFG_100M)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model: {n_params / 1e6:.1f}M params")
+
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr_peak=3e-4, warmup_steps=20, decay_steps=args.steps),
+        DataConfig(vocab_size=CFG_100M.vocab_size, seq_len=args.seq,
+                   global_batch=args.batch),
+        TrainerConfig(num_steps=args.steps, microbatches=2, ckpt_every=100,
+                      ckpt_dir=args.ckpt, log_every=20),
+    )
+    params, opt, hist = trainer.run(jax.random.PRNGKey(0))
+    losses = [h["loss"] for h in hist if not h["skipped"]]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+    if trainer.straggler_steps:
+        print(f"straggler steps flagged: {trainer.straggler_steps}")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""The paper's §7.2 baselines, implemented in full.
+
+Every baseline returns (ids, scores) of shape (Q, h) plus wall time, so the
+benchmark harness (benchmarks/table2.py, table3.py) can reproduce the paper's
+tables directly.
+
+  * dense_brute_force          — sparse padded to dense, full matmul
+  * sparse_brute_force         — dense appended to sparse, exact CSR product
+  * sparse_inverted_index      — same conversion, exact inverted-index scan
+  * hamming512                 — 512 Rademacher sign bits, Hamming scan,
+                                 overfetch 5000, exact rerank
+  * dense_pq_reorder           — PQ over the dense component only, overfetch,
+                                 exact rerank
+  * sparse_only                — inverted index over the sparse component only,
+                                 optional exact rerank
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import scipy.sparse as sp
+
+import jax.numpy as jnp
+
+from .pq import adc_lut, adc_scores_ref, pq_encode, train_codebooks
+
+__all__ = [
+    "BaselineResult", "dense_brute_force", "sparse_brute_force",
+    "sparse_inverted_index", "hamming512", "dense_pq_reorder", "sparse_only",
+    "exact_topk", "recall_at_h",
+]
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    name: str
+    ids: np.ndarray
+    scores: np.ndarray
+    seconds: float
+
+
+def _topk(scores: np.ndarray, h: int):
+    idx = np.argpartition(-scores, min(h, scores.shape[1] - 1), axis=1)[:, :h]
+    part = np.take_along_axis(scores, idx, axis=1)
+    order = np.argsort(-part, axis=1)
+    return np.take_along_axis(idx, order, axis=1), np.take_along_axis(part, order, axis=1)
+
+
+def exact_topk(q_sparse, q_dense, x_sparse, x_dense, h: int):
+    scores = np.asarray((q_sparse @ x_sparse.T).todense(), np.float32)
+    scores += np.asarray(q_dense, np.float32) @ np.asarray(x_dense, np.float32).T
+    return _topk(scores, h)
+
+
+def recall_at_h(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    hits = 0
+    for f, t in zip(found_ids, true_ids):
+        hits += len(set(f.tolist()) & set(t.tolist()))
+    return hits / true_ids.size
+
+
+# ---------------------------------------------------------------------------
+
+def dense_brute_force(q_sparse, q_dense, x_sparse, x_dense, h: int = 20):
+    """Pad 0's to the sparse component; everything dense."""
+    xd = np.hstack([np.asarray(x_sparse.todense(), np.float32),
+                    np.asarray(x_dense, np.float32)])
+    qd = np.hstack([np.asarray(q_sparse.todense(), np.float32),
+                    np.asarray(q_dense, np.float32)])
+    t0 = time.perf_counter()
+    scores = qd @ xd.T
+    ids, sc = _topk(scores, h)
+    return BaselineResult("dense_brute_force", ids, sc, time.perf_counter() - t0)
+
+
+def _hybrid_as_sparse(x_sparse, x_dense):
+    return sp.hstack([x_sparse.tocsr(),
+                      sp.csr_matrix(np.asarray(x_dense, np.float32))]).tocsr()
+
+
+def sparse_brute_force(q_sparse, q_dense, x_sparse, x_dense, h: int = 20):
+    """Append dense dims to the sparse representation; exact CSR product."""
+    x_all = _hybrid_as_sparse(x_sparse, x_dense)
+    q_all = _hybrid_as_sparse(q_sparse, q_dense)
+    t0 = time.perf_counter()
+    scores = np.asarray((q_all @ x_all.T).todense(), np.float32)
+    ids, sc = _topk(scores, h)
+    return BaselineResult("sparse_brute_force", ids, sc, time.perf_counter() - t0)
+
+
+def sparse_inverted_index(q_sparse, q_dense, x_sparse, x_dense, h: int = 20):
+    """Exact accumulation over inverted lists (CSC), the paper's exact
+    inverted-index baseline (dense dims become full lists — the pathology the
+    paper calls out)."""
+    x_all = _hybrid_as_sparse(x_sparse, x_dense).tocsc()
+    q_all = _hybrid_as_sparse(q_sparse, q_dense).tocsr()
+    n = x_all.shape[0]
+    t0 = time.perf_counter()
+    out_ids = np.zeros((q_all.shape[0], h), np.int64)
+    out_sc = np.zeros((q_all.shape[0], h), np.float32)
+    for i in range(q_all.shape[0]):
+        acc = np.zeros(n, np.float32)
+        lo, hi = q_all.indptr[i], q_all.indptr[i + 1]
+        for j, qv in zip(q_all.indices[lo:hi], q_all.data[lo:hi]):
+            clo, chi = x_all.indptr[j], x_all.indptr[j + 1]
+            acc[x_all.indices[clo:chi]] += qv * x_all.data[clo:chi]
+        ids, sc = _topk(acc[None], h)
+        out_ids[i], out_sc[i] = ids[0], sc[0]
+    return BaselineResult("sparse_inverted_index", out_ids, out_sc,
+                          time.perf_counter() - t0)
+
+
+def hamming512(q_sparse, q_dense, x_sparse, x_dense, h: int = 20,
+               bits: int = 512, overfetch: int = 5000, seed: int = 0):
+    """Paper's hashing baseline: project on `bits` Rademacher vectors, median
+    threshold, Hamming scan, exact rerank of `overfetch`."""
+    rng = np.random.default_rng(seed)
+    d_s = x_sparse.shape[1]
+    d_d = x_dense.shape[1]
+    r_s = rng.choice([-1.0, 1.0], size=(d_s, bits)).astype(np.float32)
+    r_d = rng.choice([-1.0, 1.0], size=(d_d, bits)).astype(np.float32)
+    xp = np.asarray(x_sparse @ r_s) + np.asarray(x_dense, np.float32) @ r_d
+    med = np.median(xp, axis=0)
+    x_bits = np.packbits(xp > med, axis=1)
+    qp = np.asarray(q_sparse @ r_s) + np.asarray(q_dense, np.float32) @ r_d
+
+    t0 = time.perf_counter()
+    q_bits = np.packbits(qp > med, axis=1)
+    # Hamming distance via XOR popcount.
+    pop = np.unpackbits(x_bits[None, :, :] ^ q_bits[:, None, :], axis=2).sum(axis=2)
+    cand, _ = _topk(-pop.astype(np.float32), min(overfetch, xp.shape[0]))
+    ids, sc = _rerank_exact(cand, q_sparse, q_dense, x_sparse, x_dense, h)
+    return BaselineResult("hamming512", ids, sc, time.perf_counter() - t0)
+
+
+def _rerank_exact(cand, q_sparse, q_dense, x_sparse, x_dense, h):
+    qn = cand.shape[0]
+    out_ids = np.zeros((qn, h), np.int64)
+    out_sc = np.zeros((qn, h), np.float32)
+    xs = x_sparse.tocsr()
+    xd = np.asarray(x_dense, np.float32)
+    qs = q_sparse.tocsr()
+    qd = np.asarray(q_dense, np.float32)
+    for i in range(qn):
+        c = cand[i]
+        sc = np.asarray((qs[i] @ xs[c].T).todense())[0] + qd[i] @ xd[c].T
+        ids, s = _topk(sc[None], h)
+        out_ids[i] = c[ids[0]]
+        out_sc[i] = s[0]
+    return out_ids, out_sc
+
+
+def dense_pq_reorder(q_sparse, q_dense, x_sparse, x_dense, h: int = 20,
+                     overfetch: int = 10000, subspaces: int | None = None,
+                     seed: int = 0):
+    """Paper baseline 'Dense PQ, Reordering 10k': PQ over the dense component
+    only, overfetch, exact hybrid rerank."""
+    xd = jnp.asarray(np.asarray(x_dense, np.float32))
+    k = subspaces or max(x_dense.shape[1] // 2, 1)
+    cb = train_codebooks(xd, k, 16, seed=seed)
+    codes = pq_encode(xd, cb)
+    t0 = time.perf_counter()
+    lut = adc_lut(jnp.asarray(np.asarray(q_dense, np.float32)), cb)
+    scores = np.asarray(adc_scores_ref(codes, lut))
+    cand, _ = _topk(scores, min(overfetch, scores.shape[1]))
+    ids, sc = _rerank_exact(cand, q_sparse, q_dense, x_sparse, x_dense, h)
+    return BaselineResult("dense_pq_reorder", ids, sc, time.perf_counter() - t0)
+
+
+def sparse_only(q_sparse, q_dense, x_sparse, x_dense, h: int = 20,
+                overfetch: int | None = None):
+    """Paper baselines 'Sparse Inverted Index, No Reordering / Reordering 20k'."""
+    x_s = x_sparse.tocsc()
+    t0 = time.perf_counter()
+    scores = np.asarray((q_sparse @ x_s.T).todense(), np.float32)
+    if overfetch is None:
+        ids, sc = _topk(scores, h)
+        name = "sparse_only_no_reorder"
+    else:
+        cand, _ = _topk(scores, min(overfetch, scores.shape[1]))
+        ids, sc = _rerank_exact(cand, q_sparse, q_dense, x_sparse, x_dense, h)
+        name = f"sparse_only_reorder{overfetch}"
+    return BaselineResult(name, ids, sc, time.perf_counter() - t0)

@@ -1,0 +1,111 @@
+"""Distributed hybrid search (paper §7.2 "Online Search": 200 servers, one
+shard each, merge results) mapped to JAX shard_map over the mesh 'data' axis.
+
+Each device owns a row-shard of every row-parallel index structure (PQ codes,
+inverted-index, head block, residuals).  A query batch is replicated; every
+device scores its shard and keeps a local top-k; only (k × num_shards)
+candidates cross the network (all_gather), never the index — the same
+communication pattern as the paper's RPC fan-out.
+
+The same function lowers at ShapeDtypeStruct scale (1e9 rows across 512
+devices) in launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["sharded_pass1_topk", "make_sharded_search_fn", "merge_topk"]
+
+
+def merge_topk(scores: jax.Array, ids: jax.Array, k: int):
+    """Merge per-shard candidates: (Q, S*k) -> (Q, k)."""
+    vals, pos = jax.lax.top_k(scores, k)
+    return vals, jnp.take_along_axis(ids, pos, axis=1)
+
+
+def _pass1_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals, row_offset,
+                 *, k: int, axis: str, adc: str = "gather"):
+    """Runs on one shard (inside shard_map): approximate hybrid scores for the
+    local rows, local top-k, then all_gather the candidate sets."""
+    n_local = codes.shape[0]
+    if adc == "onehot":
+        # MXU path (the LUT16 kernel's contraction, expressed in jnp): codes
+        # expand to one-hot and contract against the LUT as a single matmul —
+        # no (Q, N, K) gather intermediate, systolic-friendly on TPU.
+        l = lut.shape[-1]
+        onehot = (codes[:, :, None] ==
+                  jnp.arange(l, dtype=codes.dtype)).astype(jnp.bfloat16)
+        dense_scores = jax.lax.dot_general(
+            lut.reshape(lut.shape[0], -1).astype(jnp.bfloat16),
+            onehot.reshape(n_local, -1),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (Q, n_local)
+    else:
+        # gather form (CPU-friendly reference path)
+        gathered = jnp.take_along_axis(
+            lut[:, None], codes[None, :, :, None].astype(jnp.int32), axis=3
+        )[..., 0]                                       # (Q, n_local, K)
+        dense_scores = gathered.sum(axis=-1)
+
+    # sparse inverted-index accumulation on the local shard
+    qn, nq = q_dims.shape
+    rows_g = jnp.take(inv_rows, q_dims, axis=0, mode="fill", fill_value=n_local)
+    vals_g = jnp.take(inv_vals, q_dims, axis=0, mode="fill", fill_value=0.0)
+    acc = jnp.zeros((qn, n_local), jnp.float32)
+    qidx = jnp.broadcast_to(jnp.arange(qn)[:, None, None], rows_g.shape)
+    sparse_scores = acc.at[qidx, rows_g].add(vals_g * q_vals[:, :, None],
+                                             mode="drop")
+
+    scores = dense_scores + sparse_scores
+    local_s, local_i = jax.lax.top_k(scores, k)
+    local_i = local_i + row_offset[0]                  # globalize ids
+    all_s = jax.lax.all_gather(local_s, axis, axis=1, tiled=True)  # (Q, S*k)
+    all_i = jax.lax.all_gather(local_i, axis, axis=1, tiled=True)
+    return merge_topk(all_s, all_i, k)
+
+
+def make_sharded_search_fn(mesh: Mesh, *, k: int, axis: str = "data",
+                           adc: str = "gather"):
+    """Build the jit-able sharded pass-1 search.
+
+    Index arrays are sharded on their row axis over `axis`; queries and LUTs
+    are replicated.  Returns fn(codes, lut, inv_rows, inv_vals, q_dims,
+    q_vals, row_offset) -> (scores (Q,k), global ids (Q,k)).
+
+    row_offset: (num_shards,) int32 — global row id of each shard's first row.
+    adc: "gather" (reference) or "onehot" (MXU contraction — the LUT16
+    kernel's algorithm; the TPU-native fast path).
+    """
+    spec_rows = P(axis)        # row-sharded index structures
+    spec_rep = P()             # replicated queries
+    fn = jax.shard_map(
+        functools.partial(_pass1_local, k=k, axis=axis, adc=adc),
+        mesh=mesh,
+        in_specs=(spec_rows, spec_rep, P(axis, None), P(axis, None),
+                  spec_rep, spec_rep, P(axis)),
+        out_specs=(spec_rep, spec_rep),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_pass1_topk(mesh: Mesh, codes, lut, inv_rows, inv_vals, q_dims,
+                       q_vals, *, k: int, axis: str = "data"):
+    """Convenience wrapper: shards the inputs, runs the search.
+
+    NOTE inv_rows/inv_vals must be *per-shard stacked*: shape
+    (num_shards * d_active_shard, L) where each shard's slice holds row ids
+    local to that shard.  ``row_offset`` is derived from equal row sharding.
+    """
+    num_shards = mesh.shape[axis]
+    n = codes.shape[0]
+    assert n % num_shards == 0
+    row_offset = jnp.arange(num_shards, dtype=jnp.int32) * (n // num_shards)
+    fn = make_sharded_search_fn(mesh, k=k, axis=axis)
+    return fn(codes, lut, inv_rows, inv_vals, q_dims, q_vals, row_offset)

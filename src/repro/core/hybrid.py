@@ -1,0 +1,220 @@
+"""HybridIndex — the paper's full indexing + search pipeline (paper §6).
+
+Build:
+  1. cache-sort datapoints (Algorithm 1) — all row-parallel structures below
+     store rows in sorted order; search maps ids back at the end.
+  2. sparse data index: eta-prune (top ``keep_top`` per dim), split into the
+     tile-sorted head block (most-active dims) + padded inverted index (tail).
+  3. sparse residual index: remaining entries as padded rows (eps = 0 default).
+  4. dense data index: PQ, K_U = d^D/2 subspaces, l = 16 (LUT16 kernel path).
+  5. dense residual index: int8 scalar quantization (K_V = d^D, l = 256).
+
+Search (batch of hybrid queries):
+  pass 1: approx = head-block + inverted-index sparse score + LUT16 dense ADC,
+          overfetch alpha*h;
+  pass 2: + dense residual, keep beta*h;
+  pass 3: + sparse residual, return top h.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from . import residual as res
+from .cache_sort import cache_sort, dimension_activity
+from .pq import (PQCodebooks, ScalarQuant, adc_lut, adc_scores_ref, pq_decode,
+                 pq_encode, scalar_quantize, train_codebooks)
+from .pruning import prune_split
+from .sparse_index import (CompactColumns, PaddedInvertedIndex,
+                           PaddedSparseRows, TileSparseHead,
+                           build_compact_columns, build_padded_inverted_index,
+                           build_padded_rows, build_tile_sparse_head,
+                           queries_head_dense, score_head_ref, score_inverted,
+                           sparse_queries_to_padded)
+
+__all__ = ["HybridIndexParams", "HybridIndex", "SearchResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridIndexParams:
+    # sparse side
+    keep_top: int = 256          # eta: entries kept per dim in the data index
+    head_dims: int = 128         # most-active dims served by the tile block
+    block_rows: int = 128        # tile height (the TPU "cache line", B)
+    block_cols: int = 128
+    nq_max: int = 256            # padded query nnz
+    use_head_block: bool = True
+    # dense side
+    pq_subspaces: int | None = None   # default d^D // 2  (paper §6.1.1)
+    pq_codes: int = 16
+    kmeans_iters: int = 12
+    seed: int = 0
+    # search
+    alpha: int = 20              # overfetch multiplier (pass 1)
+    beta: int = 5                # keep multiplier (pass 2)
+    use_lut16_kernel: bool = False  # route dense ADC through the Pallas kernel
+
+
+@dataclasses.dataclass
+class SearchResult:
+    ids: np.ndarray        # (Q, h) original datapoint ids
+    scores: np.ndarray     # (Q, h) refined inner products
+    # diagnostics
+    pass1_ids: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class HybridIndex:
+    params: HybridIndexParams
+    num_points: int
+    pi: np.ndarray                     # sorted position -> original id
+    cols: CompactColumns
+    inv_index: PaddedInvertedIndex     # tail dims of the pruned data index
+    head: TileSparseHead | None        # head dims of the pruned data index
+    head_dim_ids: np.ndarray           # compact ids in the head block (pad -1)
+    sparse_residual: PaddedSparseRows
+    codebooks: PQCodebooks
+    codes: jax.Array                   # (N, K) uint8
+    dense_residual: ScalarQuant
+    d_dense: int
+
+    # -- build -------------------------------------------------------------
+    @classmethod
+    def build(cls, x_sparse: sp.spmatrix, x_dense: np.ndarray,
+              params: HybridIndexParams = HybridIndexParams()) -> "HybridIndex":
+        x_sparse = x_sparse.tocsr()
+        n = x_sparse.shape[0]
+        x_dense = np.asarray(x_dense, np.float32)
+        assert x_dense.shape[0] == n
+
+        # 1. cache sort; permute every row-parallel structure once.
+        pi = cache_sort(x_sparse)
+        xs = x_sparse[pi]
+        xd = x_dense[pi]
+
+        # 2-3. prune + compact columns over the FULL sparse matrix so data
+        # index and residual share one column space.
+        split = prune_split(xs, keep_top=params.keep_top)
+        cols, _ = build_compact_columns(xs)
+        idx_compact = _remap(split.index, cols)
+        res_compact = _remap(split.residual, cols)
+
+        head = None
+        head_dim_ids = np.empty(0, np.int32)
+        tail_index = idx_compact
+        if params.use_head_block and cols.num_active > 0:
+            activity = dimension_activity(idx_compact)
+            n_head = min(params.head_dims, cols.num_active)
+            head_compact = np.sort(np.argsort(-activity)[:n_head]).astype(np.int32)
+            head = build_tile_sparse_head(
+                idx_compact, head_compact,
+                block_rows=params.block_rows, block_cols=params.block_cols)
+            head_dim_ids = np.asarray(head.head_dims)
+            # zero head dims out of the tail inverted index
+            tail_index = idx_compact.tolil()
+            tail_index[:, head_compact] = 0
+            tail_index = tail_index.tocsr()
+            tail_index.eliminate_zeros()
+        inv_index = build_padded_inverted_index(tail_index)
+        sparse_residual = build_padded_rows(res_compact)
+
+        # 4. dense PQ data index
+        d_dense = xd.shape[1]
+        k_u = params.pq_subspaces or max(d_dense // 2, 1)
+        cb = train_codebooks(jnp.asarray(xd), k_u, params.pq_codes,
+                             iters=params.kmeans_iters, seed=params.seed)
+        codes = pq_encode(jnp.asarray(xd), cb)
+
+        # 5. dense residual index (int8)
+        recon = np.asarray(pq_decode(codes, cb))
+        dres = scalar_quantize(jnp.asarray(xd - recon))
+
+        return cls(params=params, num_points=n, pi=pi, cols=cols,
+                   inv_index=inv_index, head=head, head_dim_ids=head_dim_ids,
+                   sparse_residual=sparse_residual, codebooks=cb, codes=codes,
+                   dense_residual=dres, d_dense=d_dense)
+
+    # -- search ------------------------------------------------------------
+    def search(self, q_sparse: sp.spmatrix, q_dense: np.ndarray, h: int = 20,
+               alpha: int | None = None, beta: int | None = None,
+               return_pass1: bool = False) -> SearchResult:
+        p = self.params
+        alpha = alpha or p.alpha
+        beta = beta or p.beta
+        c1 = min(max(alpha * h, h), self.num_points)
+        c2 = min(max(beta * h, h), c1)
+
+        q_dense = jnp.asarray(np.asarray(q_dense, np.float32))
+        q_dims_np, q_vals_np = sparse_queries_to_padded(
+            q_sparse, self.cols, nq_max=p.nq_max)
+        q_dims = jnp.asarray(q_dims_np)
+        q_vals = jnp.asarray(q_vals_np)
+
+        # ---- pass 1: approximate hybrid scores on the full shard ----
+        sparse_scores = score_inverted(self.inv_index, q_dims, q_vals)
+        if self.head is not None:
+            q_head = jnp.asarray(queries_head_dense(
+                q_dims_np, q_vals_np, self.head_dim_ids,
+                self.head.block.shape[1]))
+            head_scores = self._score_head(q_head)
+            sparse_scores = sparse_scores + head_scores[:, : self.num_points]
+
+        lut = adc_lut(q_dense, self.codebooks)
+        dense_scores = self._adc(lut)
+        approx = sparse_scores + dense_scores
+        s1, ids1 = res.topk_candidates(approx, c1)
+
+        # ---- pass 2: + dense residual, keep beta*h ----
+        extra_d = res.dense_residual_scores(self.dense_residual, ids1, q_dense)
+        s2, ids2 = res.reorder_pass(s1, ids1, extra_d, c2)
+
+        # ---- pass 3: + sparse residual, return h ----
+        q_cols = _scatter_queries(q_dims, q_vals, self.cols.num_active)
+        extra_s = res.sparse_residual_scores(self.sparse_residual, ids2, q_cols)
+        s3, ids3 = res.reorder_pass(s2, ids2, extra_s, h)
+
+        orig = self.pi[np.asarray(ids3)]
+        return SearchResult(
+            ids=orig, scores=np.asarray(s3),
+            pass1_ids=self.pi[np.asarray(ids1)] if return_pass1 else None)
+
+    # -- internals ----------------------------------------------------------
+    def _adc(self, lut: jax.Array) -> jax.Array:
+        if self.params.use_lut16_kernel:
+            from repro.kernels.ops import lut16_adc
+            return lut16_adc(self.codes, lut)
+        return adc_scores_ref(self.codes, lut)
+
+    def _score_head(self, q_head: jax.Array) -> jax.Array:
+        if self.params.use_lut16_kernel:   # kernel build => use tile kernel too
+            from repro.kernels.ops import block_sparse_matmul
+            return block_sparse_matmul(q_head, self.head)
+        return score_head_ref(self.head, q_head)
+
+    def exact_scores(self, q_sparse: sp.spmatrix, q_dense: np.ndarray,
+                     x_sparse: sp.spmatrix, x_dense: np.ndarray) -> np.ndarray:
+        """Brute-force q·x for validation (original row order)."""
+        return (np.asarray((q_sparse @ x_sparse.T).todense())
+                + np.asarray(q_dense, np.float32) @ np.asarray(x_dense, np.float32).T)
+
+
+def _remap(x: sp.spmatrix, cols: CompactColumns) -> sp.csr_matrix:
+    xc = x.tocsc()[:, cols.global_ids].tocsr()
+    return xc
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _scatter_queries(q_dims: jax.Array, q_vals: jax.Array, d_active: int):
+    """(Q, nq) padded sparse queries -> (Q, d_active + 1) dense with pad slot."""
+    qn = q_dims.shape[0]
+    out = jnp.zeros((qn, d_active + 1), jnp.float32)
+    qidx = jnp.arange(qn)[:, None]
+    out = out.at[jnp.broadcast_to(qidx, q_dims.shape), q_dims].add(
+        q_vals, mode="drop")
+    return out.at[:, d_active].set(0.0)

@@ -1,0 +1,264 @@
+"""TPU-native sparse inner-product scoring (paper §2.2, §3.1–3.3; DESIGN.md §2).
+
+Two cooperating structures, both built on the cache-sort permutation:
+
+* ``TileSparseHead`` — the most-active ``d_head`` dimensions form an (N, d_head)
+  block matrix.  After cache sorting, nonzeros cluster into contiguous row
+  runs, so most (row-block × dim-block) VMEM tiles are entirely zero; the
+  Pallas kernel (kernels/block_sparse.py) skips them.  This is the TPU
+  re-derivation of the paper's cache-line argument: B datapoints per cache
+  line → ``block_rows`` datapoints per VMEM tile.
+
+* ``PaddedInvertedIndex`` — the power-law tail.  After eta-pruning each
+  dimension holds at most ``L_max`` entries (paper §6.1.2 keeps "top 100s"),
+  so the inverted lists pack into rectangular (d_active, L_max) row-id /
+  value arrays: query scoring is a fixed-shape gather + scatter-add, the
+  jit-able analogue of inverted-list accumulation.
+
+Column ids are remapped to a compact per-shard space (only dimensions active
+in the shard), which is what makes d^S = 1e9 feasible: a shard only ever
+materializes its own active columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+__all__ = [
+    "CompactColumns", "PaddedInvertedIndex", "TileSparseHead",
+    "build_compact_columns", "build_padded_inverted_index",
+    "build_tile_sparse_head", "score_inverted", "score_head_ref",
+    "sparse_queries_to_padded", "PaddedSparseRows", "build_padded_rows",
+    "score_rows",
+]
+
+
+# ---------------------------------------------------------------------------
+# Compact column space
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompactColumns:
+    """Mapping between global dimension ids and the shard's compact space."""
+    global_ids: np.ndarray          # (d_active,) sorted global dim ids
+
+    @property
+    def num_active(self) -> int:
+        return len(self.global_ids)
+
+    def to_compact(self, global_dims: np.ndarray) -> np.ndarray:
+        """Global dim ids -> compact ids; unknown dims -> num_active (sentinel)."""
+        pos = np.searchsorted(self.global_ids, global_dims)
+        pos = np.clip(pos, 0, len(self.global_ids) - 1)
+        hit = self.global_ids[pos] == global_dims
+        return np.where(hit, pos, self.num_active).astype(np.int32)
+
+
+def build_compact_columns(x_sparse: sp.spmatrix) -> tuple[CompactColumns, sp.csr_matrix]:
+    xc = x_sparse.tocsc()
+    active = np.flatnonzero(np.diff(xc.indptr))
+    cols = CompactColumns(global_ids=active)
+    remapped = xc[:, active].tocsr()
+    return cols, remapped
+
+
+# ---------------------------------------------------------------------------
+# Padded inverted index (tail path)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedInvertedIndex:
+    rows: jax.Array      # (d_active, L_max) int32, pad = num_points (dropped)
+    vals: jax.Array      # (d_active, L_max) float32, pad = 0
+    num_points: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_padded_inverted_index(x_compact: sp.csr_matrix,
+                                l_max: int | None = None) -> PaddedInvertedIndex:
+    """x_compact: CSR with compact columns (from build_compact_columns),
+    already pruned so each column has <= a few hundred entries."""
+    xc = x_compact.tocsc()
+    n, d = xc.shape
+    lens = np.diff(xc.indptr)
+    if l_max is None:
+        l_max = max(int(lens.max(initial=1)), 1)
+    rows = np.full((d, l_max), n, dtype=np.int32)
+    vals = np.zeros((d, l_max), dtype=np.float32)
+    for j in range(d):
+        lo, hi = xc.indptr[j], xc.indptr[j + 1]
+        m = min(hi - lo, l_max)
+        if m < hi - lo:
+            # keep the largest-magnitude entries if over capacity
+            order = np.argsort(-np.abs(xc.data[lo:hi]))[:m]
+            rows[j, :m] = xc.indices[lo:hi][order]
+            vals[j, :m] = xc.data[lo:hi][order]
+        else:
+            rows[j, :m] = xc.indices[lo:hi]
+            vals[j, :m] = xc.data[lo:hi]
+    return PaddedInvertedIndex(rows=jnp.asarray(rows), vals=jnp.asarray(vals),
+                               num_points=n)
+
+
+def sparse_queries_to_padded(q_sparse: sp.spmatrix, cols: CompactColumns,
+                             nq_max: int = 512) -> tuple[np.ndarray, np.ndarray]:
+    """(Q, nq_max) compact dim ids (pad = d_active) + values (pad = 0)."""
+    qr = q_sparse.tocsr()
+    q = qr.shape[0]
+    dims = np.full((q, nq_max), cols.num_active, dtype=np.int32)
+    vals = np.zeros((q, nq_max), dtype=np.float32)
+    for i in range(q):
+        lo, hi = qr.indptr[i], qr.indptr[i + 1]
+        compact = cols.to_compact(qr.indices[lo:hi])
+        keep = compact < cols.num_active
+        c, v = compact[keep], qr.data[lo:hi][keep]
+        if len(c) > nq_max:                      # keep largest |q_j| on overflow
+            order = np.argsort(-np.abs(v))[:nq_max]
+            c, v = c[order], v[order]
+        dims[i, : len(c)] = c
+        vals[i, : len(c)] = v
+    return dims, vals
+
+
+@jax.jit
+def score_inverted(index: PaddedInvertedIndex, q_dims: jax.Array,
+                   q_vals: jax.Array) -> jax.Array:
+    """Inverted-index accumulation (paper §2.2) as gather + scatter-add.
+
+    q_dims/q_vals: (Q, nq) compact ids / values.  Returns (Q, N) scores.
+    """
+    qn, nq = q_dims.shape
+    n = index.num_points
+    rows_g = jnp.take(index.rows, q_dims, axis=0, mode="fill",
+                      fill_value=n)                               # (Q, nq, L)
+    vals_g = jnp.take(index.vals, q_dims, axis=0, mode="fill",
+                      fill_value=0.0)                             # (Q, nq, L)
+    contrib = vals_g * q_vals[:, :, None]
+    acc = jnp.zeros((qn, n), jnp.float32)
+    qidx = jnp.arange(qn)[:, None, None]
+    acc = acc.at[
+        jnp.broadcast_to(qidx, rows_g.shape), rows_g
+    ].add(contrib, mode="drop")
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Tile-sorted head block (cache-sorting payoff path)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TileSparseHead:
+    """Dense (N, d_head) block of the most-active dims + tile occupancy."""
+    block: jax.Array        # (N_pad, d_head) float32 (or bf16), cache-sorted rows
+    occupancy: jax.Array    # (N_pad/block_rows, d_head/block_cols) bool
+    head_dims: jax.Array    # (d_head,) compact column ids covered by the block
+    block_rows: int = dataclasses.field(metadata=dict(static=True))
+    block_cols: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_tile_sparse_head(x_compact: sp.csr_matrix, head_dims: np.ndarray,
+                           block_rows: int = 128, block_cols: int = 128,
+                           dtype=jnp.float32) -> TileSparseHead:
+    """head_dims: compact column ids (most active).  Rows are assumed already
+    permuted by cache_sort (apply pi before calling)."""
+    n = x_compact.shape[0]
+    d_head = len(head_dims)
+    d_head_pad = -(-d_head // block_cols) * block_cols
+    n_pad = -(-n // block_rows) * block_rows
+    sub = x_compact[:, head_dims].toarray().astype(np.float32)
+    block = np.zeros((n_pad, d_head_pad), np.float32)
+    block[:n, :d_head] = sub
+    occ = (
+        block.reshape(n_pad // block_rows, block_rows,
+                      d_head_pad // block_cols, block_cols)
+        .any(axis=(1, 3))
+    )
+    dims = np.full(d_head_pad, -1, np.int32)
+    dims[:d_head] = head_dims
+    return TileSparseHead(block=jnp.asarray(block, dtype),
+                          occupancy=jnp.asarray(occ),
+                          head_dims=jnp.asarray(dims),
+                          block_rows=block_rows, block_cols=block_cols)
+
+
+@jax.jit
+def score_head_ref(head: TileSparseHead, q_head: jax.Array) -> jax.Array:
+    """Oracle head scoring: (Q, d_head_pad) @ block^T -> (Q, N_pad).
+
+    The Pallas kernel (kernels/block_sparse.py) must match this while skipping
+    occupancy-0 tiles."""
+    return q_head.astype(jnp.float32) @ head.block.astype(jnp.float32).T
+
+
+def queries_head_dense(q_dims: np.ndarray, q_vals: np.ndarray,
+                       head_dims: np.ndarray, d_head_pad: int) -> np.ndarray:
+    """Scatter padded sparse queries into the dense head subspace.
+
+    q_dims/q_vals: (Q, nq) compact ids/values; head_dims: (d_head_pad,) compact
+    ids (pad = -1).  Returns (Q, d_head_pad) float32."""
+    lookup = {int(c): i for i, c in enumerate(head_dims) if c >= 0}
+    qn, nq = q_dims.shape
+    out = np.zeros((qn, d_head_pad), np.float32)
+    for i in range(qn):
+        for s in range(nq):
+            c = int(q_dims[i, s])
+            pos = lookup.get(c)
+            if pos is not None:
+                out[i, pos] += q_vals[i, s]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Padded row storage — residual reordering needs per-candidate sparse rows
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedSparseRows:
+    cols: jax.Array    # (N, R_max) int32 compact col ids, pad = d_active
+    vals: jax.Array    # (N, R_max) float32, pad = 0
+
+
+def build_padded_rows(x_compact: sp.csr_matrix,
+                      r_max: int | None = None) -> PaddedSparseRows:
+    xr = x_compact.tocsr()
+    n, d = xr.shape
+    lens = np.diff(xr.indptr)
+    if r_max is None:
+        r_max = max(int(lens.max(initial=1)), 1)
+    cols = np.full((n, r_max), d, dtype=np.int32)
+    vals = np.zeros((n, r_max), dtype=np.float32)
+    for i in range(n):
+        lo, hi = xr.indptr[i], xr.indptr[i + 1]
+        m = min(hi - lo, r_max)
+        if m < hi - lo:
+            order = np.argsort(-np.abs(xr.data[lo:hi]))[:m]
+            cols[i, :m] = xr.indices[lo:hi][order]
+            vals[i, :m] = xr.data[lo:hi][order]
+        else:
+            cols[i, :m] = xr.indices[lo:hi]
+            vals[i, :m] = xr.data[lo:hi]
+    return PaddedSparseRows(cols=jnp.asarray(cols), vals=jnp.asarray(vals))
+
+
+@jax.jit
+def score_rows(rows: PaddedSparseRows, candidates: jax.Array,
+               q_dense_cols: jax.Array) -> jax.Array:
+    """Exact sparse dot for selected rows (residual reorder pass 3).
+
+    candidates: (Q, C) row ids; q_dense_cols: (Q, d_active + 1) query scattered
+    into the compact column space with one trailing zero pad slot.
+    Returns (Q, C) partial inner products."""
+    cand_cols = jnp.take(rows.cols, candidates, axis=0, mode="clip")  # (Q,C,R)
+    cand_vals = jnp.take(rows.vals, candidates, axis=0, mode="clip")
+    qv = jnp.take_along_axis(
+        q_dense_cols[:, None, :], cand_cols.astype(jnp.int32), axis=2
+    )                                                                 # (Q,C,R)
+    return jnp.sum(cand_vals * qv, axis=-1)

@@ -1,0 +1,1 @@
+from .hybrid_synth import make_hybrid_dataset, HybridDataset  # noqa: F401

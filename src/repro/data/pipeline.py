@@ -1,0 +1,76 @@
+"""Deterministic synthetic LM data pipeline.
+
+Batches are a pure function of (seed, step) via threefry hashing — no
+iterator state to checkpoint.  Restart/resume at step k reproduces batch k
+exactly (the fault-tolerance contract in train/trainer.py), stragglers can
+re-derive any shard without coordination, and elastic re-sharding is just a
+different slice of the same deterministic stream.
+
+Targets are a noisy "copy previous token + drift" sequence so a real LM can
+overfit it measurably (examples/train_lm.py uses loss decrease as its
+acceptance test).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DataConfig", "synthetic_batch", "input_specs_for_shape"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+
+
+def synthetic_batch(cfg: DataConfig, step) -> dict:
+    """Batch at `step`: {"tokens": (B, S) int32, "labels": (B, S) int32}.
+
+    A Markov-ish stream: token_{t+1} = (token_t * 31 + drift_t) % V with
+    occasional resets, labels = next token (standard causal LM shift)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (b, 1), 0, v)
+    drift = jax.random.randint(k2, (b, 1), 1, 7)
+    pos = jnp.arange(s + 1)[None, :]
+    seq = (start + drift * pos * 31) % v
+    noise_mask = jax.random.bernoulli(k3, 0.05, (b, s + 1))
+    noise = jax.random.randint(key, (b, s + 1), 0, v)
+    seq = jnp.where(noise_mask, noise, seq).astype(jnp.int32)
+    return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def input_specs_for_shape(cfg_model, shape, *, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a given
+    (arch, shape) cell — the dry-run contract (no allocation).
+
+    train/prefill: full (B, S) token batch (or embeddings for stub
+    frontends) + labels for train; decode: one token (B,) + the cell's
+    decode state is built separately in launch/dryrun.py."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg_model.frontend == "tokens":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg_model.d_model),
+                                                   dtype)
+        if cfg_model.num_cond_tokens:
+            specs["cond"] = jax.ShapeDtypeStruct(
+                (b, cfg_model.num_cond_tokens, cfg_model.d_model), dtype)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:  # decode: one new token against a seq_len-deep cache/state
+        if cfg_model.frontend == "tokens":
+            specs["token"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        else:
+            specs["token"] = jax.ShapeDtypeStruct((b, 1, cfg_model.d_model),
+                                                  dtype)
+    return specs

@@ -1,0 +1,124 @@
+"""Cache-sorted block-sparse scoring as a Pallas TPU kernel (paper §3.1-3.3,
+TPU-adapted — see DESIGN.md §2).
+
+The paper's cache-sorted inverted index minimizes 64-byte accumulator
+cache-lines touched.  The TPU analogue: store the (N × d_head) head-dim
+matrix as **BCSR over (block_rows × block_cols) VMEM tiles**, keeping *only
+nonzero tiles* in HBM.  Cache sorting (Algorithm 1) is exactly the
+permutation that minimizes the number of stored/streamed tiles, so the
+paper's E[C_sort] cost model (Eq. 5 with B = tile rows) directly predicts
+this kernel's DMA traffic.
+
+Scalar-prefetch drives the gather: the grid walks (query-block, row-block,
+step) and the per-row-block tile list is resolved through prefetched
+``tile_ptr``/``tile_col`` arrays inside the BlockSpec index_maps — i.e. the
+kernel *never touches* zero tiles, matching the paper's skipped cache-lines.
+
+Contract (matches kernels/ref.py::block_sparse_ref):
+  q       (Q, D) float32          dense query head-subvectors
+  tiles   (T, Br, Bc) float32     nonzero tiles, row-block-major
+  tile_ptr(NB + 1,) int32         CSR offsets over row-blocks
+  tile_col(T,) int32              column-block index of each tile
+  out     (Q, N) float32          q @ X_head^T  (X reassembled from tiles)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["block_sparse_matmul_pallas", "dense_to_bcsr"]
+
+
+def dense_to_bcsr(x: np.ndarray, br: int, bc: int):
+    """(N, D) -> (tiles (T,br,bc), tile_ptr (N/br+1,), tile_col (T,)).
+
+    T == number of nonzero tiles == the object cache sorting minimizes."""
+    n, d = x.shape
+    assert n % br == 0 and d % bc == 0, (x.shape, br, bc)
+    nb, db = n // br, d // bc
+    view = x.reshape(nb, br, db, bc).transpose(0, 2, 1, 3)     # (nb, db, br, bc)
+    nz = np.abs(view).max(axis=(2, 3)) > 0                     # (nb, db)
+    tiles, cols, ptr = [], [], [0]
+    for i in range(nb):
+        for j in np.flatnonzero(nz[i]):
+            tiles.append(view[i, j])
+            cols.append(j)
+        ptr.append(len(tiles))
+    if not tiles:                                              # fully zero
+        tiles = [np.zeros((br, bc), x.dtype)]
+        cols = [0]
+        ptr = [0] * (nb + 1)
+    return (np.stack(tiles).astype(np.float32),
+            np.asarray(ptr, np.int32), np.asarray(cols, np.int32))
+
+
+def _kernel(ptr_ref, col_ref, q_ref, tiles_ref, out_ref):
+    nb_idx = pl.program_id(1)
+    step = pl.program_id(2)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    t = ptr_ref[nb_idx] + step
+    valid = t < ptr_ref[nb_idx + 1]
+
+    @pl.when(valid)
+    def _acc():
+        tile = tiles_ref[0]                                   # (Br, Bc)
+        qv = q_ref[...]                                       # (bq, Bc)
+        out_ref[...] += jax.lax.dot_general(
+            qv, tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "max_steps", "interpret"))
+def block_sparse_matmul_pallas(q: jax.Array, tiles: jax.Array,
+                               tile_ptr: jax.Array, tile_col: jax.Array,
+                               *, bq: int = 8, max_steps: int = 1,
+                               interpret: bool = True) -> jax.Array:
+    """q (Q, D) × BCSR head matrix -> (Q, N).  Q % bq == 0 (ops.py pads).
+
+    ``max_steps`` bounds the per-row-block tile count (grid dim 2); pass the
+    true max (host-computed from tile_ptr) for a tight grid — extra steps are
+    masked out, zero tiles are never fetched either way."""
+    qn, d = q.shape
+    t_total, br, bc = tiles.shape
+    nb = tile_ptr.shape[0] - 1
+    n = nb * br
+    assert d % bc == 0 and qn % bq == 0
+    max_steps = max(int(max_steps), 1)
+
+    grid = (qn // bq, nb, max_steps)
+
+    def q_map(iq, jn, s, ptr, col):
+        t = jnp.minimum(ptr[jn] + s, t_total - 1)
+        return (iq, col[t])
+
+    def tiles_map(iq, jn, s, ptr, col):
+        t = jnp.minimum(ptr[jn] + s, t_total - 1)
+        return (t, 0, 0)
+
+    def out_map(iq, jn, s, ptr, col):
+        return (iq, jn)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bq, bc), q_map),
+                pl.BlockSpec((1, br, bc), tiles_map),
+            ],
+            out_specs=pl.BlockSpec((bq, br), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((qn, n), jnp.float32),
+        interpret=interpret,
+    )(tile_ptr, tile_col, q, tiles)

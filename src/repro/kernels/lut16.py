@@ -1,0 +1,111 @@
+"""LUT16 ADC scan as a Pallas TPU kernel (paper §4.1.2, TPU-adapted).
+
+x86 lineage: AVX2 PSHUFB performs 32 parallel 16-way lookups of 8-bit LUT
+values per instruction; accumulation needs the unsigned width-extension trick.
+
+TPU re-derivation (DESIGN.md §2): the MXU *is* a register-bandwidth shuffle
+engine — contracting a 0/1 one-hot matrix against the LUT performs 128-wide
+16-way lookup-accumulate per cycle, with fp32 accumulation for free (so the
+paper's bias/overflow fix-up is unnecessary).  Codes are kept uint8 in HBM
+(the stream that bounds single-query throughput, §4.1.2) and expanded to
+one-hot only inside VMEM.
+
+Contract (matches kernels/ref.py::lut16_adc_ref):
+  codes (N, K) uint8 in [0, l)   PQ codes, row-major over datapoints
+  lut   (Q, K, l) float32        per-query per-subspace inner products
+  out   (Q, N) float32           out[q, n] = sum_k lut[q, k, codes[n, k]]
+
+Grid: (Q/bq, N/bn, K/bk); K innermost for output-block accumulation.
+VMEM per step: bn*bk codes + bq*bk*l LUT + bq*bn out — defaults keep this
+well under 16 MiB v5e VMEM (128,512,256,l=16: 128 KiB + 2 MiB + 256 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lut16_adc_pallas"]
+
+
+def _kernel(codes_ref, lut_ref, out_ref, *, compute_dtype,
+            packed: bool = False):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]                                  # (bn, bk) uint8
+    bq, _, l = lut_ref.shape
+    if packed:
+        # two 4-bit codes per byte (paper §6.1.1's actual storage): unpack
+        # with VPU shifts/masks in VMEM — HBM streams half the bytes.
+        bn_c, bk_c = codes.shape
+        lo = codes & 0x0F
+        hi = codes >> 4
+        codes = jnp.stack([lo, hi], axis=2).reshape(bn_c, bk_c * 2)
+    # one-hot expansion in VMEM: (bn, K, l) — the "shuffle control" operand
+    onehot = (codes[:, :, None] ==
+              jax.lax.broadcasted_iota(jnp.uint8, (1, 1, l), 2))
+    onehot = onehot.reshape(codes.shape[0], -1).astype(compute_dtype)
+    lut = lut_ref[...].reshape(bq, -1).astype(compute_dtype)
+    # MXU contraction: (bq, K*l) x (bn, K*l)^T -> (bq, bn)
+    part = jax.lax.dot_general(
+        lut, onehot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] += part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bn", "bk", "interpret",
+                                    "compute_dtype", "packed"))
+def lut16_adc_pallas(codes: jax.Array, lut: jax.Array, *, bq: int = 8,
+                     bn: int = 512, bk: int = 32, interpret: bool = True,
+                     compute_dtype=jnp.float32,
+                     packed: bool = False) -> jax.Array:
+    """Pallas LUT16 ADC.  Shapes must be divisible by the block sizes
+    (ops.py pads).  codes: (N, K) uint8; lut: (Q, K, l) f32 -> (Q, N) f32.
+
+    compute_dtype=bfloat16 selects the fast MXU path on real TPUs (the LUT is
+    bf16-rounded, matching the paper's 8-bit quantized LUT accuracy budget);
+    float32 keeps the oracle comparison bit-tight for CI.
+
+    packed=True: codes hold TWO 4-bit subspace codes per byte (shape
+    (N, K/2); the paper's storage format) — HBM streams half the bytes and
+    the kernel unpacks in VMEM.  Requires l == 16 and K even."""
+    n, k = codes.shape
+    q, k2, l = lut.shape
+    if packed:
+        assert l == 16 and k2 == 2 * k, (codes.shape, lut.shape)
+    else:
+        assert k == k2, (codes.shape, lut.shape)
+    assert n % bn == 0 and q % bq == 0 and k % bk == 0, (n, q, k, bq, bn, bk)
+
+    lut_bk = 2 * bk if packed else bk
+    grid = (q // bq, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, compute_dtype=compute_dtype,
+                          packed=packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda iq, jn, kk: (jn, kk)),
+            pl.BlockSpec((bq, lut_bk, l), lambda iq, jn, kk: (iq, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda iq, jn, kk: (iq, jn)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)
+
+
+def pack_codes(codes):
+    """(N, K) uint8 codes in [0,16) -> (N, K/2) packed two-per-byte."""
+    import numpy as np
+    codes = np.asarray(codes)
+    assert codes.shape[1] % 2 == 0
+    lo = codes[:, 0::2]
+    hi = codes[:, 1::2]
+    return (lo | (hi << 4)).astype(np.uint8)

@@ -1,0 +1,78 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, host-side BCSR conversion, and the
+interpret-mode switch (interpret=True everywhere except a real TPU backend).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .block_sparse import block_sparse_matmul_pallas, dense_to_bcsr
+from .lut16 import lut16_adc_pallas
+from .ref import lut16_adc_ref
+
+__all__ = ["lut16_adc", "block_sparse_matmul", "bcsr_from_head"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), size
+
+
+def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
+              bk: int = 32, compute_dtype=jnp.float32) -> jax.Array:
+    """LUT16 ADC: codes (N, K) uint8, lut (Q, K, l) or (K, l) -> (Q, N).
+
+    Pads N/Q/K to block multiples and routes through the Pallas kernel."""
+    single = lut.ndim == 2
+    if single:
+        lut = lut[None]
+    q, k, l = lut.shape
+    n = codes.shape[0]
+    bq = min(bq, max(1, q))
+    bk = min(bk, k)
+    bn = min(bn, max(128, 1))
+    codes_p, n0 = _pad_to(jnp.asarray(codes), 0, bn)
+    # pad K consistently on both operands: padded codes point at LUT slot 0 of
+    # padded subspaces whose LUT is zero, contributing nothing.
+    codes_p, _ = _pad_to(codes_p, 1, bk)
+    lut_p, _ = _pad_to(jnp.asarray(lut, jnp.float32), 1, bk)
+    lut_p, q0 = _pad_to(lut_p, 0, bq)
+    out = lut16_adc_pallas(codes_p, lut_p, bq=bq, bn=bn, bk=bk,
+                           interpret=_interpret(), compute_dtype=compute_dtype)
+    out = out[:q0, :n0]
+    return out[0] if single else out
+
+
+def bcsr_from_head(head) -> tuple[jax.Array, jax.Array, jax.Array, int]:
+    """TileSparseHead -> (tiles, tile_ptr, tile_col, max_steps) host-side."""
+    block = np.asarray(head.block, np.float32)
+    tiles, ptr, col = dense_to_bcsr(block, head.block_rows, head.block_cols)
+    max_steps = int(np.max(ptr[1:] - ptr[:-1], initial=1))
+    return (jnp.asarray(tiles), jnp.asarray(ptr), jnp.asarray(col), max_steps)
+
+
+def block_sparse_matmul(q_head: jax.Array, head, *, bq: int = 8) -> jax.Array:
+    """Tile-skipping head scoring: q_head (Q, D_pad) × TileSparseHead -> (Q, N).
+
+    Matches sparse_index.score_head_ref on the stored block matrix."""
+    tiles, ptr, col, max_steps = bcsr_from_head(head)
+    qp, q0 = _pad_to(jnp.asarray(q_head, jnp.float32), 0, bq)
+    out = block_sparse_matmul_pallas(qp, tiles, ptr, col, bq=bq,
+                                     max_steps=max_steps,
+                                     interpret=_interpret())
+    return out[:q0]

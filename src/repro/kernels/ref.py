@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert the kernels (interpret=True on CPU)
+match these references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lut16_adc_ref", "block_sparse_ref", "bcsr_to_dense_ref"]
+
+
+@jax.jit
+def lut16_adc_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """out[q, n] = sum_k lut[q, k, codes[n, k]].
+
+    codes (N, K) integer; lut (Q, K, l) float32 -> (Q, N) float32."""
+    gathered = jnp.take_along_axis(
+        lut[:, None],                                  # (Q, 1, K, l)
+        codes[None, :, :, None].astype(jnp.int32),     # (1, N, K, 1)
+        axis=3,
+    )[..., 0]                                          # (Q, N, K)
+    return gathered.sum(axis=-1).astype(jnp.float32)
+
+
+def bcsr_to_dense_ref(tiles, tile_ptr, tile_col, d: int) -> jax.Array:
+    """Reassemble the dense (N, D) head matrix from BCSR tiles (host/test
+    helper; not jitted — tile_ptr drives python loops)."""
+    import numpy as np
+    tiles = np.asarray(tiles)
+    tile_ptr = np.asarray(tile_ptr)
+    tile_col = np.asarray(tile_col)
+    t, br, bc = tiles.shape
+    nb = len(tile_ptr) - 1
+    out = np.zeros((nb * br, d), tiles.dtype)
+    for i in range(nb):
+        for tt in range(tile_ptr[i], tile_ptr[i + 1]):
+            j = tile_col[tt]
+            out[i * br:(i + 1) * br, j * bc:(j + 1) * bc] = tiles[tt]
+    return jnp.asarray(out)
+
+
+@jax.jit
+def block_sparse_ref(q: jax.Array, x_head: jax.Array) -> jax.Array:
+    """out = q @ x_head^T : (Q, D) x (N, D) -> (Q, N) float32."""
+    return (q.astype(jnp.float32) @ x_head.astype(jnp.float32).T)

@@ -1,0 +1,54 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b-smoke \
+        --steps 100 --batch 8 --seq 128 --ckpt /tmp/ckpt_run
+
+Any registered config (full or -smoke) is accepted; full configs on real
+hardware would add --mesh to shard via the same param_pspecs rules the
+dry-run proves out.  On CPU this runs single-device.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = Model(cfg)
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 1),
+                    decay_steps=args.steps),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                   global_batch=args.batch, seed=args.seed),
+        TrainerConfig(num_steps=args.steps, microbatches=args.microbatches,
+                      ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt),
+    )
+    _, _, hist = trainer.run(jax.random.PRNGKey(args.seed))
+    losses = [h["loss"] for h in hist if not h.get("skipped")]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,286 @@
+"""Attention layers: GQA self-attention (full causal / local window), cross
+attention, and single-token decode against a KV cache.
+
+Projections are stored in *grouped* layout ``wq: (D, Hkv, G, hd)`` with
+``G = Hq / Hkv`` so tensor parallelism lands on whichever of (kv-heads,
+group) divides the model axis: kv-heads for MHA-ish configs (stablelm 32,
+qwen2-moe 16), the group dim for wide-GQA configs (qwen3-moe kv=4 × G=16).
+A plain ``(D, Hq, hd)`` layout cannot be GSPMD-sharded for either case
+without a reshard at the GQA reshape (measured: compile failure at 16-way).
+Configs where neither factor divides (e.g. deepseek kv=8 × G=8 on a 16-way
+axis) fall back to replicated attention activations — recorded per-arch in
+EXPERIMENTS.md, with KV-head replication (vLLM-style) as the hillclimb fix.
+
+Large-S causal attention uses a *banded flash* schedule: the (S×S) score
+matrix is processed one chunk-diagonal band at a time with an online
+softmax.  Unlike a masked full matmul this does exact causal work, so HLO
+FLOPs stay honest for the roofline, and peak memory is O(S·C) per band.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, logical_constraint, rope
+
+NEG_INF = -1e30
+
+
+def _cache_constraint(cache):
+    """Decode KV caches live (batch, kv_seq-sharded, heads replicated) —
+    the one layout that works for every kv_heads count (GQA kv=1..32);
+    softmax stats over the sharded seq become two small all-reduces."""
+    return logical_constraint(cache, "batch", "kv_seq", None, None)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, cross: bool = False) -> dict:
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.effective_kv_heads
+    assert hq % hkv == 0, (
+        f"kv_repeat={cfg.kv_repeat} must keep kv heads dividing "
+        f"{cfg.num_heads} query heads")
+    g = hq // hkv
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hkv, g, hd)),
+        "wk": dense_init(ks[1], (d, hkv, hd)),
+        "wv": dense_init(ks[2], (d, hkv, hd)),
+        "wo": dense_init(ks[3], (hkv, g, hd, d),
+                         in_axis=2) / (2.0 * cfg.num_layers) ** 0.5,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hkv, g, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    return p
+
+
+def _project_q(x, p, cfg, dtype):
+    """-> (B, S, Hkv, G, hd), sharded on kv-heads or group (whichever fits)."""
+    q = jnp.einsum("bsd,dhgk->bshgk", x, p["wq"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+    return logical_constraint(q, "batch", "seq", "kv_heads", "heads", None)
+
+
+def _project_kv(x, p, cfg, dtype):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    k = logical_constraint(k, "batch", "seq", "kv_heads", None)
+    v = logical_constraint(v, "batch", "seq", "kv_heads", None)
+    return k, v
+
+
+def _out_proj(attn, p, dtype):
+    """attn: (B, S, Hkv, G, hd) -> (B, S, D)."""
+    out = jnp.einsum("bshgk,hgkd->bsd", attn, p["wo"].astype(dtype))
+    return logical_constraint(out, "batch", "seq", "embed")
+
+
+def _rope_grouped(q, positions, theta, fraction):
+    """rope over (B, S, Hkv, G, hd) — flatten head dims for the helper."""
+    b, s, hkv, g, hd = q.shape
+    out = rope(q.reshape(b, s, hkv * g, hd), positions, theta, fraction)
+    return out.reshape(b, s, hkv, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention over chunk-diagonal bands
+# ---------------------------------------------------------------------------
+
+def banded_causal_attention(q, k, v, *, chunk: int, window: int = 0,
+                            dtype=jnp.bfloat16):
+    """Exact-work causal (optionally windowed) attention.
+
+    q: (B,S,Hkv,G,hd); k,v: (B,S,Hkv,hd).  Returns (B,S,Hkv,G,hd).
+    """
+    b, s, hkv, g, hd = q.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    scale = hd ** -0.5
+
+    qc = q.reshape(b, nc, c, hkv, g, hd)
+    kc = k.reshape(b, nc, c, hkv, hd)
+    vc = v.reshape(b, nc, c, hkv, hd)
+
+    acc = jnp.zeros((b, nc, c, hkv, g, hd), jnp.float32)
+    m = jnp.full((b, nc, c, hkv, g), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, nc, c, hkv, g), jnp.float32)
+
+    max_band = nc if window <= 0 else min(nc, -(-window // c) + 1)
+
+    for band in range(max_band):
+        nq = nc - band
+        qs = qc[:, band:]                       # (B,nq,C,Hkv,G,hd)
+        ks = kc[:, :nq]
+        vs = vc[:, :nq]
+        sc = jnp.einsum("bnchgk,bnmhk->bnchgm", qs, ks).astype(jnp.float32)
+        sc = sc * scale                          # (B,nq,Cq,Hkv,G,Ck)
+        iq = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c, 1, 1, c), 2)
+        ik = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c, 1, 1, c), 5)
+        dist = iq + band * c - ik                # query_pos - key_pos >= 0
+        mask = dist >= 0
+        if window > 0:
+            mask &= dist < window
+        sc = jnp.where(mask, sc, NEG_INF)
+
+        m_band = jnp.maximum(m[:, band:], sc.max(axis=-1))
+        alpha = jnp.exp(m[:, band:] - m_band)
+        pr = jnp.exp(sc - m_band[..., None])
+        l_band = l[:, band:] * alpha + pr.sum(axis=-1)
+        acc_band = (acc[:, band:] * alpha[..., None]
+                    + jnp.einsum("bnchgm,bnmhk->bnchgk",
+                                 pr.astype(dtype), vs).astype(jnp.float32))
+        m = m.at[:, band:].set(m_band)
+        l = l.at[:, band:].set(l_band)
+        acc = acc.at[:, band:].set(acc_band)
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, hkv, g, hd).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, dtype=jnp.bfloat16):
+    """Plain masked attention (small S / cross-attention).
+
+    q: (B,S,Hkv,G,hd); k,v: (B,M,Hkv,hd) -> (B,S,Hkv,G,hd)."""
+    b, s, hkv, g, hd = q.shape
+    scale = hd ** -0.5
+    sc = jnp.einsum("bshgk,bmhk->bshgm", q, k).astype(jnp.float32) * scale
+    if causal:
+        iq = jax.lax.broadcasted_iota(jnp.int32, (1, s, 1, 1, k.shape[1]), 1)
+        ik = jax.lax.broadcasted_iota(jnp.int32, (1, s, 1, 1, k.shape[1]), 4)
+        sc = jnp.where(iq >= ik, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bshgm,bmhk->bshgk", pr.astype(dtype), v)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer-level entry points
+# ---------------------------------------------------------------------------
+
+def self_attention(x, p, cfg, *, positions=None, window: int = 0,
+                   chunk: int = 1024):
+    """Causal self-attention over the full sequence (train / prefill)."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = _project_q(x, p, cfg, dtype)
+    k, v = _project_kv(x, p, cfg, dtype)
+    q = _rope_grouped(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    if window > 0 and s > window:
+        c = chunk if s % chunk == 0 else _largest_divisor_chunk(s, chunk)
+        attn = banded_causal_attention(q, k, v, chunk=c, window=window,
+                                       dtype=dtype)
+    elif s > chunk and s % chunk == 0:
+        attn = banded_causal_attention(q, k, v, chunk=chunk, window=window,
+                                       dtype=dtype)
+    else:
+        attn = full_attention(q, k, v, causal=True, dtype=dtype)
+    return _out_proj(attn, p, dtype), (k, v)
+
+
+def _largest_divisor_chunk(s: int, chunk: int) -> int:
+    for c in range(min(chunk, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def cross_attention(x, cond_kv, p, cfg):
+    """x (B,S,D) attends over precomputed conditioning K/V (no mask)."""
+    dtype = x.dtype
+    q = _project_q(x, p, cfg, dtype)
+    k, v = cond_kv
+    attn = full_attention(q, k, v, causal=False, dtype=dtype)
+    return _out_proj(attn, p, dtype)
+
+
+def cond_kv(cond_embed, p, cfg):
+    """Precompute cross-attention K/V from conditioning embeddings."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return _project_kv(cond_embed.astype(dt), p, cfg, dt)
+
+
+def decode_local_attention(x, p, cfg, cache_k, cache_v, cache_pos, cur_index,
+                           *, window: int):
+    """Ring-buffer local-window decode (Griffin attention layers).
+
+    cache_{k,v}: (B, W, Hkv, hd) with W = min(window, max_len); cache_pos (W,)
+    holds the absolute position stored in each slot (-1 = empty).  RoPE is
+    applied at the absolute position before caching, so slots never need
+    re-rotation.  Memory stays O(window) regardless of generation length —
+    this is what makes long_500k feasible for the hybrid family."""
+    dtype = x.dtype
+    b = x.shape[0]
+    w = cache_k.shape[1]
+    pos = jnp.full((b, 1), cur_index, jnp.int32)
+    q = _project_q(x, p, cfg, dtype)
+    k_new, v_new = _project_kv(x, p, cfg, dtype)
+    q = _rope_grouped(q, pos, cfg.rope_theta, cfg.rope_fraction)
+    k_new = rope(k_new, pos, cfg.rope_theta, cfg.rope_fraction)
+    k_new = logical_constraint(k_new, "batch", None, None, None)
+    v_new = logical_constraint(v_new, "batch", None, None, None)
+    slot = jnp.mod(cur_index, w)
+    cache_k = _cache_constraint(jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0)))
+    cache_v = _cache_constraint(jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0)))
+    cache_pos = jax.lax.dynamic_update_slice(cache_pos,
+                                             cur_index[None].astype(jnp.int32),
+                                             (slot,))
+    hkv, g, hd = q.shape[2], q.shape[3], q.shape[4]
+    qg = q[:, 0]                                              # (B,Hkv,G,hd)
+    sc = jnp.einsum("bhgk,bmhk->bhgm", qg,
+                    cache_k.astype(dtype)).astype(jnp.float32) * hd ** -0.5
+    valid = (cache_pos >= 0) & (cache_pos > cur_index - window) \
+        & (cache_pos <= cur_index)
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgm,bmhk->bhgk", pr.astype(dtype),
+                     cache_v.astype(dtype))[:, None]
+    return _out_proj(out, p, dtype), cache_k, cache_v, cache_pos
+
+
+def decode_self_attention(x, p, cfg, cache_k, cache_v, cur_index, *,
+                          window: int = 0):
+    """One-token decode: x (B,1,D); cache (B,S_max,Hkv,hd); cur_index ()
+    is the position being written.  Returns (out, new_k, new_v)."""
+    dtype = x.dtype
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+    pos = jnp.full((b, 1), cur_index, jnp.int32)
+    q = _project_q(x, p, cfg, dtype)
+    k_new, v_new = _project_kv(x, p, cfg, dtype)
+    q = _rope_grouped(q, pos, cfg.rope_theta, cfg.rope_fraction)
+    k_new = rope(k_new, pos, cfg.rope_theta, cfg.rope_fraction)
+    k_new = logical_constraint(k_new, "batch", None, None, None)
+    v_new = logical_constraint(v_new, "batch", None, None, None)
+    cache_k = _cache_constraint(jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, cur_index, 0, 0)))
+    cache_v = _cache_constraint(jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, cur_index, 0, 0)))
+    hkv, g, hd = q.shape[2], q.shape[3], q.shape[4]
+    qg = q[:, 0]                                              # (B,Hkv,G,hd)
+    sc = jnp.einsum("bhgk,bmhk->bhgm", qg,
+                    cache_k.astype(dtype)).astype(jnp.float32) * hd ** -0.5
+    ik = jnp.arange(s_max)[None, None, None, :]
+    valid = ik <= cur_index
+    if window > 0:
+        valid &= ik > cur_index - window
+    sc = jnp.where(valid, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgm,bmhk->bhgk", pr.astype(dtype),
+                     cache_v.astype(dtype))[:, None]          # (B,1,Hkv,G,hd)
+    return _out_proj(out, p, dtype), cache_k, cache_v

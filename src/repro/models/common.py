@@ -1,0 +1,165 @@
+"""Shared model plumbing: logical-axis sharding, norms, RoPE, init helpers.
+
+Sharding follows the MaxText pattern: model code annotates tensors with
+*logical* axis names; a context-installed rule set maps them to mesh axes.
+With no rules installed (single-device CPU tests) every annotation is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+# logical axis -> mesh axis (or tuple). Installed by launch/mesh.py.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",          # demoted to None when heads % shards != 0
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "capacity": None,
+    "fsdp": "data",               # parameter sharding axis
+    "kv_seq": "model",            # decode-time KV cache sequence sharding
+    "state": "model",             # recurrent state width
+    "cond": None,
+    "moe_tokens": "model",        # MoE dispatch token axis (EP all-to-all)
+}
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh, rules: dict | None = None):
+    """Install (mesh, rules) so logical_constraint becomes effective."""
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def resolve_spec(mesh, rules, names, shape) -> P:
+    """Map logical axis names -> PartitionSpec, claiming each mesh axis at
+    most once and *only* when it divides the dimension (so fallbacks like
+    28 heads on a 16-way model axis degrade to replication, and a later
+    logical axis may claim the freed mesh axis)."""
+    axes = []
+    used: set[str] = set()
+    for nm, dim in zip(names, shape):
+        ax = rules.get(nm) if nm is not None else None
+        if ax is None:
+            axes.append(None)
+            continue
+        cand = []
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            if a in mesh.axis_names and a not in used:
+                cand.append(a)
+                size *= mesh.shape[a]
+        # greedy shrink until it divides
+        while cand and (dim % size != 0 or dim < size):
+            size //= mesh.shape[cand.pop()]
+        used.update(cand)
+        axes.append(tuple(cand) if len(cand) > 1 else
+                    (cand[0] if cand else None))
+    return P(*axes)
+
+
+def current_mesh():
+    """Mesh installed by sharding_rules (None outside a lowering context)."""
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_constraint(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint through the logical rule table (no-op without
+    an installed mesh, or when a dim doesn't divide)."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(mesh, rules, names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def logical_spec(mesh, shape, *names, rules: dict | None = None):
+    """PartitionSpec for in_shardings/ShapeDtypeStruct (launch-side)."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    return resolve_spec(mesh, rules, names, shape)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def init_norm(d: int, kind: str):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}   # rms stored as (1+scale)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding on the leading `fraction` of head dims.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def dense_init(key, shape, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init, fp32 master weights."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)

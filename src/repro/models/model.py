@@ -1,0 +1,484 @@
+"""Model orchestration: layer patterns, scan-over-layers, embeddings, loss,
+and decode-state threading for every architecture family.
+
+A config's layer stack is a repeating *pattern* of layer types (e.g. Griffin:
+(rglru, rglru, lattn)); parameters for each pattern position are stacked over
+repeats and the stack is traversed with lax.scan (keeps HLO size O(pattern),
+essential for 512-device dry-run compiles).  Remainder layers (when
+num_layers % len(pattern) != 0) run unscanned after the scan body.
+
+Layer types:
+  self       GQA self-attention + gated MLP        (dense / vlm backbone)
+  lattn      local-window GQA (+MLP)               (griffin attention layers)
+  self_cross self-attn + cross-attn + MLP          (vlm image layers, musicgen)
+  moe        self-attn + mixture-of-experts        (qwen-moe family)
+  ssd        Mamba2 SSD block (no MLP)             (mamba2)
+  rglru      RG-LRU recurrent block + MLP          (griffin recurrent layers)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (apply_norm, dense_init, init_norm, logical_constraint)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# patterns
+# ---------------------------------------------------------------------------
+
+def pattern_for(cfg) -> tuple[str, ...]:
+    if cfg.family == "ssm":
+        return ("ssd",)
+    if cfg.family == "hybrid":
+        return ("rglru", "rglru", "lattn")[: max(cfg.rglru_pattern, 1)]
+    if cfg.family == "moe":
+        return ("moe",)
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        return ("self",) * (k - 1) + ("self_cross",) if k > 1 else ("self_cross",)
+    if cfg.family == "audio":
+        return ("self_cross",)
+    return ("self",)
+
+
+def _uses_cond(cfg) -> bool:
+    return any(t == "self_cross" for t in pattern_for(cfg))
+
+
+# ---------------------------------------------------------------------------
+# per-type init / apply / decode
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg, typ: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if typ == "ssd":
+        return {"ln1": init_norm(d, cfg.norm),
+                "ssd": ssm_mod.init_ssd(ks[0], cfg)}
+    if typ == "rglru":
+        return {"ln1": init_norm(d, cfg.norm),
+                "rec": rglru_mod.init_rglru(ks[0], cfg),
+                "ln2": init_norm(d, cfg.norm),
+                "mlp": mlp_mod.init_mlp(ks[1], cfg)}
+    p = {"ln1": init_norm(d, cfg.norm),
+         "attn": attn.init_attention(ks[0], cfg)}
+    if typ == "moe":
+        p["ln2"] = init_norm(d, cfg.norm)
+        p["moe"] = mlp_mod.init_moe(ks[1], cfg)
+    else:
+        p["ln2"] = init_norm(d, cfg.norm)
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg)
+    if typ == "self_cross":
+        p["lnx"] = init_norm(d, cfg.norm)
+        p["xattn"] = attn.init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _apply_layer(x, p, cfg, typ: str, cond_embed):
+    aux = jnp.zeros((), jnp.float32)
+    if typ == "ssd":
+        return x + ssm_mod.ssd_block(apply_norm(x, p["ln1"], cfg.norm), cfg=cfg,
+                                     p=p["ssd"]), aux
+    if typ == "rglru":
+        x = x + rglru_mod.rglru_block(apply_norm(x, p["ln1"], cfg.norm),
+                                      p["rec"], cfg)
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+        return x, aux
+    window = cfg.local_window if typ == "lattn" else 0
+    a_out, _ = attn.self_attention(apply_norm(x, p["ln1"], cfg.norm),
+                                   p["attn"], cfg, window=window,
+                                   chunk=cfg.attn_chunk)
+    x = x + a_out
+    if typ == "self_cross":
+        ckv = attn.cond_kv(cond_embed, p["xattn"], cfg)
+        x = x + attn.cross_attention(apply_norm(x, p["lnx"], cfg.norm), ckv,
+                                     p["xattn"], cfg)
+    if typ == "moe":
+        m_out, aux = mlp_mod.moe(apply_norm(x, p["ln2"], cfg.norm), p["moe"],
+                                 cfg)
+        x = x + m_out
+    else:
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+    return x, aux
+
+
+def _apply_layer_prefill(x, p, cfg, typ: str, cond_embed, max_len: int):
+    """Forward one layer AND produce its decode state (teacher-forced
+    prefill).  Matches _state_init_layer's structure exactly."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+
+    def pad_cache(t):
+        out = jnp.zeros((b, max_len) + t.shape[2:], dtype)
+        out = jax.lax.dynamic_update_slice(out, t.astype(dtype),
+                                           (0, 0, 0, 0))
+        return logical_constraint(out, "batch", "kv_seq", None, None)
+
+    if typ == "ssd":
+        out, st = ssm_mod.ssd_block(apply_norm(x, p["ln1"], cfg.norm),
+                                    p["ssd"], cfg, return_state=True)
+        return x + out, st
+    if typ == "rglru":
+        out, st = rglru_mod.rglru_block(apply_norm(x, p["ln1"], cfg.norm),
+                                        p["rec"], cfg, return_state=True)
+        x = x + out
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+        return x, st
+    window = cfg.local_window if typ == "lattn" else 0
+    a_out, (k, v) = attn.self_attention(apply_norm(x, p["ln1"], cfg.norm),
+                                        p["attn"], cfg, window=window,
+                                        chunk=cfg.attn_chunk)
+    x = x + a_out
+    if typ == "lattn":
+        w = min(cfg.local_window, max_len)
+        # ring layout: position p lives in slot p % w
+        if s >= w:
+            shift = (s - w) % w
+            st = {"k": jnp.roll(k[:, -w:], shift, axis=1).astype(dtype),
+                  "v": jnp.roll(v[:, -w:], shift, axis=1).astype(dtype),
+                  "pos": jnp.roll(jnp.arange(s - w, s, dtype=jnp.int32),
+                                  shift)}
+        else:
+            kp = jnp.zeros((b, w) + k.shape[2:], dtype)
+            vp = jnp.zeros((b, w) + v.shape[2:], dtype)
+            st = {"k": jax.lax.dynamic_update_slice(
+                      kp, k.astype(dtype), (0, 0, 0, 0)),
+                  "v": jax.lax.dynamic_update_slice(
+                      vp, v.astype(dtype), (0, 0, 0, 0)),
+                  "pos": jnp.where(jnp.arange(w) < s, jnp.arange(w), -1)}
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+        return x, st
+    st = {"k": pad_cache(k), "v": pad_cache(v)}
+    if typ == "self_cross":
+        ck, cv = attn.cond_kv(cond_embed, p["xattn"], cfg)
+        st["ck"], st["cv"] = ck, cv
+        x = x + attn.cross_attention(apply_norm(x, p["lnx"], cfg.norm),
+                                     (ck, cv), p["xattn"], cfg)
+    if typ == "moe":
+        m_out, _ = mlp_mod.moe(apply_norm(x, p["ln2"], cfg.norm), p["moe"],
+                               cfg)
+        x = x + m_out
+    else:
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+    return x, st
+
+
+def _state_init_layer(cfg, typ: str, batch: int, max_len: int, dtype):
+    hkv, hd = cfg.effective_kv_heads, cfg.resolved_head_dim
+    if typ == "ssd":
+        return ssm_mod.ssd_decode_init(cfg, batch, dtype)
+    if typ == "rglru":
+        return rglru_mod.rglru_decode_init(cfg, batch, dtype)
+    if typ == "lattn":
+        w = min(cfg.local_window, max_len)
+        return {"k": jnp.zeros((batch, w, hkv, hd), dtype),
+                "v": jnp.zeros((batch, w, hkv, hd), dtype),
+                "pos": jnp.full((w,), -1, jnp.int32)}
+    st = {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+          "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+    if typ == "self_cross":
+        tc = cfg.num_cond_tokens
+        st["ck"] = jnp.zeros((batch, tc, hkv, hd), dtype)
+        st["cv"] = jnp.zeros((batch, tc, hkv, hd), dtype)
+    return st
+
+
+def _decode_layer(x, p, cfg, typ: str, state, cur_index):
+    if typ == "ssd":
+        out, st = ssm_mod.ssd_decode_step(apply_norm(x, p["ln1"], cfg.norm),
+                                          p["ssd"], cfg, state)
+        return x + out, st
+    if typ == "rglru":
+        out, st = rglru_mod.rglru_decode_step(apply_norm(x, p["ln1"], cfg.norm),
+                                              p["rec"], cfg, state)
+        x = x + out
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+        return x, st
+    if typ == "lattn":
+        out, k, v, pos = attn.decode_local_attention(
+            apply_norm(x, p["ln1"], cfg.norm), p["attn"], cfg,
+            state["k"], state["v"], state["pos"], cur_index,
+            window=cfg.local_window)
+        x = x + out
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+        return x, {"k": k, "v": v, "pos": pos}
+    out, k, v = attn.decode_self_attention(
+        apply_norm(x, p["ln1"], cfg.norm), p["attn"], cfg,
+        state["k"], state["v"], cur_index)
+    x = x + out
+    st = {"k": k, "v": v}
+    if typ == "self_cross":
+        st["ck"], st["cv"] = state["ck"], state["cv"]
+        x = x + attn.cross_attention(apply_norm(x, p["lnx"], cfg.norm),
+                                     (state["ck"], state["cv"]), p["xattn"],
+                                     cfg)
+    if typ == "moe":
+        m_out, _ = mlp_mod.moe(apply_norm(x, p["ln2"], cfg.norm), p["moe"], cfg)
+        x = x + m_out
+    else:
+        x = x + mlp_mod.mlp(apply_norm(x, p["ln2"], cfg.norm), p["mlp"], cfg)
+    return x, st
+
+
+# ---------------------------------------------------------------------------
+# the Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Functional model wrapper: init / forward / loss / decode."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.pattern = pattern_for(cfg)
+        self.repeats = cfg.num_layers // len(self.pattern)
+        self.remainder = self.pattern[: cfg.num_layers % len(self.pattern)]
+
+    # -- parameters ----------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_embed, k_head, k_layers, k_tail = jax.random.split(key, 4)
+        params: dict = {"final_norm": init_norm(cfg.d_model, cfg.norm)}
+        if cfg.frontend == "tokens":
+            params["embed"] = dense_init(k_embed, (cfg.vocab_size, cfg.d_model))
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size))
+
+        blocks = []
+        for pos, typ in enumerate(self.pattern):
+            keys = jax.random.split(jax.random.fold_in(k_layers, pos),
+                                    self.repeats)
+            blocks.append(jax.vmap(
+                functools.partial(_init_layer, cfg=self.cfg, typ=typ))(keys))
+        params["blocks"] = blocks
+        params["tail"] = [
+            _init_layer(jax.random.fold_in(k_tail, i), cfg, typ)
+            for i, typ in enumerate(self.remainder)]
+        return params
+
+    # -- embedding / head ------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        if cfg.frontend == "tokens":
+            x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+        else:
+            x = batch["embeds"].astype(dtype)
+        x = logical_constraint(x, "batch", "seq", "embed")
+        cond = batch.get("cond")
+        if cond is not None:
+            cond = cond.astype(dtype)
+        return x, cond
+
+    def _head(self, params, x):
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return logical_constraint(logits, "batch", "seq", "vocab")
+
+    # -- forward (train / prefill teacher-forced) ------------------------------
+    def forward(self, params, batch, return_hidden: bool = False):
+        cfg = self.cfg
+        x, cond = self._embed(params, batch)
+
+        def body(carry, block_params):
+            h, aux = carry
+            for pos, typ in enumerate(self.pattern):
+                h, a = _apply_layer(h, block_params[pos], cfg, typ, cond)
+                aux = aux + a
+            return (h, aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        carry = (x, jnp.zeros((), jnp.float32))
+        if cfg.unroll:
+            for r in range(self.repeats):
+                carry, _ = body(carry, jax.tree.map(
+                    lambda t: t[r], tuple(params["blocks"])))
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(body, carry, tuple(params["blocks"]))
+        for i, typ in enumerate(self.remainder):
+            x, a = _apply_layer(x, params["tail"][i], cfg, typ, cond)
+            aux = aux + a
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        if return_hidden:
+            return x, aux
+        return self._head(params, x), aux
+
+    def loss(self, params, batch):
+        """Mean token cross-entropy (+ MoE aux), computed in sequence chunks
+        so the (B, S, V) float32 logits never materialize (the f32 logit
+        pipeline of a 152k vocab would otherwise dominate peak memory)."""
+        cfg = self.cfg
+        hidden, aux = self.forward(params, batch, return_hidden=True)
+        labels = batch["labels"]
+        b, s, d = hidden.shape
+        cs = min(cfg.loss_chunk, s)
+        if s % cs:
+            cs = s                        # fallback: single chunk
+        nch = s // cs
+        head = params["lm_head"]
+
+        def chunk_sums(h_c, l_c):
+            logits = jnp.einsum("bsd,dv->bsv", h_c, head.astype(h_c.dtype))
+            logits = logical_constraint(logits, "batch", "seq", "vocab")
+            lf = logits.astype(jnp.float32)
+            logz = jax.scipy.special.logsumexp(lf, axis=-1)
+            gold = jnp.take_along_axis(lf, l_c[..., None], axis=-1)[..., 0]
+            return jnp.stack([(logz - gold).sum(), (logz ** 2).sum()])
+
+        h_ch = hidden.reshape(b, nch, cs, d).swapaxes(0, 1)
+        l_ch = labels.reshape(b, nch, cs).swapaxes(0, 1)
+        if cfg.unroll or nch == 1:
+            sums = sum(chunk_sums(h_ch[i], l_ch[i]) for i in range(nch))
+        else:
+            body = jax.checkpoint(
+                lambda acc, inp: (acc + chunk_sums(*inp), None),
+                prevent_cse=False)
+            sums, _ = jax.lax.scan(body, jnp.zeros((2,), jnp.float32),
+                                   (h_ch, l_ch))
+        denom = float(b * s)
+        nll = sums[0] / denom
+        zloss = 1e-4 * sums[1] / denom
+        return nll + zloss + aux, {"nll": nll, "aux": aux, "zloss": zloss}
+
+    # -- prefill ---------------------------------------------------------------
+    def prefill(self, params, batch, max_len: int):
+        """Teacher-forced forward that also builds the decode state.
+
+        Returns (last_position_logits (B, V), decode_state) — the state is
+        structurally identical to init_decode_state, with index = S."""
+        cfg = self.cfg
+        x, cond = self._embed(params, batch)
+        s = x.shape[1]
+
+        def body(h, block_params):
+            states = []
+            for pos, typ in enumerate(self.pattern):
+                h, st = _apply_layer_prefill(h, block_params[pos], cfg, typ,
+                                             cond, max_len)
+                states.append(st)
+            return h, tuple(states)
+
+        if cfg.unroll:
+            per_rep = []
+            for r in range(self.repeats):
+                x, st = body(x, jax.tree.map(lambda t: t[r],
+                                             tuple(params["blocks"])))
+                per_rep.append(st)
+            block_states = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep) \
+                if per_rep else tuple(
+                    {} for _ in self.pattern)
+        else:
+            x, block_states = jax.lax.scan(body, x, tuple(params["blocks"]))
+        tail_states = []
+        for i, typ in enumerate(self.remainder):
+            x, st = _apply_layer_prefill(x, params["tail"][i], cfg, typ, cond,
+                                         max_len)
+            tail_states.append(st)
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        state = {"blocks": list(block_states), "tail": tail_states,
+                 "index": jnp.asarray(s, jnp.int32)}
+        return logits, state
+
+    # -- decode ----------------------------------------------------------------
+    def init_decode_state(self, params, batch_size: int, max_len: int,
+                          cond=None):
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        states = []
+        for pos, typ in enumerate(self.pattern):
+            one = _state_init_layer(cfg, typ, batch_size, max_len, dtype)
+            stacked = jax.tree.map(
+                lambda s: jnp.broadcast_to(s[None], (self.repeats,) + s.shape),
+                one)
+            states.append(stacked)
+        tail = [_state_init_layer(cfg, typ, batch_size, max_len, dtype)
+                for typ in self.remainder]
+        state = {"blocks": states, "tail": tail,
+                 "index": jnp.zeros((), jnp.int32)}
+        if cond is not None and _uses_cond(cfg):
+            state = self._precompute_cond(params, state, cond)
+        return state
+
+    def _precompute_cond(self, params, state, cond):
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        cond = cond.astype(dtype)
+        for pos, typ in enumerate(self.pattern):
+            if typ != "self_cross":
+                continue
+            xp = params["blocks"][pos]["xattn"]
+            ck, cv = jax.vmap(
+                lambda p: attn.cond_kv(cond, p, cfg))(xp)
+            state["blocks"][pos]["ck"] = ck
+            state["blocks"][pos]["cv"] = cv
+        for i, typ in enumerate(self.remainder):
+            if typ != "self_cross":
+                continue
+            xp = params["tail"][i]["xattn"]
+            ck, cv = attn.cond_kv(cond, xp, cfg)
+            state["tail"][i]["ck"] = ck
+            state["tail"][i]["cv"] = cv
+        return state
+
+    def decode_step(self, params, state, token_or_embed,
+                    return_hidden: bool = False):
+        """One token for the whole batch.  token_or_embed: (B,) int32 tokens
+        or (B, 1, D) embeddings (stub frontends).  Returns (logits, state);
+        with return_hidden, (hidden (B, D), state) — the PQ hybrid head
+        (serve/hybrid_head.py) consumes the hidden state directly and the
+        full-vocab matmul never runs."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        cur = state["index"]
+        if cfg.frontend == "tokens":
+            x = jnp.take(params["embed"], token_or_embed[:, None],
+                         axis=0).astype(dtype)
+        else:
+            x = token_or_embed.astype(dtype)
+        x = logical_constraint(x, "batch", None, "embed")
+
+        def body(h, inp):
+            block_params, block_state = inp
+            new_states = []
+            for pos, typ in enumerate(self.pattern):
+                h, st = _decode_layer(h, block_params[pos], cfg, typ,
+                                      block_state[pos], cur)
+                new_states.append(st)
+            return h, tuple(new_states)
+
+        if cfg.unroll:
+            per_rep = []
+            for r in range(self.repeats):
+                sel = jax.tree.map(lambda t: t[r], (tuple(params["blocks"]),
+                                                    tuple(state["blocks"])))
+                x, st = body(x, sel)
+                per_rep.append(st)
+            new_block_states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *per_rep)
+        else:
+            x, new_block_states = jax.lax.scan(
+                body, x, (tuple(params["blocks"]), tuple(state["blocks"])))
+        new_tail = []
+        for i, typ in enumerate(self.remainder):
+            x, st = _decode_layer(x, params["tail"][i], cfg, typ,
+                                  state["tail"][i], cur)
+            new_tail.append(st)
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        new_state = {"blocks": list(new_block_states), "tail": new_tail,
+                     "index": cur + 1}
+        if return_hidden:
+            return x[:, 0].astype(jnp.float32), new_state
+        logits = self._head(params, x)[:, 0]
+        return logits, new_state

@@ -1,0 +1,113 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU) — arXiv:2402.19427.
+
+Block: x -> {gate branch: linear -> GeLU} ⊙ {recurrent branch: linear ->
+causal conv1d (width 4) -> RG-LRU} -> linear out.
+
+RG-LRU (Real-Gated LRU), c = 8:
+  r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)          input gate
+  log a_t = -c * softplus(lam) * r_t    per-channel decay (lam learnable)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+Training runs the diagonal recurrence with jax.lax.associative_scan
+(log-depth over S — this is what makes long-context training feasible);
+decode is the O(1) update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, logical_constraint
+
+_C = 8.0
+
+
+def init_rglru(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": dense_init(ks[0], (d, w)),           # GeLU branch
+        "w_rec": dense_init(ks[1], (d, w)),            # recurrent branch
+        "conv_w": 0.1 * jax.random.normal(ks[2], (4, w), jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "wa": dense_init(ks[3], (w, w)),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": dense_init(ks[4], (w, w)),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # init so a^c in [0.9, 0.999] as in the paper
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)) / _C)),
+        "out": dense_init(ks[5], (w, d)) / (2.0 * cfg.num_layers) ** 0.5,
+    }
+
+
+def _conv(x, w, b, state=None):
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(k))
+    return y + b.astype(x.dtype), xp[:, -(k - 1):, :]
+
+
+def _gates(xr, p, dtype):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, p["wa"].astype(dtype))
+                       + p["ba"].astype(dtype))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, p["wx"].astype(dtype))
+                       + p["bx"].astype(dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))                        # (B,S,W)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta, i
+
+
+def rglru_block(x, p, cfg, return_state: bool = False):
+    """Train/prefill path.  x (B,S,D) -> (B,S,D)."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dtype)))
+    xr_raw = jnp.einsum("bsd,dw->bsw", x, p["w_rec"].astype(dtype))
+    xr_raw = logical_constraint(xr_raw, "batch", "seq", "state")
+    xr, _ = _conv(xr_raw, p["conv_w"], p["conv_b"])
+    a, beta, i = _gates(xr, p, dtype)
+    v = (beta * i.astype(jnp.float32) * xr.astype(jnp.float32))  # (B,S,W)
+
+    # h_t = a_t h_{t-1} + v_t  — associative scan over S with pairs (a, v)
+    def combine(c1, c2):
+        a1, v1 = c1
+        a2, v2 = c2
+        return a1 * a2, v1 * a2 + v2
+
+    _, h = jax.lax.associative_scan(combine, (a, v), axis=1)
+    y = h.astype(dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["out"].astype(dtype))
+    out = logical_constraint(out, "batch", "seq", "embed")
+    if return_state:
+        return out, {"conv": xr_raw[:, -3:, :], "h": h[:, -1]}
+    return out
+
+
+def rglru_decode_init(cfg, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode_step(x, p, cfg, state):
+    """x (B,1,D) -> (B,1,D) with O(1) state."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dtype)))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_rec"].astype(dtype))
+    xr, conv_state = _conv(xr, p["conv_w"], p["conv_b"], state=state["conv"])
+    a, beta, i = _gates(xr, p, dtype)
+    v = beta * i.astype(jnp.float32) * xr.astype(jnp.float32)
+    h = a[:, 0] * state["h"] + v[:, 0]                       # (B,W)
+    y = h[:, None, :].astype(dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["out"].astype(dtype))
+    return out, {"conv": conv_state, "h": h}

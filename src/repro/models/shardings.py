@@ -1,0 +1,145 @@
+"""Parameter / optimizer / decode-state PartitionSpec derivation.
+
+Specs are derived from leaf *path names* (the param tree is our schema) via
+the same logical-rule table the model's activation constraints use, so
+params and activations always agree on which mesh axis means what.
+
+FSDP convention: the non-tensor-parallel dimension of every matrix shards
+over 'data' (+'pod'); XLA GSPMD inserts the all-gather at use and the
+reduce-scatter in the backward pass (ZeRO-3 equivalent).  Moments in the
+optimizer state inherit their parameter's spec (ZeRO-2 comes for free).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import DEFAULT_RULES, resolve_spec
+
+__all__ = ["param_pspecs", "state_pspecs", "batch_pspecs", "tree_pspecs"]
+
+# leaf-name -> logical axes per rank (the stacked `blocks` axis is prepended
+# automatically when the path passes through "blocks")
+_PARAM_AXES = {
+    "embed":    ("vocab", "fsdp"),
+    "lm_head":  ("fsdp", "vocab"),
+    "wq":       ("fsdp", "kv_heads", "heads", None),
+    "wk":       ("fsdp", "kv_heads", None),
+    "wv":       ("fsdp", "kv_heads", None),
+    "wo":       ("kv_heads", "heads", None, "fsdp"),
+    "bq":       ("kv_heads", "heads", None),
+    "bk":       ("kv_heads", None),
+    "bv":       ("kv_heads", None),
+    "router":   ("fsdp", "expert"),
+    "in_proj":  ("fsdp", "mlp"),
+    "out_proj": ("mlp", "fsdp"),
+    "conv_w":   (None, "mlp"),
+    "conv_b":   ("mlp",),
+    "a_log":    ("heads",),
+    "dt_bias":  ("heads",),
+    "d_skip":   ("heads",),
+    "wa":       ("fsdp", "state"),
+    "wx":       ("fsdp", "state"),
+    "ba":       ("state",),
+    "bx":       ("state",),
+    "lam":      ("state",),
+    "w_rec":    ("fsdp", "state"),
+    "out":      ("state", "fsdp"),
+    "norm":     ("mlp",),
+    "scale":    (None,),
+    "bias":     (None,),
+}
+
+_STATE_AXES = {
+    "k":    ("batch", "kv_seq", "kv_heads", None),
+    "v":    ("batch", "kv_seq", "kv_heads", None),
+    "ck":   ("batch", None, "kv_heads", None),
+    "cv":   ("batch", None, "kv_heads", None),
+    "pos":  (None,),
+    "conv": ("batch", None, "mlp"),
+    "ssm":  ("batch", "heads", None, None),
+    "h":    ("batch", "state"),
+    "index": (),
+}
+
+
+def _mlp_axes(name: str, rank: int):
+    # dense MLP w_gate/w_up (D,F) / w_down (F,D); MoE (E,D,F) / (E,F,D);
+    # rglru w_gate (D,W)
+    if name in ("w_gate", "w_up"):
+        return ("expert", "fsdp", "mlp") if rank == 3 else ("fsdp", "mlp")
+    if name == "w_down":
+        return ("expert", "mlp", "fsdp") if rank == 3 else ("mlp", "fsdp")
+    return None
+
+
+def _leaf_name(path) -> tuple[str, bool]:
+    parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    stacked = "blocks" in parts
+    return parts[-1], stacked
+
+
+def param_pspecs(params, mesh, rules: dict | None = None):
+    """PartitionSpec tree matching `params` (works on ShapeDtypeStructs)."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def spec_for(path, leaf):
+        name, stacked = _leaf_name(path)
+        axes = _mlp_axes(name, np.ndim(leaf) - (1 if stacked else 0))
+        if axes is None:
+            axes = _PARAM_AXES.get(name)
+        if axes is None:
+            axes = (None,) * (np.ndim(leaf) - (1 if stacked else 0))
+        if stacked:
+            axes = (None,) + tuple(axes)
+        axes = axes[: np.ndim(leaf)]
+        return resolve_spec(mesh, rules, axes, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def state_pspecs(state, mesh, rules: dict | None = None):
+    """Decode-state spec tree (KV caches / recurrent states)."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def spec_for(path, leaf):
+        name, stacked = _leaf_name(path)
+        axes = _STATE_AXES.get(name, (None,) * np.ndim(leaf))
+        if stacked:
+            axes = (None,) + tuple(axes)
+        axes = axes[: np.ndim(leaf)]
+        return resolve_spec(mesh, rules, axes, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def batch_pspecs(batch, mesh, rules: dict | None = None):
+    """Input batch specs: leading dim is always the global batch."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def spec_for(path, leaf):
+        axes = ("batch",) + (None,) * (np.ndim(leaf) - 1)
+        return resolve_spec(mesh, rules, axes, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def tree_pspecs(tree, mesh, params_like, rules: dict | None = None):
+    """Optimizer-state specs: moments inherit parameter specs; scalars and
+    int8-quantized moment blocks replicate."""
+    pspecs = param_pspecs(params_like, mesh, rules)
+
+    def build(subtree):
+        return jax.tree.map(lambda _: P(), subtree)
+
+    out = {}
+    for key, sub in tree.items():
+        if key in ("m", "v"):
+            out[key] = jax.tree.map(
+                lambda spec, leaf: spec if np.ndim(leaf) > 0 else P(),
+                pspecs, sub)
+        else:
+            out[key] = build(sub) if isinstance(sub, dict) else P()
+    return out

@@ -1,0 +1,193 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training uses the chunked SSD algorithm: within-chunk terms are dense
+"attention-like" matmuls (MXU-friendly), across-chunk terms are a linear
+recurrence over chunk summary states (lax.scan, O(S/chunk) steps).  Decode
+is the O(1) recurrent update.
+
+Layout (n_groups = 1):
+  in_proj : D -> [z (d_in), xBC (d_in + 2N), dt (H)]
+  conv1d  : causal depthwise width-4 over xBC
+  SSD     : x (B,S,H,P), dt (B,S,H), A (H,) neg., b,c (B,S,N)
+  out     : y * silu(z) -> RMSNorm -> out_proj (d_in -> D)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, logical_constraint, rms_norm
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_headdim
+    return d_in, heads, cfg.ssm_state, cfg.ssm_headdim
+
+
+def init_ssd(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, h, n, p = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * n + h)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch),
+                                          jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_in, d)) / (2.0 * cfg.num_layers) ** 0.5,
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x (B,S,C); w (K,C).  state (B,K-1,C) for decode.
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(k))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return y, new_state
+
+
+def _split_proj(proj, cfg):
+    d_in, h, n, p = _dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD scan.  x (B,S,H,P); dt (B,S,H); a (H,) negative; b,c (B,S,N).
+    Returns (B,S,H,P) and final state (B,H,P,N)."""
+    bt, s, h, p = x.shape
+    n = b.shape[-1]
+    lc = min(chunk, s)
+    s_orig = s
+    if s % lc:
+        # right-pad with dt = 0 tokens: zero state contribution, decay 1 —
+        # outputs for real positions and the final state are unchanged.
+        pad = lc - s % lc
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // lc
+
+    xd = x * dt[..., None]                                  # dt-weighted input
+    la = a[None, None, :] * dt                              # log-decay per token
+    xc = xd.reshape(bt, nc, lc, h, p)
+    lac = la.reshape(bt, nc, lc, h)
+    bc = b.reshape(bt, nc, lc, n)
+    cc = c.reshape(bt, nc, lc, n)
+
+    cum = jnp.cumsum(lac, axis=2)                           # (B,nc,Lc,H)
+
+    # ---- intra-chunk (quadratic, masked decay kernel) ----------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Li,Lj,H)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (1, 1, lc, lc, 1), 2)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (1, 1, lc, lc, 1), 3)
+    decay = jnp.where(iq >= ik, jnp.exp(diff), 0.0)         # (B,nc,Li,Lj,H)
+    scores = jnp.einsum("bkin,bkjn->bkij", cc, bc)          # (B,nc,Li,Lj)
+    y_intra = jnp.einsum("bkij,bkijh,bkjhp->bkihp",
+                         scores, decay.astype(scores.dtype), xc)
+
+    # ---- chunk summary states ----------------------------------------------
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                 # decay to chunk end
+    state_k = jnp.einsum("bkjn,bkjh,bkjhp->bkhpn",
+                         bc, tail.astype(bc.dtype), xc)     # (B,nc,H,P,N)
+    total = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    # ---- inter-chunk recurrence --------------------------------------------
+    def step(s_prev, inp):
+        st, tot = inp                                       # (B,H,P,N), (B,H)
+        s_new = s_prev * tot[:, :, None, None] + st
+        return s_new, s_prev                                # emit state BEFORE
+
+    s0 = jnp.zeros((bt, h, p, n), x.dtype)
+    s_last, s_before = jax.lax.scan(
+        step, s0, (state_k.transpose(1, 0, 2, 3, 4),
+                   total.transpose(1, 0, 2).astype(x.dtype)))
+    s_before = s_before.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    pre = jnp.exp(cum)                                      # decay from start
+    y_inter = jnp.einsum("bkin,bkih,bkhpn->bkihp",
+                         cc, pre.astype(cc.dtype), s_before)
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    return y[:, :s_orig], s_last
+
+
+def ssd_block(x, p, cfg, return_state: bool = False):
+    """Full Mamba2 block (train/prefill).  x (B,S,D) -> (B,S,D)."""
+    dtype = x.dtype
+    d_in, h, n, hd = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    z, xbc_raw, dt = _split_proj(proj, cfg)
+    xbc, _ = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]   # pre-activation stream
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(*x.shape[:2], h, hd)
+    b = xbc[..., d_in:d_in + n]
+    c = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"]).astype(dtype)       # (B,S,H)
+    dt = logical_constraint(dt, "batch", "seq", "heads")
+    a = -jnp.exp(p["a_log"]).astype(dtype)                   # (H,) negative
+    xs = logical_constraint(xs, "batch", "seq", "heads", None)
+    y, s_last = ssd_chunked(xs, dt, a, b, c, cfg.ssm_chunk)
+    y = y + xs * p["d_skip"].astype(dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_in)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    out = logical_constraint(out, "batch", "seq", "embed")
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": s_last}
+    return out
+
+
+def ssd_decode_init(cfg, batch: int, dtype) -> dict:
+    d_in, h, n, hd = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, hd, n), dtype),
+    }
+
+
+def ssd_decode_step(x, p, cfg, state):
+    """x (B,1,D) -> (B,1,D); O(1) state update."""
+    dtype = x.dtype
+    d_in, h, n, hd = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(x.shape[0], h, hd)          # (B,H,P)
+    b = xbc[:, 0, d_in:d_in + n]                             # (B,N)
+    c = xbc[:, 0, d_in + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"]).astype(dtype)       # (B,H)
+    a = -jnp.exp(p["a_log"]).astype(dtype)
+    decay = jnp.exp(a[None] * dt)                            # (B,H)
+    s_new = (state["ssm"] * decay[:, :, None, None]
+             + jnp.einsum("bhp,bn,bh->bhpn", xs, b, dt))
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c)
+    y = y + xs * p["d_skip"].astype(dtype)[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    return out, {"conv": conv_state, "ssm": s_new}

@@ -1,0 +1,2 @@
+from .analysis import (RooflineTerms, collective_bytes_from_hlo,  # noqa: F401
+                       roofline_from_compiled, model_flops, V5E)

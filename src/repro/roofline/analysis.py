@@ -1,0 +1,259 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips × peak FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM bandwidth)
+  collective term = collective_bytes / (chips × link bandwidth)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis().  collective_bytes
+is parsed from the post-SPMD optimized HLO (compiled.as_text()): we sum the
+larger of (result bytes, operand bytes) for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute — i.e. bytes that must
+cross links per participating device, the standard ring-estimate upper
+bound.  Async pairs (*-start/*-done) are counted once via the -start op.
+
+NOTE on cost_analysis scope: with XLA SPMD the compiled module is the
+per-device program, so flops/bytes are per-device; we multiply terms out
+accordingly (see roofline_from_compiled).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["V5E", "RooflineTerms", "collective_bytes_from_hlo",
+           "roofline_from_compiled", "model_flops"]
+
+# TPU v5e per-chip constants (assignment-specified)
+V5E = {
+    "peak_flops": 197e12,       # bf16 FLOP/s
+    "hbm_bw": 819e9,            # B/s
+    "ici_bw": 50e9,             # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9_]+\[[^\]]*\](?:\{[^}]*\})?(?:,\s*)?)+)\s*(?:\))?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+_SKIP_SUFFIX = ("-done",)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum bytes moved by collectives in an optimized HLO module.
+
+    Returns {op_kind: bytes, ..., "total": bytes, "count": n}."""
+    out: dict = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "-done(" in line:        # async completion of an already-counted op
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shapes)
+        out[kind] = out.get(kind, 0.0) + nbytes
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k != "count")
+    out["count"] = count
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # whole-job FLOPs (per-device × chips)
+    hlo_bytes: float            # whole-job HBM bytes
+    collective_bytes: float     # whole-job link bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    bytes_per_device: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                           chips: int, model_flops_val: float,
+                           hw: dict = V5E) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older jax returns [dict]
+        cost = cost[0]
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    coll_dev = float(coll["total"])
+
+    mem = compiled.memory_analysis()
+    bytes_per_device = float(
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0))
+
+    # cost_analysis is per-device under SPMD; totals scale by chips, and the
+    # roofline denominators cancel that factor back out.
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_dev * chips,
+        hlo_bytes=bytes_dev * chips,
+        collective_bytes=coll_dev * chips,
+        compute_s=flops_dev / hw["peak_flops"],
+        memory_s=bytes_dev / hw["hbm_bw"],
+        collective_s=coll_dev / hw["ici_bw"],
+        model_flops=model_flops_val,
+        bytes_per_device=bytes_per_device,
+    )
+
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total params, active-per-token params) from the config — analytic,
+    no instantiation."""
+    d, l, v = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    from repro.models.model import pattern_for
+    pattern = pattern_for(cfg)
+
+    def attn_params():
+        return d * hd * (hq + 2 * hkv) + hq * hd * d
+
+    def mlp_params(f):
+        return 3 * d * f
+
+    per_type_total, per_type_active = {}, {}
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    f_moe = cfg.moe_d_ff or cfg.d_ff
+    for t in set(pattern):
+        if t == "ssd":
+            d_in = cfg.ssm_expand * d
+            n = cfg.ssm_state
+            tot = d * (2 * d_in + 2 * n + d_in // cfg.ssm_headdim) + d_in * d
+            per_type_total[t] = per_type_active[t] = tot
+        elif t == "rglru":
+            w = cfg.lru_width or d
+            tot = 2 * d * w + 2 * w * w + w * d + mlp_params(cfg.d_ff)
+            per_type_total[t] = per_type_active[t] = tot
+        elif t == "moe":
+            tot = attn_params() + d * e + e * 3 * d * f_moe \
+                + (3 * d * f_moe * cfg.num_shared_experts)
+            act = attn_params() + d * e + k * 3 * d * f_moe \
+                + (3 * d * f_moe * cfg.num_shared_experts)
+            per_type_total[t], per_type_active[t] = tot, act
+        elif t == "self_cross":
+            tot = 2 * attn_params() + mlp_params(cfg.d_ff)
+            per_type_total[t] = per_type_active[t] = tot
+        else:
+            tot = attn_params() + mlp_params(cfg.d_ff)
+            per_type_total[t] = per_type_active[t] = tot
+
+    repeats = l // len(pattern)
+    layers = list(pattern) * repeats + list(pattern[: l % len(pattern)])
+    total = sum(per_type_total[t] for t in layers)
+    active = sum(per_type_active[t] for t in layers)
+    emb = v * d * (1 if cfg.frontend == "tokens" else 0) + d * v
+    return float(total + emb), float(active + emb)
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs for the cell: 6·N_active·tokens for training,
+    2·N_active·tokens forward-only (prefill / decode), plus the causal
+    attention term 2·(q·kv)·d_head·heads per layer pair."""
+    total, active = count_params(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    from repro.models.model import pattern_for
+    pattern = pattern_for(cfg)
+    l = cfg.num_layers
+    layers = (list(pattern) * (l // len(pattern)
+                               + 1))[: l]
+    hd = cfg.resolved_head_dim
+    hq = cfg.num_heads
+
+    def attn_flops(q_tokens, kv_tokens, causal):
+        per_pair = 4 * hq * hd        # scores + values, fwd
+        pairs = q_tokens * kv_tokens * (0.5 if causal else 1.0)
+        return per_pair * pairs
+
+    if shape.kind == "train":
+        tokens = b * s
+        f = 6.0 * active * tokens
+        for t in layers:
+            if t in ("self", "moe", "self_cross"):
+                f += 3 * b * attn_flops(s, s, True)         # fwd+bwd = 3x fwd
+            if t == "lattn":
+                f += 3 * b * attn_flops(s, min(cfg.local_window, s), False)
+            if t == "self_cross":
+                f += 3 * b * attn_flops(s, cfg.num_cond_tokens, False)
+        return f
+    if shape.kind == "prefill":
+        tokens = b * s
+        f = 2.0 * active * tokens
+        for t in layers:
+            if t in ("self", "moe", "self_cross"):
+                f += b * attn_flops(s, s, True)
+            if t == "lattn":
+                f += b * attn_flops(s, min(cfg.local_window, s), False)
+            if t == "self_cross":
+                f += b * attn_flops(s, cfg.num_cond_tokens, False)
+        return f
+    # decode: one token against a seq_len cache
+    f = 2.0 * active * b
+    for t in layers:
+        if t in ("self", "moe", "self_cross"):
+            f += b * attn_flops(1, s, False)
+        if t == "lattn":
+            f += b * attn_flops(1, min(cfg.local_window, s), False)
+        if t == "self_cross":
+            f += b * attn_flops(1, cfg.num_cond_tokens, False)
+    return f

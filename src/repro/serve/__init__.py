@@ -1,0 +1,2 @@
+from .hybrid_head import HybridLMHead, HybridHeadParams     # noqa: F401
+from .serving import ServeSession, greedy_generate          # noqa: F401

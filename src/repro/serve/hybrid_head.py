@@ -1,0 +1,113 @@
+"""PQ-approximated LM head — the paper's technique as a serving feature.
+
+Next-token scoring over a 100k–256k vocabulary is a MIPS problem over the
+output embedding table (DESIGN.md §4; the paper's own "extreme
+classification" use case).  We apply the full paper pipeline:
+
+  dense data index     PQ over the columns of lm_head (K = d/2, l = 16),
+                       scanned with the LUT16 kernel (or its jnp oracle);
+  sparse component     per-sequence token statistics (repetition counts) —
+                       a genuinely sparse query-side term, scored exactly
+                       like the paper's sparse inverted side;
+  residual reorder     top alpha*k candidates re-scored with the int8 dense
+                       residual (paper pass 2) and exact lm_head columns for
+                       the final k (pass 3 analogue).
+
+Result: full-vocab logits never materialize — the decode-time head cost
+drops from O(V·d) to O(V·K/2 bytes + alpha·k·d), the paper's >10x regime
+for 152k-256k vocabularies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pq import (PQCodebooks, ScalarQuant, adc_lut, adc_scores_ref,
+                           pq_decode, pq_encode, scalar_quantize,
+                           train_codebooks)
+
+__all__ = ["HybridHeadParams", "HybridLMHead"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HybridHeadParams:
+    codebooks: PQCodebooks
+    codes: jax.Array            # (V, K) uint8
+    residual: ScalarQuant       # int8 residual of embedding columns
+    head: jax.Array             # (d, V) exact head (pass-3 rerank)
+
+
+class HybridLMHead:
+    """Build once per checkpoint; serve per decode step."""
+
+    def __init__(self, cfg, use_kernel: bool = False):
+        self.cfg = cfg
+        self.use_kernel = use_kernel
+
+    def build(self, lm_head: jax.Array, *, subspaces: int | None = None,
+              iters: int = 8, seed: int = 0) -> HybridHeadParams:
+        """lm_head: (d, V) — token vectors are columns."""
+        d, v = lm_head.shape
+        table = lm_head.T.astype(jnp.float32)              # (V, d)
+        k = subspaces or max(d // 2, 1)
+        cb = train_codebooks(table, k, 16, iters=iters, seed=seed)
+        codes = pq_encode(table, cb)
+        recon = pq_decode(codes, cb)
+        residual = scalar_quantize(table - recon)
+        return HybridHeadParams(codebooks=cb, codes=codes, residual=residual,
+                                head=lm_head.astype(jnp.float32))
+
+    @partial(jax.jit, static_argnums=(0, 4, 5, 6))
+    def approx_topk(self, hp: HybridHeadParams, hidden: jax.Array,
+                    token_counts: jax.Array | None, k: int = 50,
+                    alpha: int = 8, penalty: float = 0.0):
+        """hidden: (B, d) final hidden states; token_counts: (B, V) sparse
+        per-sequence counts (may be None).  Returns (values (B,k), ids (B,k)).
+
+        Pass 1: LUT16 ADC over PQ codes (+ sparse penalty);
+        Pass 2: + int8 residual for alpha*k candidates;
+        Pass 3: exact head columns for the k survivors."""
+        h = hidden.astype(jnp.float32)
+        lut = adc_lut(h, hp.codebooks)                     # (B, K, 16)
+        if self.use_kernel:
+            from repro.kernels.ops import lut16_adc
+            scores = lut16_adc(hp.codes, lut)
+        else:
+            scores = adc_scores_ref(hp.codes, lut)         # (B, V)
+        if token_counts is not None and penalty != 0.0:
+            scores = scores - penalty * token_counts       # hybrid sparse term
+        c1 = min(alpha * k, scores.shape[1])
+        s1, ids1 = jax.lax.top_k(scores, c1)
+
+        # pass 2: int8 residual correction
+        rows = jnp.take(hp.residual.q, ids1, axis=0).astype(jnp.float32)
+        qs = h * hp.residual.scale[None, :]
+        base = 128.0 * qs.sum(-1) + h @ hp.residual.zero
+        corr = jnp.einsum("bcd,bd->bc", rows, qs) + base[:, None]
+        s2 = s1 + corr
+        s2v, pos2 = jax.lax.top_k(s2, min(2 * k, c1))
+        ids2 = jnp.take_along_axis(ids1, pos2, axis=1)
+
+        # pass 3: exact columns for final ranking
+        cols = jnp.take(hp.head, ids2, axis=1)             # (d, B, 2k)
+        exact = jnp.einsum("bd,dbc->bc", h, cols)
+        if token_counts is not None and penalty != 0.0:
+            pen = jnp.take_along_axis(token_counts, ids2, axis=1)
+            exact = exact - penalty * pen
+        s3, pos3 = jax.lax.top_k(exact, k)
+        ids3 = jnp.take_along_axis(ids2, pos3, axis=1)
+        return s3, ids3
+
+    def exact_topk(self, hp: HybridHeadParams, hidden: jax.Array,
+                   token_counts: jax.Array | None, k: int = 50,
+                   penalty: float = 0.0):
+        """Oracle: full-vocab matmul (the thing the paper avoids)."""
+        logits = hidden.astype(jnp.float32) @ hp.head
+        if token_counts is not None and penalty != 0.0:
+            logits = logits - penalty * token_counts
+        return jax.lax.top_k(logits, k)

@@ -1,0 +1,1 @@
+from .trainer import TrainerConfig, Trainer, make_train_step  # noqa: F401

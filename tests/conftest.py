@@ -1,0 +1,22 @@
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+
+@pytest.fixture(scope="session")
+def small_hybrid():
+    """Shared small hybrid dataset with planted neighbors."""
+    from repro.data import make_hybrid_dataset
+    return make_hybrid_dataset(num_points=4000, num_queries=12,
+                               d_sparse=8000, d_dense=32, nnz_per_row=40,
+                               seed=7)
+
+
+@pytest.fixture(scope="session")
+def powerlaw_sparse():
+    rng = np.random.default_rng(0)
+    n, d = 1500, 300
+    pj = np.minimum(1.0, np.arange(1, d + 1) ** -1.5 * 3)
+    mask = rng.random((n, d)) < pj[None, :]
+    vals = (rng.lognormal(0, 1, (n, d)) * mask).astype(np.float32)
+    return sp.csr_matrix(vals)

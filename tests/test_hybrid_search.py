@@ -1,0 +1,102 @@
+"""End-to-end HybridIndex behaviour: recall, residual repair, baselines."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+
+
+@pytest.fixture(scope="module")
+def built(small_hybrid):
+    ds = small_hybrid
+    idx = HybridIndex.build(
+        ds.x_sparse, ds.x_dense,
+        HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6))
+    true_ids, _ = bl.exact_topk(ds.q_sparse, ds.q_dense, ds.x_sparse,
+                                ds.x_dense, 20)
+    return ds, idx, true_ids
+
+
+def test_recall_at_20(built):
+    ds, idx, true_ids = built
+    r = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=20, beta=5)
+    assert bl.recall_at_h(r.ids, true_ids) >= 0.85
+
+
+def test_residual_reorder_improves_recall(built):
+    """Pass-1-only candidates vs full 3-pass (paper §5's point)."""
+    ds, idx, true_ids = built
+    r = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=3, beta=2,
+                   return_pass1=True)
+    full = bl.recall_at_h(r.ids, true_ids)
+    pass1 = bl.recall_at_h(r.pass1_ids[:, :20], true_ids)
+    assert full >= pass1
+
+
+def test_alpha_monotone(built):
+    """Recall@h is non-decreasing in the overfetch alpha (Prop. 4 flavor)."""
+    ds, idx, true_ids = built
+    recs = []
+    for alpha in (2, 8, 24):
+        r = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=alpha, beta=5)
+        recs.append(bl.recall_at_h(r.ids, true_ids))
+    assert recs[-1] >= recs[0] - 0.02
+
+
+def test_refined_scores_near_exact(built):
+    """After all 3 passes scores should match exact inner products up to the
+    int8 dense-residual quantization error."""
+    ds, idx, true_ids = built
+    r = idx.search(ds.q_sparse, ds.q_dense, h=5, alpha=20, beta=10)
+    exact = idx.exact_scores(ds.q_sparse, ds.q_dense, ds.x_sparse, ds.x_dense)
+    got = r.scores
+    want = np.take_along_axis(exact, r.ids, axis=1)
+    assert np.abs(got - want).max() < 0.15 * max(np.abs(want).max(), 1.0)
+
+
+def test_hybrid_beats_single_modality(built):
+    """The paper's core claim: neither sparse-only nor dense-only retrieval
+    reaches hybrid recall when signal lives in both components."""
+    ds, idx, true_ids = built
+    r = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=20, beta=5)
+    hybrid_rec = bl.recall_at_h(r.ids, true_ids)
+    sparse_only = bl.sparse_only(ds.q_sparse, ds.q_dense, ds.x_sparse,
+                                 ds.x_dense, 20)
+    dense_only = bl.dense_pq_reorder(ds.q_sparse, ds.q_dense, ds.x_sparse,
+                                     ds.x_dense, 20, overfetch=100)
+    assert hybrid_rec >= bl.recall_at_h(sparse_only.ids, true_ids) - 0.05
+    assert hybrid_rec >= bl.recall_at_h(dense_only.ids, true_ids) - 0.05
+
+
+def test_baselines_exact_methods_perfect(small_hybrid):
+    ds = small_hybrid
+    true_ids, _ = bl.exact_topk(ds.q_sparse, ds.q_dense, ds.x_sparse,
+                                ds.x_dense, 10)
+    for fn in (bl.dense_brute_force, bl.sparse_brute_force):
+        res = fn(ds.q_sparse, ds.q_dense, ds.x_sparse, ds.x_dense, 10)
+        assert bl.recall_at_h(res.ids, true_ids) == 1.0
+    res = bl.sparse_inverted_index(ds.q_sparse[:3], ds.q_dense[:3],
+                                   ds.x_sparse, ds.x_dense, 10)
+    assert bl.recall_at_h(res.ids, true_ids[:3]) == 1.0
+
+
+def test_hamming_baseline_runs(small_hybrid):
+    ds = small_hybrid
+    res = bl.hamming512(ds.q_sparse, ds.q_dense, ds.x_sparse, ds.x_dense,
+                        10, overfetch=500)
+    assert res.ids.shape == (ds.q_sparse.shape[0], 10)
+
+
+def test_kernel_path_matches_ref_path(small_hybrid):
+    """use_lut16_kernel=True must retrieve the same ids."""
+    ds = small_hybrid
+    a = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                          HybridIndexParams(keep_top=48, kmeans_iters=4,
+                                            use_lut16_kernel=False))
+    b = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                          HybridIndexParams(keep_top=48, kmeans_iters=4,
+                                            use_lut16_kernel=True))
+    ra = a.search(ds.q_sparse[:4], ds.q_dense[:4], h=10)
+    rb = b.search(ds.q_sparse[:4], ds.q_dense[:4], h=10)
+    assert (ra.ids == rb.ids).mean() > 0.95

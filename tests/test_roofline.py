@@ -1,0 +1,62 @@
+"""Roofline analysis unit tests (HLO parsing, model flops accounting)."""
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import collective_bytes_from_hlo, model_flops
+from repro.roofline.analysis import _shape_bytes, count_params
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[2,3]{1,0}") == 12
+    assert _shape_bytes("u8[100]") == 100
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_collective_parse():
+    hlo = """
+      %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+      %ag = bf16[256,64]{1,0} all-gather(%y), dimensions={0}
+      %rs.2 = f32[8]{0} reduce-scatter(%z)
+      %done = f32[16,128]{1,0} all-reduce-done(%w)
+      %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%p, %q)
+    """
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 256 * 64 * 2
+    assert out["reduce-scatter"] == 32
+    assert out["all-to-all"] == 2 * 16 * 4
+    assert out["count"] == 4
+
+
+def test_count_params_orders_of_magnitude():
+    """Analytic param counts should land near the published model sizes."""
+    total, active = count_params(get_config("qwen2-7b"))
+    assert 6e9 < total < 9e9
+    total, active = count_params(get_config("deepseek-67b"))
+    assert 55e9 < total < 75e9
+    total, active = count_params(get_config("qwen3-moe-235b-a22b"))
+    assert 180e9 < total < 260e9
+    assert 15e9 < active < 30e9           # A22B
+    total, active = count_params(get_config("mamba2-780m"))
+    assert 0.5e9 < total < 1.1e9
+
+
+def test_model_flops_scaling():
+    cfg = get_config("qwen2-7b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    f_decode = model_flops(cfg, SHAPES["decode_32k"])
+    # train does fwd+bwd (~3x fwd) on 4k x 256; prefill fwd on 32k x 32
+    assert f_train > f_prefill > f_decode
+    # decode is ~2*N_active*B plus attention reads
+    _, active = count_params(cfg)
+    assert f_decode > 2 * active * 128
+
+
+def test_moe_flops_use_active_params():
+    dense = model_flops(get_config("deepseek-67b"), SHAPES["train_4k"])
+    moe = model_flops(get_config("qwen3-moe-235b-a22b"), SHAPES["train_4k"])
+    # 235B total but ~22B active: train flops must be far below a 67B dense
+    assert moe < dense

@@ -1,0 +1,56 @@
+"""End-to-end system behaviour: the paper's full pipeline on synthetic data
+mirroring its public-dataset experiment (Table 2 shape), plus the LM-serving
+integration."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.data import make_hybrid_dataset
+
+
+def test_table2_style_pipeline():
+    """Netflix/Movielens-style: hybrid index beats LSH-style hashing and
+    matches exact methods' recall within tolerance, end to end."""
+    ds = make_hybrid_dataset(num_points=3000, num_queries=10, d_sparse=5000,
+                             d_dense=32, nnz_per_row=32, seed=11)
+    true_ids, _ = bl.exact_topk(ds.q_sparse, ds.q_dense, ds.x_sparse,
+                                ds.x_dense, 20)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                            HybridIndexParams(keep_top=48, kmeans_iters=5))
+    r = idx.search(ds.q_sparse, ds.q_dense, h=20)
+    hybrid = bl.recall_at_h(r.ids, true_ids)
+    ham = bl.hamming512(ds.q_sparse, ds.q_dense, ds.x_sparse, ds.x_dense, 20,
+                        overfetch=200)
+    assert hybrid >= 0.85
+    assert hybrid >= bl.recall_at_h(ham.ids, true_ids)
+
+
+def test_searcher_handles_queries_with_unseen_dims():
+    ds = make_hybrid_dataset(num_points=1000, num_queries=4, d_sparse=3000,
+                             d_dense=16, nnz_per_row=16, seed=3)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                            HybridIndexParams(keep_top=32, kmeans_iters=3))
+    # shift query dims so many are absent from the shard's compact space
+    import scipy.sparse as sp
+    q = ds.q_sparse.tocoo()
+    q = sp.csr_matrix((q.data, (q.row, (q.col + 2500) % 3000)),
+                      shape=q.shape)
+    r = idx.search(q, ds.q_dense, h=5)
+    assert r.ids.shape == (4, 5)
+    assert np.isfinite(r.scores).all()
+
+
+def test_empty_sparse_queries():
+    ds = make_hybrid_dataset(num_points=500, num_queries=3, d_sparse=1000,
+                             d_dense=16, nnz_per_row=8, seed=5)
+    import scipy.sparse as sp
+    empty_q = sp.csr_matrix((3, 1000), dtype=np.float32)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                            HybridIndexParams(keep_top=16, kmeans_iters=3))
+    r = idx.search(empty_q, ds.q_dense, h=5)
+    # dense-only ranking still returns sane results
+    true_ids, _ = bl.exact_topk(empty_q, ds.q_dense, ds.x_sparse, ds.x_dense,
+                                5)
+    assert bl.recall_at_h(r.ids, true_ids) > 0.5
