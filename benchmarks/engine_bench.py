@@ -1,0 +1,100 @@
+"""Engine benchmark: host-driven three-pass loop vs the single-jit
+ScoringEngine on the kernels_bench-scale workload.
+
+Emits CSV rows like the other benchmark modules AND writes
+``BENCH_engine.json`` (QPS for both paths + speedup) so the perf trajectory
+of the engine layer is tracked across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import residual as res
+from repro.core.engine import scatter_queries_compact
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.core.pq import adc_lut, adc_scores_ref
+from repro.core.sparse_index import (queries_head_dense, score_head_ref,
+                                     score_inverted, sparse_queries_to_padded)
+from repro.data import make_hybrid_dataset
+
+from .common import emit, timeit
+
+OUT_JSON = "BENCH_engine.json"
+
+
+def _host_loop_search(idx: HybridIndex, q_dims_np, q_vals_np, q_dense,
+                      h: int, alpha: int, beta: int):
+    """The pre-engine HybridIndex.search, verbatim: the host drives one
+    dispatch per pass (plus a numpy head-query scatter per call) instead of
+    the engine's single fused jit."""
+    c1 = min(max(alpha * h, h), idx.num_points)
+    c2 = min(max(beta * h, h), c1)
+    q_dims, q_vals = jnp.asarray(q_dims_np), jnp.asarray(q_vals_np)
+
+    sparse_scores = score_inverted(idx.inv_index, q_dims, q_vals)
+    if idx.head is not None:
+        q_head = jnp.asarray(queries_head_dense(
+            q_dims_np, q_vals_np, idx.head_dim_ids, idx.head.block.shape[1]))
+        head_scores = score_head_ref(idx.head, q_head)
+        sparse_scores = sparse_scores + head_scores[:, : idx.num_points]
+    lut = adc_lut(q_dense, idx.codebooks)
+    approx = sparse_scores + adc_scores_ref(idx.codes, lut)
+    s1, ids1 = res.topk_candidates(approx, c1)
+
+    extra_d = res.dense_residual_scores(idx.dense_residual, ids1, q_dense)
+    s2, ids2 = res.reorder_pass(s1, ids1, extra_d, c2)
+
+    q_cols = scatter_queries_compact(q_dims, q_vals, idx.cols.num_active)
+    extra_s = res.sparse_residual_scores(idx.sparse_residual, ids2, q_cols)
+    s3, ids3 = res.reorder_pass(s2, ids2, extra_s, h)
+    return np.asarray(s3), np.asarray(ids3)
+
+
+def main():
+    ds = make_hybrid_dataset(num_points=20000, num_queries=32,
+                             d_sparse=20000, d_dense=64, nnz_per_row=48,
+                             seed=3)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                            HybridIndexParams(keep_top=96, head_dims=64,
+                                              kmeans_iters=6))
+    h, alpha, beta = 20, 20, 5
+    q_dense = jnp.asarray(ds.q_dense)
+    q_dims_np, q_vals_np = sparse_queries_to_padded(
+        ds.q_sparse, idx.cols, nq_max=idx.params.nq_max)
+    q_dims, q_vals = jnp.asarray(q_dims_np), jnp.asarray(q_vals_np)
+    nq = ds.q_sparse.shape[0]
+
+    def run_engine():
+        s, i, _ = idx.engine.search(q_dims, q_vals, q_dense,
+                                    h=h, alpha=alpha, beta=beta)
+        return np.asarray(s), np.asarray(i)
+
+    def run_host():
+        return _host_loop_search(idx, q_dims_np, q_vals_np, q_dense,
+                                 h, alpha, beta)
+
+    run_engine()  # jit warmup
+    run_host()
+    s_eng, _ = timeit(run_engine, repeat=9)
+    s_host, _ = timeit(run_host, repeat=9)
+
+    qps_eng = nq / s_eng
+    qps_host = nq / s_host
+    emit("engine_host_loop", s_host / nq * 1e6, f"qps={qps_host:.1f}")
+    emit("engine_single_jit", s_eng / nq * 1e6,
+         f"qps={qps_eng:.1f};speedup={s_host / s_eng:.2f}x")
+
+    with open(OUT_JSON, "w") as f:
+        json.dump({"workload": "kernels_bench",
+                   "num_points": idx.num_points, "num_queries": nq,
+                   "h": h, "alpha": alpha, "beta": beta,
+                   "host_loop_qps": qps_host, "engine_qps": qps_eng,
+                   "speedup": qps_eng / qps_host}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

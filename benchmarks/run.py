@@ -11,13 +11,17 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,fig4,kernels,roofline")
+                    help="comma list: table2,table3,fig4,kernels,engine,"
+                         "roofline")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only
-             else ["fig4", "kernels", "table2", "table3", "roofline"])
-    from . import fig4, kernels_bench, roofline_table, table2, table3
+             else ["fig4", "kernels", "engine", "table2", "table3",
+                   "roofline"])
+    from . import (engine_bench, fig4, kernels_bench, roofline_table, table2,
+                   table3)
     mods = {"table2": table2, "table3": table3, "fig4": fig4,
-            "kernels": kernels_bench, "roofline": roofline_table}
+            "kernels": kernels_bench, "engine": engine_bench,
+            "roofline": roofline_table}
     print("name,us_per_call,derived")
     for n in names:
         mods[n].main()

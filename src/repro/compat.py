@@ -1,0 +1,34 @@
+"""Shims over jax API surfaces that moved between releases.
+
+The repo targets the current `jax.shard_map` / `jax.sharding.AxisType`
+surface; older jax (e.g. 0.4.x, which this container ships) exposes the same
+functionality as `jax.experimental.shard_map.shard_map(..., check_rep=...)`
+and has no AxisType.  Keeping the fallback here means every call site stays
+written against the modern API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis_types where the installed jax has them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map, falling back to jax.experimental.shard_map (pre-0.5
+    spelling: positional mesh, check_rep instead of check_vma)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -2,12 +2,21 @@
 shard each, merge results) mapped to JAX shard_map over the mesh 'data' axis.
 
 Each device owns a row-shard of every row-parallel index structure (PQ codes,
-inverted-index, head block, residuals).  A query batch is replicated; every
-device scores its shard and keeps a local top-k; only (k × num_shards)
-candidates cross the network (all_gather), never the index — the same
-communication pattern as the paper's RPC fan-out.
+inverted-index, residuals).  A query batch is replicated; every device scores
+its shard and keeps a local top-k; only (k × num_shards) candidates cross the
+network (all_gather), never the index — the same communication pattern as the
+paper's RPC fan-out.
 
-The same function lowers at ShapeDtypeStruct scale (1e9 rows across 512
+All scoring routes through core/engine.py (one implementation of the paper's
+scorer); this module only adds the shard_map plumbing:
+
+* ``make_sharded_search_fn``  — pass-1 only (approximate scores + merge);
+* ``make_sharded_search3_fn`` — the FULL three-pass search per shard (pass 1
+  approx → pass 2 dense residual → pass 3 sparse residual, each shard refining
+  its own candidates against its local residual rows — the paper's per-server
+  reordering) followed by one all_gather merge of the refined top-h.
+
+The same functions lower at ShapeDtypeStruct scale (1e9 rows across 512
 devices) in launch/dryrun.py.
 """
 
@@ -17,10 +26,17 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["sharded_pass1_topk", "make_sharded_search_fn", "merge_topk"]
+from repro import compat
+
+from . import engine as eng
+from . import residual as res
+from .pq import ScalarQuant
+from .sparse_index import PaddedInvertedIndex, PaddedSparseRows, score_inverted
+
+__all__ = ["sharded_pass1_topk", "make_sharded_search_fn",
+           "make_sharded_search3_fn", "sharded_three_pass_topk", "merge_topk"]
 
 
 def merge_topk(scores: jax.Array, ids: jax.Array, k: int):
@@ -29,40 +45,22 @@ def merge_topk(scores: jax.Array, ids: jax.Array, k: int):
     return vals, jnp.take_along_axis(ids, pos, axis=1)
 
 
-def _pass1_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals, row_offset,
-                 *, k: int, axis: str, adc: str = "gather"):
-    """Runs on one shard (inside shard_map): approximate hybrid scores for the
-    local rows, local top-k, then all_gather the candidate sets."""
+def _pass1_scores_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals,
+                        backend: eng.Backend):
+    """Approximate hybrid scores for the local row-shard, via the engine."""
     n_local = codes.shape[0]
-    if adc == "onehot":
-        # MXU path (the LUT16 kernel's contraction, expressed in jnp): codes
-        # expand to one-hot and contract against the LUT as a single matmul —
-        # no (Q, N, K) gather intermediate, systolic-friendly on TPU.
-        l = lut.shape[-1]
-        onehot = (codes[:, :, None] ==
-                  jnp.arange(l, dtype=codes.dtype)).astype(jnp.bfloat16)
-        dense_scores = jax.lax.dot_general(
-            lut.reshape(lut.shape[0], -1).astype(jnp.bfloat16),
-            onehot.reshape(n_local, -1),
-            (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)         # (Q, n_local)
-    else:
-        # gather form (CPU-friendly reference path)
-        gathered = jnp.take_along_axis(
-            lut[:, None], codes[None, :, :, None].astype(jnp.int32), axis=3
-        )[..., 0]                                       # (Q, n_local, K)
-        dense_scores = gathered.sum(axis=-1)
+    inv = PaddedInvertedIndex(rows=inv_rows, vals=inv_vals,
+                              num_points=n_local)
+    return (eng.adc_scores(codes, lut, backend)
+            + score_inverted(inv, q_dims, q_vals))
 
-    # sparse inverted-index accumulation on the local shard
-    qn, nq = q_dims.shape
-    rows_g = jnp.take(inv_rows, q_dims, axis=0, mode="fill", fill_value=n_local)
-    vals_g = jnp.take(inv_vals, q_dims, axis=0, mode="fill", fill_value=0.0)
-    acc = jnp.zeros((qn, n_local), jnp.float32)
-    qidx = jnp.broadcast_to(jnp.arange(qn)[:, None, None], rows_g.shape)
-    sparse_scores = acc.at[qidx, rows_g].add(vals_g * q_vals[:, :, None],
-                                             mode="drop")
 
-    scores = dense_scores + sparse_scores
+def _pass1_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals, row_offset,
+                 *, k: int, axis: str, backend: eng.Backend):
+    """Runs on one shard (inside shard_map): engine pass-1 scores for the
+    local rows, local top-k, then all_gather the candidate sets."""
+    scores = _pass1_scores_local(codes, lut, inv_rows, inv_vals,
+                                 q_dims, q_vals, backend)
     local_s, local_i = jax.lax.top_k(scores, k)
     local_i = local_i + row_offset[0]                  # globalize ids
     all_s = jax.lax.all_gather(local_s, axis, axis=1, tiled=True)  # (Q, S*k)
@@ -79,13 +77,14 @@ def make_sharded_search_fn(mesh: Mesh, *, k: int, axis: str = "data",
     q_vals, row_offset) -> (scores (Q,k), global ids (Q,k)).
 
     row_offset: (num_shards,) int32 — global row id of each shard's first row.
-    adc: "gather" (reference) or "onehot" (MXU contraction — the LUT16
-    kernel's algorithm; the TPU-native fast path).
+    adc: an engine Backend name — "ref"/"gather" (reference), "onehot"/
+    "onehot-mxu" (MXU contraction), or "pallas" (LUT16 kernel).
     """
+    backend = eng.Backend.from_name(adc)
     spec_rows = P(axis)        # row-sharded index structures
     spec_rep = P()             # replicated queries
-    fn = jax.shard_map(
-        functools.partial(_pass1_local, k=k, axis=axis, adc=adc),
+    fn = compat.shard_map(
+        functools.partial(_pass1_local, k=k, axis=axis, backend=backend),
         mesh=mesh,
         in_specs=(spec_rows, spec_rep, P(axis, None), P(axis, None),
                   spec_rep, spec_rep, P(axis)),
@@ -96,16 +95,103 @@ def make_sharded_search_fn(mesh: Mesh, *, k: int, axis: str = "data",
 
 
 def sharded_pass1_topk(mesh: Mesh, codes, lut, inv_rows, inv_vals, q_dims,
-                       q_vals, *, k: int, axis: str = "data"):
-    """Convenience wrapper: shards the inputs, runs the search.
+                       q_vals, *, k: int, axis: str = "data",
+                       adc: str = "gather"):
+    """Convenience wrapper: shards the inputs, runs the pass-1 search.
 
     NOTE inv_rows/inv_vals must be *per-shard stacked*: shape
-    (num_shards * d_active_shard, L) where each shard's slice holds row ids
+    (num_shards * d_active, L) where each shard's slice holds row ids
     local to that shard.  ``row_offset`` is derived from equal row sharding.
     """
     num_shards = mesh.shape[axis]
     n = codes.shape[0]
     assert n % num_shards == 0
     row_offset = jnp.arange(num_shards, dtype=jnp.int32) * (n // num_shards)
-    fn = make_sharded_search_fn(mesh, k=k, axis=axis)
+    fn = make_sharded_search_fn(mesh, k=k, axis=axis, adc=adc)
     return fn(codes, lut, inv_rows, inv_vals, q_dims, q_vals, row_offset)
+
+
+# ---------------------------------------------------------------------------
+# Full three-pass sharded search (paper §7.2: every server refines locally,
+# the coordinator merges refined top-h)
+# ---------------------------------------------------------------------------
+
+def _search3_local(codes, lut, inv_rows, inv_vals, res_q, res_scale, res_zero,
+                   sres_cols, sres_vals, q_dims, q_vals, q_dense, q_cols,
+                   row_offset, *, h: int, alpha: int, beta: int, axis: str,
+                   backend: eng.Backend):
+    """One shard's full three-pass search; candidate counts are per-shard so
+    every server does the paper's reordering on its own rows."""
+    n_local = codes.shape[0]
+    c1 = min(max(alpha * h, h), n_local)
+    c2 = min(max(beta * h, h), c1)
+
+    # pass 1: approximate scores over the local rows, overfetch c1
+    approx = _pass1_scores_local(codes, lut, inv_rows, inv_vals,
+                                 q_dims, q_vals, backend)
+    s1, ids1 = jax.lax.top_k(approx, c1)
+
+    # pass 2: + local dense residual rows, keep c2
+    sq = ScalarQuant(q=res_q, scale=res_scale, zero=res_zero)
+    extra_d = res.dense_residual_scores(sq, ids1, q_dense)
+    s2, ids2 = res.reorder_pass(s1, ids1, extra_d, c2)
+
+    # pass 3: + local sparse residual rows, local top-h
+    rows = PaddedSparseRows(cols=sres_cols, vals=sres_vals)
+    extra_s = res.sparse_residual_scores(rows, ids2, q_cols)
+    s3, ids3 = res.reorder_pass(s2, ids2, extra_s, h)
+
+    ids3 = ids3 + row_offset[0]                        # globalize ids
+    all_s = jax.lax.all_gather(s3, axis, axis=1, tiled=True)   # (Q, S*h)
+    all_i = jax.lax.all_gather(ids3, axis, axis=1, tiled=True)
+    return merge_topk(all_s, all_i, h)
+
+
+def make_sharded_search3_fn(mesh: Mesh, *, h: int, alpha: int = 20,
+                            beta: int = 5, axis: str = "data",
+                            adc: str = "gather"):
+    """Build the jit-able sharded THREE-pass search.
+
+    Row-sharded over `axis`: codes (N, K), inv_rows/inv_vals (per-shard
+    stacked, see sharded_pass1_topk), res_q (N, d^D) int8 dense-residual rows,
+    sres_cols/sres_vals (N, R) padded sparse-residual rows.  Replicated: lut,
+    res_scale/res_zero, q_dims/q_vals, q_dense (Q, d^D), q_cols
+    (Q, d_active + 1) — the padded sparse queries scattered into the compact
+    column space (engine.scatter_queries_compact).  row_offset: (S,) int32.
+
+    Returns fn(...) -> (scores (Q, h), global ids (Q, h)).
+    """
+    backend = eng.Backend.from_name(adc)
+    rows = P(axis)
+    rep = P()
+    fn = compat.shard_map(
+        functools.partial(_search3_local, h=h, alpha=alpha, beta=beta,
+                          axis=axis, backend=backend),
+        mesh=mesh,
+        in_specs=(rows, rep, P(axis, None), P(axis, None),   # codes, lut, inv
+                  rows, rep, rep,                            # dense residual
+                  rows, rows,                                # sparse residual
+                  rep, rep, rep, rep,                        # queries
+                  P(axis)),                                  # row_offset
+        out_specs=(rep, rep),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_three_pass_topk(mesh: Mesh, codes, lut, inv_rows, inv_vals,
+                            res_q, res_scale, res_zero, sres_cols, sres_vals,
+                            q_dims, q_vals, q_dense, q_cols, *, h: int,
+                            alpha: int = 20, beta: int = 5,
+                            axis: str = "data", adc: str = "gather"):
+    """Convenience wrapper: derives row_offset from equal row sharding and
+    runs the full three-pass fan-out search."""
+    num_shards = mesh.shape[axis]
+    n = codes.shape[0]
+    assert n % num_shards == 0
+    row_offset = jnp.arange(num_shards, dtype=jnp.int32) * (n // num_shards)
+    fn = make_sharded_search3_fn(mesh, h=h, alpha=alpha, beta=beta, axis=axis,
+                                 adc=adc)
+    return fn(codes, lut, inv_rows, inv_vals, res_q, res_scale, res_zero,
+              sres_cols, sres_vals, q_dims, q_vals, q_dense, q_cols,
+              row_offset)

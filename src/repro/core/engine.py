@@ -1,0 +1,255 @@
+"""Device-resident three-pass scoring engine (the paper's full search loop).
+
+One layer owns the paper's scorer instead of three call-site copies
+(HybridIndex.search, distributed._pass1_local, serve/hybrid_head):
+
+* ``IndexArrays`` — a pytree-registered dataclass holding every
+  device-resident index structure: PQ codes + LUT-ready codebooks, the padded
+  inverted index, the tile head both as a dense block (ref path) and in BCSR
+  form (Pallas path), the int8 dense residual and the padded sparse residual.
+  Being a pytree it moves through ``jax.jit`` / ``shard_map`` / donation as a
+  single argument.
+
+* ``ScoringEngine`` — runs the ENTIRE three-pass search (pass 1 approximate
+  sparse+dense scores → pass 2 dense residual → pass 3 sparse residual, with
+  ``lax.top_k`` between passes) as ONE jitted function: no host transfer or
+  dispatch between passes.
+
+* ``Backend`` — pluggable scoring backend:
+    ref        pure-jnp gather ADC + dense head matmul (bit-tight oracle)
+    onehot-mxu MXU one-hot contraction ADC (kernels/ops.lut16_adc_onehot)
+    pallas     LUT16 + block-sparse Pallas kernels (kernels/ops)
+
+Call sites: core/hybrid.py (build/permute wrapper), core/distributed.py
+(shard_map over pass-1 and the full three-pass refinement), and
+serve/hybrid_head.py (ADC + residual reorder over an LM head).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import residual as res
+from .pq import PQCodebooks, ScalarQuant, adc_lut, adc_scores_ref
+from .sparse_index import (PaddedInvertedIndex, PaddedSparseRows,
+                           TileSparseHead, score_head_ref, score_inverted)
+
+__all__ = [
+    "Backend", "IndexArrays", "ScoringEngine", "adc_scores",
+    "scatter_queries_compact", "scatter_head_queries", "pass1_scores",
+    "three_pass_search",
+]
+
+
+class Backend(enum.Enum):
+    """Which implementation scores pass 1 (dense ADC + head block)."""
+    REF = "ref"
+    ONEHOT = "onehot-mxu"
+    PALLAS = "pallas"
+
+    @classmethod
+    def from_name(cls, name: "Backend | str | None") -> "Backend":
+        if name is None:
+            return cls.REF
+        if isinstance(name, Backend):
+            return name
+        aliases = {"ref": cls.REF, "gather": cls.REF,
+                   "onehot": cls.ONEHOT, "onehot-mxu": cls.ONEHOT,
+                   "pallas": cls.PALLAS, "lut16": cls.PALLAS}
+        try:
+            return aliases[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {name!r}; expected one of {sorted(aliases)}"
+            ) from None
+
+
+def adc_scores(codes: jax.Array, lut: jax.Array,
+               backend: Backend = Backend.REF) -> jax.Array:
+    """Dense ADC scan (N, K) codes × (Q, K, l) LUT -> (Q, N), by backend."""
+    if backend is Backend.PALLAS:
+        from repro.kernels.ops import lut16_adc
+        return lut16_adc(codes, lut)
+    if backend is Backend.ONEHOT:
+        from repro.kernels.ops import lut16_adc_onehot
+        return lut16_adc_onehot(codes, lut)
+    return adc_scores_ref(codes, lut)
+
+
+# ---------------------------------------------------------------------------
+# IndexArrays — everything search needs, resident on device
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IndexArrays:
+    codebooks: PQCodebooks             # LUT-ready PQ codebooks (K, l, p)
+    codes: jax.Array                   # (N, K) uint8 PQ codes
+    inv_index: PaddedInvertedIndex     # tail dims of the pruned data index
+    head: TileSparseHead | None        # head dims (None => no head block)
+    head_pos: jax.Array                # (d_active+1,) compact dim -> head slot
+    head_tiles: jax.Array              # BCSR tiles (T, Br, Bc) of the head
+    head_ptr: jax.Array                # (N_pad/Br + 1,) int32
+    head_col: jax.Array                # (T,) int32
+    dense_residual: ScalarQuant        # int8 residual of the dense component
+    sparse_residual: PaddedSparseRows  # eps-pruned sparse residual rows
+    num_points: int = dataclasses.field(metadata=dict(static=True))
+    d_active: int = dataclasses.field(metadata=dict(static=True))
+    head_max_steps: int = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def build(cls, *, codebooks: PQCodebooks, codes: jax.Array,
+              inv_index: PaddedInvertedIndex, head: TileSparseHead | None,
+              dense_residual: ScalarQuant, sparse_residual: PaddedSparseRows,
+              num_points: int, d_active: int,
+              with_bcsr: bool = True) -> "IndexArrays":
+        """Host-side assembly: derives the head query scatter table and the
+        BCSR form once, so search never leaves the device.
+
+        with_bcsr=False skips the BCSR conversion (build time + HBM) for
+        engines that never take the Pallas head path; _head_scores falls back
+        to the dense matmul when the tiles are absent."""
+        pos = np.full(d_active + 1, 0, np.int32)
+        tiles = jnp.zeros((1, 1, 1), jnp.float32)
+        ptr = jnp.zeros((2,), jnp.int32)
+        col = jnp.zeros((1,), jnp.int32)
+        max_steps = 0
+        if head is not None:
+            d_head_pad = head.block.shape[1]
+            pos = np.full(d_active + 1, d_head_pad, np.int32)
+            hd = np.asarray(head.head_dims)
+            valid = np.flatnonzero(hd >= 0)
+            pos[hd[valid]] = valid.astype(np.int32)
+            if with_bcsr:
+                from repro.kernels.ops import bcsr_from_head
+                tiles, ptr, col, max_steps = bcsr_from_head(head)
+        return cls(codebooks=codebooks, codes=codes, inv_index=inv_index,
+                   head=head, head_pos=jnp.asarray(pos), head_tiles=tiles,
+                   head_ptr=ptr, head_col=col, dense_residual=dense_residual,
+                   sparse_residual=sparse_residual, num_points=num_points,
+                   d_active=d_active, head_max_steps=max_steps)
+
+
+# ---------------------------------------------------------------------------
+# Jittable building blocks
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(2,))
+def scatter_queries_compact(q_dims: jax.Array, q_vals: jax.Array,
+                            d_active: int) -> jax.Array:
+    """(Q, nq) padded sparse queries -> (Q, d_active + 1) dense w/ pad slot."""
+    qn = q_dims.shape[0]
+    out = jnp.zeros((qn, d_active + 1), jnp.float32)
+    qidx = jnp.arange(qn)[:, None]
+    out = out.at[jnp.broadcast_to(qidx, q_dims.shape), q_dims].add(
+        q_vals, mode="drop")
+    return out.at[:, d_active].set(0.0)
+
+
+def scatter_head_queries(q_dims: jax.Array, q_vals: jax.Array,
+                         head_pos: jax.Array, d_head_pad: int) -> jax.Array:
+    """Scatter padded sparse queries into the dense head subspace on device.
+
+    head_pos maps compact dim ids (plus the pad sentinel d_active) to head
+    slots; non-head dims map to the trailing pad slot, sliced off."""
+    qn = q_dims.shape[0]
+    pos = jnp.take(head_pos, q_dims, axis=0, mode="clip")       # (Q, nq)
+    out = jnp.zeros((qn, d_head_pad + 1), jnp.float32)
+    qidx = jnp.arange(qn)[:, None]
+    out = out.at[jnp.broadcast_to(qidx, pos.shape), pos].add(
+        q_vals, mode="drop")
+    return out[:, :d_head_pad]
+
+
+def _head_scores(arrays: IndexArrays, q_head: jax.Array,
+                 backend: Backend) -> jax.Array:
+    # head_max_steps == 0 marks arrays built without BCSR (with_bcsr=False);
+    # fall back to the dense matmul, which is always correct
+    if backend is Backend.PALLAS and arrays.head_max_steps > 0:
+        from repro.kernels.ops import block_sparse_matmul_bcsr
+        return block_sparse_matmul_bcsr(
+            q_head, arrays.head_tiles, arrays.head_ptr, arrays.head_col,
+            max_steps=arrays.head_max_steps)
+    return score_head_ref(arrays.head, q_head)
+
+
+def pass1_scores(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
+                 lut: jax.Array, backend: Backend = Backend.REF) -> jax.Array:
+    """Pass-1 approximate hybrid scores over the full (local) shard:
+    inverted-index sparse + head-block sparse + LUT ADC dense.  (Q, N)."""
+    sparse = score_inverted(arrays.inv_index, q_dims, q_vals)
+    if arrays.head is not None:
+        q_head = scatter_head_queries(q_dims, q_vals, arrays.head_pos,
+                                      arrays.head.block.shape[1])
+        head_s = _head_scores(arrays, q_head, backend)
+        sparse = sparse + head_s[:, : arrays.num_points]
+    dense = adc_scores(arrays.codes, lut, backend)
+    return sparse + dense
+
+
+@partial(jax.jit, static_argnames=("h", "c1", "c2", "backend"))
+def three_pass_search(arrays: IndexArrays, q_dims: jax.Array,
+                      q_vals: jax.Array, q_dense: jax.Array, *, h: int,
+                      c1: int, c2: int, backend: Backend = Backend.REF):
+    """The paper's full search as ONE jitted function — no host sync between
+    passes.  Returns (scores (Q, h), ids (Q, h), pass1 ids (Q, c1)); ids are
+    positions in cache-sorted row order (callers map through pi)."""
+    lut = adc_lut(q_dense, arrays.codebooks)
+
+    # pass 1: approximate scores on the full shard, overfetch c1
+    approx = pass1_scores(arrays, q_dims, q_vals, lut, backend)
+    s1, ids1 = res.topk_candidates(approx, c1)
+
+    # pass 2: + dense residual, keep c2
+    extra_d = res.dense_residual_scores(arrays.dense_residual, ids1, q_dense)
+    s2, ids2 = res.reorder_pass(s1, ids1, extra_d, c2)
+
+    # pass 3: + sparse residual, return h
+    q_cols = scatter_queries_compact(q_dims, q_vals, arrays.d_active)
+    extra_s = res.sparse_residual_scores(arrays.sparse_residual, ids2, q_cols)
+    s3, ids3 = res.reorder_pass(s2, ids2, extra_s, h)
+    return s3, ids3, ids1
+
+
+# ---------------------------------------------------------------------------
+# ScoringEngine — thin stateful façade over the jitted search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScoringEngine:
+    """Owns the device-resident index + backend choice.
+
+    ``search`` resolves the per-pass candidate counts (static ints, so each
+    (h, alpha, beta) pair compiles once) and dispatches the single-jit
+    three-pass search."""
+    arrays: IndexArrays
+    backend: Backend = Backend.REF
+
+    @property
+    def num_points(self) -> int:
+        return self.arrays.num_points
+
+    def candidate_counts(self, h: int, alpha: int, beta: int) -> tuple[int, int]:
+        c1 = min(max(alpha * h, h), self.num_points)
+        c2 = min(max(beta * h, h), c1)
+        return c1, c2
+
+    def search(self, q_dims: jax.Array, q_vals: jax.Array,
+               q_dense: jax.Array, *, h: int, alpha: int, beta: int):
+        """Three-pass device search.  Returns (scores, ids, pass1_ids) in
+        cache-sorted row positions."""
+        c1, c2 = self.candidate_counts(h, alpha, beta)
+        return three_pass_search(self.arrays, q_dims, q_vals, q_dense,
+                                 h=h, c1=c1, c2=c2, backend=self.backend)
+
+    def pass1_topk(self, q_dims: jax.Array, q_vals: jax.Array,
+                   lut: jax.Array, k: int):
+        """Pass-1-only local top-k (the distributed fan-out building block)."""
+        scores = pass1_scores(self.arrays, q_dims, q_vals, lut, self.backend)
+        return res.topk_candidates(scores, k)

@@ -9,33 +9,31 @@ Build:
   4. dense data index: PQ, K_U = d^D/2 subspaces, l = 16 (LUT16 kernel path).
   5. dense residual index: int8 scalar quantization (K_V = d^D, l = 256).
 
-Search (batch of hybrid queries):
-  pass 1: approx = head-block + inverted-index sparse score + LUT16 dense ADC,
-          overfetch alpha*h;
-  pass 2: + dense residual, keep beta*h;
-  pass 3: + sparse residual, return top h.
+Search (batch of hybrid queries) is delegated to core/engine.py's
+ScoringEngine: the entire three-pass loop (pass 1 approx overfetch alpha*h,
+pass 2 + dense residual keep beta*h, pass 3 + sparse residual return top h)
+runs as one jitted device function; this class only converts queries to the
+padded device layout and maps result positions back to original ids.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
 
-from . import residual as res
 from .cache_sort import cache_sort, dimension_activity
-from .pq import (PQCodebooks, ScalarQuant, adc_lut, adc_scores_ref, pq_decode,
-                 pq_encode, scalar_quantize, train_codebooks)
+from .engine import Backend, IndexArrays, ScoringEngine
+from .pq import (PQCodebooks, ScalarQuant, pq_decode, pq_encode,
+                 scalar_quantize, train_codebooks)
 from .pruning import prune_split
 from .sparse_index import (CompactColumns, PaddedInvertedIndex,
                            PaddedSparseRows, TileSparseHead,
                            build_compact_columns, build_padded_inverted_index,
                            build_padded_rows, build_tile_sparse_head,
-                           queries_head_dense, score_head_ref, score_inverted,
                            sparse_queries_to_padded)
 
 __all__ = ["HybridIndexParams", "HybridIndex", "SearchResult"]
@@ -58,7 +56,13 @@ class HybridIndexParams:
     # search
     alpha: int = 20              # overfetch multiplier (pass 1)
     beta: int = 5                # keep multiplier (pass 2)
-    use_lut16_kernel: bool = False  # route dense ADC through the Pallas kernel
+    use_lut16_kernel: bool = False  # legacy alias for backend="pallas"
+    backend: str | None = None   # engine backend: ref | onehot-mxu | pallas
+
+    def resolve_backend(self) -> Backend:
+        if self.backend is not None:
+            return Backend.from_name(self.backend)
+        return Backend.PALLAS if self.use_lut16_kernel else Backend.REF
 
 
 @dataclasses.dataclass
@@ -83,6 +87,7 @@ class HybridIndex:
     codes: jax.Array                   # (N, K) uint8
     dense_residual: ScalarQuant
     d_dense: int
+    engine: ScoringEngine              # device-resident three-pass scorer
 
     # -- build -------------------------------------------------------------
     @classmethod
@@ -135,67 +140,39 @@ class HybridIndex:
         recon = np.asarray(pq_decode(codes, cb))
         dres = scalar_quantize(jnp.asarray(xd - recon))
 
+        backend = params.resolve_backend()
+        arrays = IndexArrays.build(
+            codebooks=cb, codes=codes, inv_index=inv_index, head=head,
+            dense_residual=dres, sparse_residual=sparse_residual,
+            num_points=n, d_active=cols.num_active,
+            with_bcsr=backend is Backend.PALLAS)
+        engine = ScoringEngine(arrays=arrays, backend=backend)
         return cls(params=params, num_points=n, pi=pi, cols=cols,
                    inv_index=inv_index, head=head, head_dim_ids=head_dim_ids,
                    sparse_residual=sparse_residual, codebooks=cb, codes=codes,
-                   dense_residual=dres, d_dense=d_dense)
+                   dense_residual=dres, d_dense=d_dense, engine=engine)
 
     # -- search ------------------------------------------------------------
     def search(self, q_sparse: sp.spmatrix, q_dense: np.ndarray, h: int = 20,
                alpha: int | None = None, beta: int | None = None,
                return_pass1: bool = False) -> SearchResult:
+        """Thin wrapper: pad queries to the device layout, run the engine's
+        single-jit three-pass search, map positions back to original ids."""
         p = self.params
-        alpha = alpha or p.alpha
-        beta = beta or p.beta
-        c1 = min(max(alpha * h, h), self.num_points)
-        c2 = min(max(beta * h, h), c1)
+        alpha = p.alpha if alpha is None else alpha
+        beta = p.beta if beta is None else beta
 
         q_dense = jnp.asarray(np.asarray(q_dense, np.float32))
         q_dims_np, q_vals_np = sparse_queries_to_padded(
             q_sparse, self.cols, nq_max=p.nq_max)
-        q_dims = jnp.asarray(q_dims_np)
-        q_vals = jnp.asarray(q_vals_np)
-
-        # ---- pass 1: approximate hybrid scores on the full shard ----
-        sparse_scores = score_inverted(self.inv_index, q_dims, q_vals)
-        if self.head is not None:
-            q_head = jnp.asarray(queries_head_dense(
-                q_dims_np, q_vals_np, self.head_dim_ids,
-                self.head.block.shape[1]))
-            head_scores = self._score_head(q_head)
-            sparse_scores = sparse_scores + head_scores[:, : self.num_points]
-
-        lut = adc_lut(q_dense, self.codebooks)
-        dense_scores = self._adc(lut)
-        approx = sparse_scores + dense_scores
-        s1, ids1 = res.topk_candidates(approx, c1)
-
-        # ---- pass 2: + dense residual, keep beta*h ----
-        extra_d = res.dense_residual_scores(self.dense_residual, ids1, q_dense)
-        s2, ids2 = res.reorder_pass(s1, ids1, extra_d, c2)
-
-        # ---- pass 3: + sparse residual, return h ----
-        q_cols = _scatter_queries(q_dims, q_vals, self.cols.num_active)
-        extra_s = res.sparse_residual_scores(self.sparse_residual, ids2, q_cols)
-        s3, ids3 = res.reorder_pass(s2, ids2, extra_s, h)
+        s3, ids3, ids1 = self.engine.search(
+            jnp.asarray(q_dims_np), jnp.asarray(q_vals_np), q_dense,
+            h=h, alpha=alpha, beta=beta)
 
         orig = self.pi[np.asarray(ids3)]
         return SearchResult(
             ids=orig, scores=np.asarray(s3),
             pass1_ids=self.pi[np.asarray(ids1)] if return_pass1 else None)
-
-    # -- internals ----------------------------------------------------------
-    def _adc(self, lut: jax.Array) -> jax.Array:
-        if self.params.use_lut16_kernel:
-            from repro.kernels.ops import lut16_adc
-            return lut16_adc(self.codes, lut)
-        return adc_scores_ref(self.codes, lut)
-
-    def _score_head(self, q_head: jax.Array) -> jax.Array:
-        if self.params.use_lut16_kernel:   # kernel build => use tile kernel too
-            from repro.kernels.ops import block_sparse_matmul
-            return block_sparse_matmul(q_head, self.head)
-        return score_head_ref(self.head, q_head)
 
     def exact_scores(self, q_sparse: sp.spmatrix, q_dense: np.ndarray,
                      x_sparse: sp.spmatrix, x_dense: np.ndarray) -> np.ndarray:
@@ -207,14 +184,3 @@ class HybridIndex:
 def _remap(x: sp.spmatrix, cols: CompactColumns) -> sp.csr_matrix:
     xc = x.tocsc()[:, cols.global_ids].tocsr()
     return xc
-
-
-@functools.partial(jax.jit, static_argnums=(2,))
-def _scatter_queries(q_dims: jax.Array, q_vals: jax.Array, d_active: int):
-    """(Q, nq) padded sparse queries -> (Q, d_active + 1) dense with pad slot."""
-    qn = q_dims.shape[0]
-    out = jnp.zeros((qn, d_active + 1), jnp.float32)
-    qidx = jnp.arange(qn)[:, None]
-    out = out.at[jnp.broadcast_to(qidx, q_dims.shape), q_dims].add(
-        q_vals, mode="drop")
-    return out.at[:, d_active].set(0.0)

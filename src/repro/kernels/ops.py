@@ -16,7 +16,8 @@ from .block_sparse import block_sparse_matmul_pallas, dense_to_bcsr
 from .lut16 import lut16_adc_pallas
 from .ref import lut16_adc_ref
 
-__all__ = ["lut16_adc", "block_sparse_matmul", "bcsr_from_head"]
+__all__ = ["lut16_adc", "lut16_adc_onehot", "block_sparse_matmul",
+           "block_sparse_matmul_bcsr", "bcsr_from_head"]
 
 
 def _interpret() -> bool:
@@ -45,7 +46,9 @@ def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
     n = codes.shape[0]
     bq = min(bq, max(1, q))
     bk = min(bk, k)
-    bn = min(bn, max(128, 1))
+    # clamp the row block against the actual row count (rounded up to the
+    # 128-lane granularity) so small inputs aren't padded to a full bn=512.
+    bn = min(bn, max(-(-n // 128) * 128, 128))
     codes_p, n0 = _pad_to(jnp.asarray(codes), 0, bn)
     # pad K consistently on both operands: padded codes point at LUT slot 0 of
     # padded subspaces whose LUT is zero, contributing nothing.
@@ -58,6 +61,27 @@ def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
     return out[0] if single else out
 
 
+@jax.jit
+def lut16_adc_onehot(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """MXU one-hot ADC: codes (N, K) uint8, lut (Q, K, l) or (K, l) -> (Q, N).
+
+    The LUT16 kernel's contraction expressed in jnp: codes expand to one-hot
+    and contract against the LUT as a single matmul — no (Q, N, K) gather
+    intermediate, systolic-friendly on TPU (bf16 operands, f32 accumulate)."""
+    single = lut.ndim == 2
+    lut3 = lut[None] if single else lut                       # (Q, K, l)
+    n = codes.shape[0]
+    l = lut3.shape[-1]
+    onehot = (codes[:, :, None] ==
+              jnp.arange(l, dtype=codes.dtype)).astype(jnp.bfloat16)
+    out = jax.lax.dot_general(
+        lut3.reshape(lut3.shape[0], -1).astype(jnp.bfloat16),
+        onehot.reshape(n, -1),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (Q, N)
+    return out[0] if single else out
+
+
 def bcsr_from_head(head) -> tuple[jax.Array, jax.Array, jax.Array, int]:
     """TileSparseHead -> (tiles, tile_ptr, tile_col, max_steps) host-side."""
     block = np.asarray(head.block, np.float32)
@@ -66,13 +90,22 @@ def bcsr_from_head(head) -> tuple[jax.Array, jax.Array, jax.Array, int]:
     return (jnp.asarray(tiles), jnp.asarray(ptr), jnp.asarray(col), max_steps)
 
 
-def block_sparse_matmul(q_head: jax.Array, head, *, bq: int = 8) -> jax.Array:
-    """Tile-skipping head scoring: q_head (Q, D_pad) × TileSparseHead -> (Q, N).
-
-    Matches sparse_index.score_head_ref on the stored block matrix."""
-    tiles, ptr, col, max_steps = bcsr_from_head(head)
+def block_sparse_matmul_bcsr(q_head: jax.Array, tiles: jax.Array,
+                             ptr: jax.Array, col: jax.Array, *,
+                             max_steps: int, bq: int = 8) -> jax.Array:
+    """Tile-skipping head scoring over prebuilt BCSR arrays: pads the query
+    block, runs the Pallas kernel, trims the padding.  Jit-safe."""
     qp, q0 = _pad_to(jnp.asarray(q_head, jnp.float32), 0, bq)
     out = block_sparse_matmul_pallas(qp, tiles, ptr, col, bq=bq,
                                      max_steps=max_steps,
                                      interpret=_interpret())
     return out[:q0]
+
+
+def block_sparse_matmul(q_head: jax.Array, head, *, bq: int = 8) -> jax.Array:
+    """Tile-skipping head scoring: q_head (Q, D_pad) × TileSparseHead -> (Q, N).
+
+    Matches sparse_index.score_head_ref on the stored block matrix."""
+    tiles, ptr, col, max_steps = bcsr_from_head(head)
+    return block_sparse_matmul_bcsr(q_head, tiles, ptr, col,
+                                    max_steps=max_steps, bq=bq)

@@ -8,7 +8,7 @@ and smoke tests must keep seeing 1 device.
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -19,14 +19,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     the slowest (DCN-connected) axis and carries only data parallelism."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (requires host device count
     >= prod(shape), set via XLA_FLAGS in the test's subprocess)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -26,9 +26,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.pq import (PQCodebooks, ScalarQuant, adc_lut, adc_scores_ref,
-                           pq_decode, pq_encode, scalar_quantize,
-                           train_codebooks)
+from repro.core import engine as eng
+from repro.core import residual as res
+from repro.core.engine import Backend
+from repro.core.pq import (PQCodebooks, ScalarQuant, adc_lut, pq_decode,
+                           pq_encode, scalar_quantize, train_codebooks)
 
 __all__ = ["HybridHeadParams", "HybridLMHead"]
 
@@ -45,9 +47,12 @@ class HybridHeadParams:
 class HybridLMHead:
     """Build once per checkpoint; serve per decode step."""
 
-    def __init__(self, cfg, use_kernel: bool = False):
+    def __init__(self, cfg, use_kernel: bool = False,
+                 backend: Backend | str | None = None):
         self.cfg = cfg
-        self.use_kernel = use_kernel
+        if backend is None:
+            backend = Backend.PALLAS if use_kernel else Backend.REF
+        self.backend = Backend.from_name(backend)
 
     def build(self, lm_head: jax.Array, *, subspaces: int | None = None,
               iters: int = 8, seed: int = 0) -> HybridHeadParams:
@@ -69,37 +74,37 @@ class HybridLMHead:
         """hidden: (B, d) final hidden states; token_counts: (B, V) sparse
         per-sequence counts (may be None).  Returns (values (B,k), ids (B,k)).
 
-        Pass 1: LUT16 ADC over PQ codes (+ sparse penalty);
-        Pass 2: + int8 residual for alpha*k candidates;
+        Pass 1: engine ADC over PQ codes (+ sparse penalty);
+        Pass 2: + int8 residual for alpha*k candidates (engine pass-2 math);
         Pass 3: exact head columns for the k survivors."""
         h = hidden.astype(jnp.float32)
         lut = adc_lut(h, hp.codebooks)                     # (B, K, 16)
-        if self.use_kernel:
-            from repro.kernels.ops import lut16_adc
-            scores = lut16_adc(hp.codes, lut)
-        else:
-            scores = adc_scores_ref(hp.codes, lut)         # (B, V)
+        scores = eng.adc_scores(hp.codes, lut, self.backend)  # (B, V)
         if token_counts is not None and penalty != 0.0:
             scores = scores - penalty * token_counts       # hybrid sparse term
         c1 = min(alpha * k, scores.shape[1])
-        s1, ids1 = jax.lax.top_k(scores, c1)
+        s1, ids1 = res.topk_candidates(scores, c1)
 
-        # pass 2: int8 residual correction
-        rows = jnp.take(hp.residual.q, ids1, axis=0).astype(jnp.float32)
-        qs = h * hp.residual.scale[None, :]
-        base = 128.0 * qs.sum(-1) + h @ hp.residual.zero
-        corr = jnp.einsum("bcd,bd->bc", rows, qs) + base[:, None]
-        s2 = s1 + corr
-        s2v, pos2 = jax.lax.top_k(s2, min(2 * k, c1))
-        ids2 = jnp.take_along_axis(ids1, pos2, axis=1)
+        # pass 2: int8 residual correction (the engine's dense reorder pass).
+        # Keep at least 16 survivors: pass 3 reranks them with EXACT columns,
+        # so a deeper (still tiny) pool pins down top-1 decode fidelity.
+        corr = res.dense_residual_scores(hp.residual, ids1, h)
+        s2v, ids2 = res.reorder_pass(s1, ids1, corr, min(max(2 * k, 16), c1))
 
-        # pass 3: exact columns for final ranking
-        cols = jnp.take(hp.head, ids2, axis=1)             # (d, B, 2k)
-        exact = jnp.einsum("bd,dbc->bc", h, cols)
+        # pass 3: exact columns for final ranking, in the MODEL's compute
+        # dtype — the same arithmetic as the full-vocab head this replaces,
+        # so near-tie top-1 decisions agree with the exact decode path.
+        cd = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+        cols = jnp.take(hp.head, ids2, axis=1)             # (d, B, C)
+        exact = jnp.einsum("bd,dbc->bc", h.astype(cd),
+                           cols.astype(cd)).astype(jnp.float32)
         if token_counts is not None and penalty != 0.0:
             pen = jnp.take_along_axis(token_counts, ids2, axis=1)
             exact = exact - penalty * pen
-        s3, pos3 = jax.lax.top_k(exact, k)
+        # rank by (score desc, vocab id asc): argmax over the full vocab
+        # breaks exact ties by lowest id, and so must we
+        pos3 = jnp.lexsort((ids2, -exact), axis=-1)[:, :k]
+        s3 = jnp.take_along_axis(exact, pos3, axis=1)
         ids3 = jnp.take_along_axis(ids2, pos3, axis=1)
         return s3, ids3
 

@@ -1,0 +1,50 @@
+"""Use `hypothesis` when installed; otherwise a minimal deterministic stand-in.
+
+The seed environment does not ship hypothesis, and the tier-1 suite must
+still collect and run there.  The fallback reproduces the tiny subset the
+tests use — ``@settings(max_examples=..., deadline=...)``, ``@given(...)``
+and ``strategies.integers(lo, hi)`` — by running the property on the two
+boundary points plus a fixed-seed random sample.  It is NOT a shrinker or a
+coverage-guided explorer; install the real package (requirements.txt) for
+that.
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ModuleNotFoundError:
+    import random
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def sample(self, rng: random.Random) -> int:
+            return rng.randint(self.lo, self.hi)
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Integers):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                fn(*(s.lo for s in strats))
+                fn(*(s.hi for s in strats))
+                for _ in range(max(n - 2, 0)):
+                    fn(*(s.sample(rng) for s in strats))
+            # plain attribute copy: functools.wraps would expose the wrapped
+            # signature and pytest would treat the params as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            return wrapper
+        return deco

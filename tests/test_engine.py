@@ -1,0 +1,142 @@
+"""ScoringEngine parity: the single-jit three-pass search must reproduce the
+pre-refactor host-driven HybridIndex.search (numpy round trips between every
+pass) on the synthetic hybrid fixtures, across all backends."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import residual as res
+from repro.core.engine import Backend, ScoringEngine
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.core.pq import adc_lut, adc_scores_ref
+from repro.core.sparse_index import (queries_head_dense, score_head_ref,
+                                     score_inverted, sparse_queries_to_padded)
+
+
+def host_loop_search(idx: HybridIndex, q_sparse, q_dense, h: int,
+                     alpha: int, beta: int):
+    """The pre-refactor search: each pass a separate dispatch with a host
+    transfer in between (the reference the engine must match bit-for-bit)."""
+    p = idx.params
+    c1 = min(max(alpha * h, h), idx.num_points)
+    c2 = min(max(beta * h, h), c1)
+    q_dense = jnp.asarray(np.asarray(q_dense, np.float32))
+    q_dims_np, q_vals_np = sparse_queries_to_padded(q_sparse, idx.cols,
+                                                    nq_max=p.nq_max)
+    q_dims, q_vals = jnp.asarray(q_dims_np), jnp.asarray(q_vals_np)
+
+    # pass 1 (host-driven): sparse + head + dense ADC, overfetch c1
+    sparse_scores = score_inverted(idx.inv_index, q_dims, q_vals)
+    if idx.head is not None:
+        q_head = jnp.asarray(queries_head_dense(
+            q_dims_np, q_vals_np, idx.head_dim_ids, idx.head.block.shape[1]))
+        head_scores = np.asarray(score_head_ref(idx.head, q_head))
+        sparse_scores = np.asarray(sparse_scores) + head_scores[:, :idx.num_points]
+    lut = adc_lut(q_dense, idx.codebooks)
+    approx = jnp.asarray(np.asarray(sparse_scores)
+                         + np.asarray(adc_scores_ref(idx.codes, lut)))
+    s1, ids1 = res.topk_candidates(approx, c1)
+    s1, ids1 = jnp.asarray(np.asarray(s1)), jnp.asarray(np.asarray(ids1))
+
+    # pass 2: + dense residual, keep c2 (host sync again)
+    extra_d = res.dense_residual_scores(idx.dense_residual, ids1, q_dense)
+    s2, ids2 = res.reorder_pass(s1, ids1, extra_d, c2)
+    s2, ids2 = jnp.asarray(np.asarray(s2)), jnp.asarray(np.asarray(ids2))
+
+    # pass 3: + sparse residual, return h
+    from repro.core.engine import scatter_queries_compact
+    q_cols = scatter_queries_compact(q_dims, q_vals, idx.cols.num_active)
+    extra_s = res.sparse_residual_scores(idx.sparse_residual, ids2, q_cols)
+    s3, ids3 = res.reorder_pass(s2, ids2, extra_s, h)
+    return np.asarray(s3), idx.pi[np.asarray(ids3)]
+
+
+@pytest.fixture(scope="module")
+def built(small_hybrid):
+    ds = small_hybrid
+    idx = HybridIndex.build(
+        ds.x_sparse, ds.x_dense,
+        HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6))
+    return ds, idx
+
+
+def test_engine_matches_host_loop_ref(built):
+    """ref backend: ids must match exactly, scores bit-for-bit."""
+    ds, idx = built
+    want_s, want_i = host_loop_search(idx, ds.q_sparse, ds.q_dense,
+                                      h=20, alpha=20, beta=5)
+    got = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=20, beta=5)
+    np.testing.assert_array_equal(got.ids, want_i)
+    np.testing.assert_array_equal(got.scores, want_s)
+
+
+@pytest.mark.parametrize("backend", ["ref", "onehot-mxu", "pallas"])
+def test_engine_backends_agree(built, backend):
+    """Every backend retrieves (near-)identical ids; onehot-mxu contracts in
+    bf16 so scores get a loose tolerance."""
+    ds, idx = built
+    if backend == "pallas":
+        # rebuild with BCSR head tiles so the Pallas head path is exercised
+        pidx = HybridIndex.build(
+            ds.x_sparse, ds.x_dense,
+            HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6,
+                              backend="pallas"))
+        eng = pidx.engine
+        assert eng.arrays.head_max_steps > 0
+    else:
+        eng = ScoringEngine(arrays=idx.engine.arrays,
+                            backend=Backend.from_name(backend))
+    q_dims_np, q_vals_np = sparse_queries_to_padded(
+        ds.q_sparse, idx.cols, nq_max=idx.params.nq_max)
+    s, ids, _ = eng.search(jnp.asarray(q_dims_np), jnp.asarray(q_vals_np),
+                           jnp.asarray(ds.q_dense), h=10, alpha=20, beta=5)
+    ref = idx.search(ds.q_sparse, ds.q_dense, h=10, alpha=20, beta=5)
+    got_ids = idx.pi[np.asarray(ids)]
+    if backend == "ref":
+        np.testing.assert_array_equal(got_ids, ref.ids)
+        np.testing.assert_array_equal(np.asarray(s), ref.scores)
+    else:
+        assert (got_ids == ref.ids).mean() > 0.9
+        np.testing.assert_allclose(np.sort(np.asarray(s)), np.sort(ref.scores),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_engine_no_head_block(small_hybrid):
+    """use_head_block=False path (head=None pytree leaf) works end to end."""
+    ds = small_hybrid
+    idx = HybridIndex.build(
+        ds.x_sparse, ds.x_dense,
+        HybridIndexParams(keep_top=48, kmeans_iters=4, use_head_block=False))
+    want_s, want_i = host_loop_search(idx, ds.q_sparse, ds.q_dense,
+                                      h=10, alpha=10, beta=3)
+    got = idx.search(ds.q_sparse, ds.q_dense, h=10, alpha=10, beta=3)
+    np.testing.assert_array_equal(got.ids, want_i)
+    np.testing.assert_array_equal(got.scores, want_s)
+
+
+def test_explicit_zero_alpha_beta_not_treated_as_default(built):
+    """alpha=1/beta=1 must be honored (the old `alpha or p.alpha` bug made
+    falsy overrides silently fall back to the params defaults)."""
+    ds, idx = built
+    r = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=1, beta=1,
+                   return_pass1=True)
+    # alpha=1 => pass-1 candidate set is exactly h, not params.alpha*h
+    assert r.pass1_ids.shape == (ds.q_sparse.shape[0], 20)
+
+
+def test_engine_is_single_dispatch(built):
+    """The three passes lower into ONE jitted computation: the jaxpr of the
+    engine search contains the top_k chain with no host boundary."""
+    import jax
+    from repro.core.engine import three_pass_search
+    ds, idx = built
+    q_dims_np, q_vals_np = sparse_queries_to_padded(
+        ds.q_sparse, idx.cols, nq_max=idx.params.nq_max)
+    closed = jax.make_jaxpr(
+        lambda a, d, v, q: three_pass_search(a, d, v, q, h=10, c1=100, c2=40,
+                                             backend=Backend.REF))(
+        idx.engine.arrays, jnp.asarray(q_dims_np), jnp.asarray(q_vals_np),
+        jnp.asarray(ds.q_dense))
+    text = str(closed)
+    assert text.count("top_k") >= 3          # all three passes traced together

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.checkpoint import (latest_step, restore_checkpoint,
                               save_checkpoint)
@@ -140,7 +140,10 @@ def test_trainer_learns_and_resumes(tmp_path):
                        ckpt_dir=str(tmp_path), log_every=100)
     tr = Trainer(m, AdamWConfig(warmup_steps=3, decay_steps=50), dc, tc)
     params, opt, hist = tr.run(jax.random.PRNGKey(0))
-    assert hist[-1]["loss"] < hist[0]["loss"]
+    # single-step losses on random tokens are noisy; compare a trailing
+    # average against the leading one so the assertion tests the trend
+    losses = [h["loss"] for h in hist]
+    assert sum(losses[-3:]) / 3 < sum(losses[:3]) / 3
     # resume: picks up at step 10
     tr2 = Trainer(m, AdamWConfig(warmup_steps=3, decay_steps=50), dc, tc)
     _, _, h2 = tr2.run(jax.random.PRNGKey(0), num_steps=12)
