@@ -47,7 +47,11 @@ def merge_topk(scores: jax.Array, ids: jax.Array, k: int):
 
 def _pass1_scores_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals,
                         backend: eng.Backend):
-    """Approximate hybrid scores for the local row-shard, via the engine."""
+    """Approximate hybrid scores for the local row-shard, via the engine.
+
+    For backend PALLAS_PACKED, ``codes`` is the packed (N_local, ceil(K/2))
+    form — packed codes row-shard exactly like unpacked ones, so each device
+    streams (and stores) half the code bytes."""
     n_local = codes.shape[0]
     inv = PaddedInvertedIndex(rows=inv_rows, vals=inv_vals,
                               num_points=n_local)
@@ -78,7 +82,9 @@ def make_sharded_search_fn(mesh: Mesh, *, k: int, axis: str = "data",
 
     row_offset: (num_shards,) int32 — global row id of each shard's first row.
     adc: an engine Backend name — "ref"/"gather" (reference), "onehot"/
-    "onehot-mxu" (MXU contraction), or "pallas" (LUT16 kernel).
+    "onehot-mxu" (MXU contraction), "pallas" (LUT16 kernel), or
+    "pallas-packed" (LUT16 over two-per-byte 4-bit codes: pass codes packed
+    via kernels pack_codes; half the per-device HBM, same row sharding).
     """
     backend = eng.Backend.from_name(adc)
     spec_rows = P(axis)        # row-sharded index structures
@@ -152,7 +158,8 @@ def make_sharded_search3_fn(mesh: Mesh, *, h: int, alpha: int = 20,
                             adc: str = "gather"):
     """Build the jit-able sharded THREE-pass search.
 
-    Row-sharded over `axis`: codes (N, K), inv_rows/inv_vals (per-shard
+    Row-sharded over `axis`: codes (N, K) — or (N, ceil(K/2)) packed
+    two-per-byte when adc="pallas-packed" — inv_rows/inv_vals (per-shard
     stacked, see sharded_pass1_topk), res_q (N, d^D) int8 dense-residual rows,
     sres_cols/sres_vals (N, R) padded sparse-residual rows.  Replicated: lut,
     res_scale/res_zero, q_dims/q_vals, q_dense (Q, d^D), q_cols

@@ -15,10 +15,15 @@ One layer owns the paper's scorer instead of three call-site copies
   ``lax.top_k`` between passes) as ONE jitted function: no host transfer or
   dispatch between passes.
 
-* ``Backend`` — pluggable scoring backend:
-    ref        pure-jnp gather ADC + dense head matmul (bit-tight oracle)
-    onehot-mxu MXU one-hot contraction ADC (kernels/ops.lut16_adc_onehot)
-    pallas     LUT16 + block-sparse Pallas kernels (kernels/ops)
+* ``Backend`` — pluggable scoring backend (DESIGN.md §3):
+    ref           pure-jnp gather ADC + dense head matmul (bit-tight oracle)
+    onehot-mxu    MXU one-hot contraction ADC (kernels/ops.lut16_adc_onehot)
+    pallas        LUT16 + block-sparse Pallas kernels (kernels/ops)
+    pallas-packed LUT16 over packed 4-bit codes, two per byte (§6.1.1's
+                  storage): the pass-1 HBM code stream — the bound on
+                  single-query throughput (§4.1.2) — halves.  IndexArrays
+                  built with ``pack=True`` stores ONLY the packed form;
+                  ref/onehot backends unpack in-jit (bit-for-bit vs unpacked).
 
 Call sites: core/hybrid.py (build/permute wrapper), core/distributed.py
 (shard_map over pass-1 and the full three-pass refinement), and
@@ -52,6 +57,7 @@ class Backend(enum.Enum):
     REF = "ref"
     ONEHOT = "onehot-mxu"
     PALLAS = "pallas"
+    PALLAS_PACKED = "pallas-packed"
 
     @classmethod
     def from_name(cls, name: "Backend | str | None") -> "Backend":
@@ -61,7 +67,10 @@ class Backend(enum.Enum):
             return name
         aliases = {"ref": cls.REF, "gather": cls.REF,
                    "onehot": cls.ONEHOT, "onehot-mxu": cls.ONEHOT,
-                   "pallas": cls.PALLAS, "lut16": cls.PALLAS}
+                   "pallas": cls.PALLAS, "lut16": cls.PALLAS,
+                   "pallas-packed": cls.PALLAS_PACKED,
+                   "packed": cls.PALLAS_PACKED,
+                   "lut16-packed": cls.PALLAS_PACKED}
         try:
             return aliases[name]
         except KeyError:
@@ -71,11 +80,23 @@ class Backend(enum.Enum):
 
 
 def adc_scores(codes: jax.Array, lut: jax.Array,
-               backend: Backend = Backend.REF) -> jax.Array:
-    """Dense ADC scan (N, K) codes × (Q, K, l) LUT -> (Q, N), by backend."""
-    if backend is Backend.PALLAS:
+               backend: Backend = Backend.REF, *,
+               packed: bool | None = None) -> jax.Array:
+    """Dense ADC scan codes × (Q, K, l) LUT -> (Q, N), by backend.
+
+    packed: codes hold two 4-bit subspace codes per byte, (N, ceil(K/2)) from
+    kernels pack_codes.  None => packed iff backend is PALLAS_PACKED.  The
+    Pallas backends unpack in VMEM (half the HBM stream); ref/onehot unpack
+    in-jit first and then score exactly like the unpacked path — bit-for-bit,
+    so packed storage stays comparable against the oracle."""
+    if packed is None:
+        packed = backend is Backend.PALLAS_PACKED
+    if backend in (Backend.PALLAS, Backend.PALLAS_PACKED):
         from repro.kernels.ops import lut16_adc
-        return lut16_adc(codes, lut)
+        return lut16_adc(codes, lut, packed=packed)
+    if packed:
+        from repro.kernels.ops import unpack_codes
+        codes = unpack_codes(codes, lut.shape[-2])
     if backend is Backend.ONEHOT:
         from repro.kernels.ops import lut16_adc_onehot
         return lut16_adc_onehot(codes, lut)
@@ -90,7 +111,8 @@ def adc_scores(codes: jax.Array, lut: jax.Array,
 @dataclasses.dataclass(frozen=True)
 class IndexArrays:
     codebooks: PQCodebooks             # LUT-ready PQ codebooks (K, l, p)
-    codes: jax.Array                   # (N, K) uint8 PQ codes
+    codes: jax.Array                   # (N, K) uint8 PQ codes, or
+                                       # (N, ceil(K/2)) when codes_packed
     inv_index: PaddedInvertedIndex     # tail dims of the pruned data index
     head: TileSparseHead | None        # head dims (None => no head block)
     head_pos: jax.Array                # (d_active+1,) compact dim -> head slot
@@ -102,19 +124,28 @@ class IndexArrays:
     num_points: int = dataclasses.field(metadata=dict(static=True))
     d_active: int = dataclasses.field(metadata=dict(static=True))
     head_max_steps: int = dataclasses.field(metadata=dict(static=True))
+    codes_packed: bool = dataclasses.field(
+        default=False, metadata=dict(static=True))
 
     @classmethod
     def build(cls, *, codebooks: PQCodebooks, codes: jax.Array,
               inv_index: PaddedInvertedIndex, head: TileSparseHead | None,
               dense_residual: ScalarQuant, sparse_residual: PaddedSparseRows,
               num_points: int, d_active: int,
-              with_bcsr: bool = True) -> "IndexArrays":
+              with_bcsr: bool = True, pack: bool = False) -> "IndexArrays":
         """Host-side assembly: derives the head query scatter table and the
         BCSR form once, so search never leaves the device.
 
         with_bcsr=False skips the BCSR conversion (build time + HBM) for
         engines that never take the Pallas head path; _head_scores falls back
-        to the dense matmul when the tiles are absent."""
+        to the dense matmul when the tiles are absent.
+
+        pack=True stores the dense PQ codes packed two-per-byte (paper
+        §6.1.1) — the ONLY resident copy, halving the code HBM footprint and
+        the pass-1 scan stream.  Requires l <= 16 codewords (4 bits); the
+        PALLAS_PACKED kernel additionally needs l == 16 — ScoringEngine
+        enforces that pairing at construction.  Odd K gets a zero phantom
+        nibble that every scoring path masks out."""
         pos = np.full(d_active + 1, 0, np.int32)
         tiles = jnp.zeros((1, 1, 1), jnp.float32)
         ptr = jnp.zeros((2,), jnp.int32)
@@ -129,11 +160,19 @@ class IndexArrays:
             if with_bcsr:
                 from repro.kernels.ops import bcsr_from_head
                 tiles, ptr, col, max_steps = bcsr_from_head(head)
+        if pack:
+            if codebooks.num_codes > 16:
+                raise ValueError(
+                    "packed codes need l <= 16 codewords (4 bits), got "
+                    f"l={codebooks.num_codes}")
+            from repro.kernels.ops import pack_codes
+            codes = jnp.asarray(pack_codes(np.asarray(codes)))
         return cls(codebooks=codebooks, codes=codes, inv_index=inv_index,
                    head=head, head_pos=jnp.asarray(pos), head_tiles=tiles,
                    head_ptr=ptr, head_col=col, dense_residual=dense_residual,
                    sparse_residual=sparse_residual, num_points=num_points,
-                   d_active=d_active, head_max_steps=max_steps)
+                   d_active=d_active, head_max_steps=max_steps,
+                   codes_packed=pack)
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +210,8 @@ def _head_scores(arrays: IndexArrays, q_head: jax.Array,
                  backend: Backend) -> jax.Array:
     # head_max_steps == 0 marks arrays built without BCSR (with_bcsr=False);
     # fall back to the dense matmul, which is always correct
-    if backend is Backend.PALLAS and arrays.head_max_steps > 0:
+    if (backend in (Backend.PALLAS, Backend.PALLAS_PACKED)
+            and arrays.head_max_steps > 0):
         from repro.kernels.ops import block_sparse_matmul_bcsr
         return block_sparse_matmul_bcsr(
             q_head, arrays.head_tiles, arrays.head_ptr, arrays.head_col,
@@ -189,7 +229,7 @@ def pass1_scores(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
                                       arrays.head.block.shape[1])
         head_s = _head_scores(arrays, q_head, backend)
         sparse = sparse + head_s[:, : arrays.num_points]
-    dense = adc_scores(arrays.codes, lut, backend)
+    dense = adc_scores(arrays.codes, lut, backend, packed=arrays.codes_packed)
     return sparse + dense
 
 
@@ -230,6 +270,16 @@ class ScoringEngine:
     three-pass search."""
     arrays: IndexArrays
     backend: Backend = Backend.REF
+
+    def __post_init__(self):
+        # fail at construction, not at the first search deep inside the
+        # kernel wrapper: the packed Pallas kernel's LUT last dim is 16.
+        if (self.backend is Backend.PALLAS_PACKED and self.arrays.codes_packed
+                and self.arrays.codebooks.num_codes != 16):
+            raise ValueError(
+                "Backend.PALLAS_PACKED requires l == 16 codewords, got "
+                f"l={self.arrays.codebooks.num_codes}; scan packed codes "
+                "with smaller codebooks via the ref/onehot-mxu backends")
 
     @property
     def num_points(self) -> int:

@@ -57,12 +57,22 @@ class HybridIndexParams:
     alpha: int = 20              # overfetch multiplier (pass 1)
     beta: int = 5                # keep multiplier (pass 2)
     use_lut16_kernel: bool = False  # legacy alias for backend="pallas"
-    backend: str | None = None   # engine backend: ref | onehot-mxu | pallas
+    # engine backend: ref | onehot-mxu | pallas | pallas-packed
+    backend: str | None = None
+    # store PQ codes packed two-per-byte (half the HBM).  None => pack iff
+    # the backend is pallas-packed; True also works with ref/onehot (they
+    # unpack in-jit, bit-for-bit with unpacked storage).
+    pack_codes: bool | None = None
 
     def resolve_backend(self) -> Backend:
         if self.backend is not None:
             return Backend.from_name(self.backend)
         return Backend.PALLAS if self.use_lut16_kernel else Backend.REF
+
+    def resolve_pack(self) -> bool:
+        if self.pack_codes is not None:
+            return self.pack_codes
+        return self.resolve_backend() is Backend.PALLAS_PACKED
 
 
 @dataclasses.dataclass
@@ -84,7 +94,9 @@ class HybridIndex:
     head_dim_ids: np.ndarray           # compact ids in the head block (pad -1)
     sparse_residual: PaddedSparseRows
     codebooks: PQCodebooks
-    codes: jax.Array                   # (N, K) uint8
+    codes: jax.Array                   # (N, K) uint8; (N, ceil(K/2)) packed
+                                       # when params.resolve_pack() — the
+                                       # engine's array, not a second copy
     dense_residual: ScalarQuant
     d_dense: int
     engine: ScoringEngine              # device-resident three-pass scorer
@@ -145,12 +157,16 @@ class HybridIndex:
             codebooks=cb, codes=codes, inv_index=inv_index, head=head,
             dense_residual=dres, sparse_residual=sparse_residual,
             num_points=n, d_active=cols.num_active,
-            with_bcsr=backend is Backend.PALLAS)
+            with_bcsr=backend in (Backend.PALLAS, Backend.PALLAS_PACKED),
+            pack=params.resolve_pack())
         engine = ScoringEngine(arrays=arrays, backend=backend)
+        # hold the ENGINE's codes (possibly packed): the unpacked (N, K)
+        # build-time array must not stay resident or packing saves nothing.
         return cls(params=params, num_points=n, pi=pi, cols=cols,
                    inv_index=inv_index, head=head, head_dim_ids=head_dim_ids,
-                   sparse_residual=sparse_residual, codebooks=cb, codes=codes,
-                   dense_residual=dres, d_dense=d_dense, engine=engine)
+                   sparse_residual=sparse_residual, codebooks=cb,
+                   codes=arrays.codes, dense_residual=dres, d_dense=d_dense,
+                   engine=engine)
 
     # -- search ------------------------------------------------------------
     def search(self, q_sparse: sp.spmatrix, q_dense: np.ndarray, h: int = 20,

@@ -21,10 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.lut16 import pack_codes, unpack_codes  # noqa: F401
+
 __all__ = [
     "PQCodebooks", "train_codebooks", "pq_encode", "pq_decode",
     "adc_lut", "adc_scores_ref", "ScalarQuant", "scalar_quantize",
-    "scalar_dequantize", "whitening_transform",
+    "scalar_dequantize", "whitening_transform", "pack_codes", "unpack_codes",
 ]
 
 

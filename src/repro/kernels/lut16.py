@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lut16_adc_pallas"]
+__all__ = ["lut16_adc_pallas", "pack_codes", "unpack_codes"]
 
 
 def _kernel(codes_ref, lut_ref, out_ref, *, compute_dtype,
@@ -102,10 +102,42 @@ def lut16_adc_pallas(codes: jax.Array, lut: jax.Array, *, bq: int = 8,
 
 
 def pack_codes(codes):
-    """(N, K) uint8 codes in [0,16) -> (N, K/2) packed two-per-byte."""
+    """(N, K) codes in [0, 16) -> (N, ceil(K/2)) uint8, two codes per byte.
+
+    Subspace 2j sits in the low nibble of byte j, subspace 2j+1 in the high
+    nibble (paper §6.1.1's storage).  Odd K is zero-padded with one phantom
+    subspace in the last byte's high nibble; scoring wrappers
+    (ops.lut16_adc(packed=True) / unpack_codes) zero the phantom LUT column
+    or slice it off, so the pad contributes nothing.  Values outside [0, 16)
+    would silently corrupt the neighbouring nibble, so they are rejected.
+    Host-side (numpy): runs once at index-construction time."""
     import numpy as np
     codes = np.asarray(codes)
-    assert codes.shape[1] % 2 == 0
-    lo = codes[:, 0::2]
-    hi = codes[:, 1::2]
+    if codes.ndim != 2:
+        raise ValueError(f"codes must be 2-D (N, K), got shape {codes.shape}")
+    if codes.size and (codes.min() < 0 or codes.max() > 15):
+        raise ValueError(
+            "pack_codes requires 4-bit codes in [0, 16); got range "
+            f"[{int(codes.min())}, {int(codes.max())}]")
+    if codes.shape[1] % 2:
+        codes = np.pad(codes, ((0, 0), (0, 1)))
+    lo = codes[:, 0::2].astype(np.uint8)
+    hi = codes[:, 1::2].astype(np.uint8)
     return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_codes(packed, k: int):
+    """(N, Kp) packed bytes -> (N, k) uint8 codes; inverse of pack_codes.
+
+    k is the LOGICAL subspace count: 2*Kp, or 2*Kp - 1 when the trailing
+    high nibble is odd-K padding (which is sliced off here).  jnp-traceable —
+    the engine's unpack-then-score path runs it inside jit, so the non-Pallas
+    backends score packed storage bit-for-bit like unpacked storage."""
+    kp = packed.shape[1]
+    if not 0 <= 2 * kp - k <= 1:
+        raise ValueError(
+            f"(N, {kp}) packed bytes cannot hold {k} subspace codes")
+    lo = packed & 0x0F
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=2).reshape(packed.shape[0], 2 * kp)
+    return out[:, :k].astype(jnp.uint8)

@@ -13,11 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .block_sparse import block_sparse_matmul_pallas, dense_to_bcsr
-from .lut16 import lut16_adc_pallas
+from .lut16 import lut16_adc_pallas, pack_codes, unpack_codes
 from .ref import lut16_adc_ref
 
 __all__ = ["lut16_adc", "lut16_adc_onehot", "block_sparse_matmul",
-           "block_sparse_matmul_bcsr", "bcsr_from_head"]
+           "block_sparse_matmul_bcsr", "bcsr_from_head", "pack_codes",
+           "unpack_codes"]
 
 
 def _interpret() -> bool:
@@ -35,28 +36,48 @@ def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
 
 
 def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
-              bk: int = 32, compute_dtype=jnp.float32) -> jax.Array:
+              bk: int = 32, compute_dtype=jnp.float32,
+              packed: bool = False) -> jax.Array:
     """LUT16 ADC: codes (N, K) uint8, lut (Q, K, l) or (K, l) -> (Q, N).
 
-    Pads N/Q/K to block multiples and routes through the Pallas kernel."""
+    Pads N/Q/K to block multiples and routes through the Pallas kernel.
+
+    packed=True: codes hold TWO 4-bit subspace codes per byte, shape
+    (N, ceil(K/2)) from pack_codes — HBM streams half the bytes; the kernel
+    unpacks in VMEM.  Requires l == 16.  Odd K is handled here by padding the
+    LUT with a zero phantom subspace so the pad nibble (code 0) scores 0."""
     single = lut.ndim == 2
     if single:
         lut = lut[None]
+    lut = jnp.asarray(lut, jnp.float32)
     q, k, l = lut.shape
-    n = codes.shape[0]
+    n, kc = codes.shape                 # kc: stored (byte) subspace axis
+    if packed:
+        if l != 16:
+            raise ValueError(f"packed codes require l == 16, got l={l}")
+        if not 0 <= 2 * kc - k <= 1:
+            raise ValueError(
+                f"packed codes (N, {kc}) cannot hold a {k}-subspace LUT")
+        if k < 2 * kc:                  # odd K: phantom subspace scores zero
+            lut = jnp.pad(lut, ((0, 0), (0, 2 * kc - k), (0, 0)))
+    elif k != kc:
+        raise ValueError(f"codes (N, {kc}) do not match a {k}-subspace LUT")
     bq = min(bq, max(1, q))
-    bk = min(bk, k)
+    bk = min(bk, kc)
     # clamp the row block against the actual row count (rounded up to the
     # 128-lane granularity) so small inputs aren't padded to a full bn=512.
     bn = min(bn, max(-(-n // 128) * 128, 128))
     codes_p, n0 = _pad_to(jnp.asarray(codes), 0, bn)
     # pad K consistently on both operands: padded codes point at LUT slot 0 of
-    # padded subspaces whose LUT is zero, contributing nothing.
+    # padded subspaces whose LUT is zero, contributing nothing.  (In packed
+    # form one padded byte is TWO zero-code phantom subspaces, so the LUT K
+    # axis pads by 2*bk per code byte.)
     codes_p, _ = _pad_to(codes_p, 1, bk)
-    lut_p, _ = _pad_to(jnp.asarray(lut, jnp.float32), 1, bk)
+    lut_p, _ = _pad_to(lut, 1, 2 * bk if packed else bk)
     lut_p, q0 = _pad_to(lut_p, 0, bq)
     out = lut16_adc_pallas(codes_p, lut_p, bq=bq, bn=bn, bk=bk,
-                           interpret=_interpret(), compute_dtype=compute_dtype)
+                           interpret=_interpret(), compute_dtype=compute_dtype,
+                           packed=packed)
     out = out[:q0, :n0]
     return out[0] if single else out
 

@@ -39,9 +39,11 @@ __all__ = ["HybridHeadParams", "HybridLMHead"]
 @dataclasses.dataclass(frozen=True)
 class HybridHeadParams:
     codebooks: PQCodebooks
-    codes: jax.Array            # (V, K) uint8
+    codes: jax.Array            # (V, K) uint8; (V, ceil(K/2)) when packed
     residual: ScalarQuant       # int8 residual of embedding columns
     head: jax.Array             # (d, V) exact head (pass-3 rerank)
+    codes_packed: bool = dataclasses.field(
+        default=False, metadata=dict(static=True))
 
 
 class HybridLMHead:
@@ -56,7 +58,13 @@ class HybridLMHead:
 
     def build(self, lm_head: jax.Array, *, subspaces: int | None = None,
               iters: int = 8, seed: int = 0) -> HybridHeadParams:
-        """lm_head: (d, V) — token vectors are columns."""
+        """lm_head: (d, V) — token vectors are columns.
+
+        With the pallas-packed backend the vocab-side codes are stored
+        two-per-byte (V·K/2 bytes): the decode-time pass-1 scan — the V·K
+        byte stream the head cost model is built on — streams half as much."""
+        import numpy as np
+
         d, v = lm_head.shape
         table = lm_head.T.astype(jnp.float32)              # (V, d)
         k = subspaces or max(d // 2, 1)
@@ -64,8 +72,13 @@ class HybridLMHead:
         codes = pq_encode(table, cb)
         recon = pq_decode(codes, cb)
         residual = scalar_quantize(table - recon)
+        packed = self.backend is Backend.PALLAS_PACKED
+        if packed:
+            from repro.core.pq import pack_codes
+            codes = jnp.asarray(pack_codes(np.asarray(codes)))
         return HybridHeadParams(codebooks=cb, codes=codes, residual=residual,
-                                head=lm_head.astype(jnp.float32))
+                                head=lm_head.astype(jnp.float32),
+                                codes_packed=packed)
 
     @partial(jax.jit, static_argnums=(0, 4, 5, 6))
     def approx_topk(self, hp: HybridHeadParams, hidden: jax.Array,
@@ -79,7 +92,8 @@ class HybridLMHead:
         Pass 3: exact head columns for the k survivors."""
         h = hidden.astype(jnp.float32)
         lut = adc_lut(h, hp.codebooks)                     # (B, K, 16)
-        scores = eng.adc_scores(hp.codes, lut, self.backend)  # (B, V)
+        scores = eng.adc_scores(hp.codes, lut, self.backend,
+                                packed=hp.codes_packed)    # (B, V)
         if token_counts is not None and penalty != 0.0:
             scores = scores - penalty * token_counts       # hybrid sparse term
         c1 = min(alpha * k, scores.shape[1])

@@ -27,12 +27,16 @@ class ServeSession:
 
     @classmethod
     def create(cls, model: Model, params: dict, max_len: int,
-               use_pq_head: bool | None = None, use_kernel: bool = False):
+               use_pq_head: bool | None = None, use_kernel: bool = False,
+               head_backend: str | None = None):
+        """head_backend: engine backend name for the PQ head (ref,
+        onehot-mxu, pallas, pallas-packed); overrides use_kernel."""
         cfg = model.cfg
         use_pq = cfg.pq_head if use_pq_head is None else use_pq_head
         head = hp = None
         if use_pq:
-            head = HybridLMHead(cfg, use_kernel=use_kernel)
+            head = HybridLMHead(cfg, use_kernel=use_kernel,
+                                backend=head_backend)
             hp = head.build(params["lm_head"])
         return cls(model=model, params=params, max_len=max_len,
                    pq_head=head, pq_params=hp)

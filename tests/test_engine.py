@@ -125,6 +125,88 @@ def test_explicit_zero_alpha_beta_not_treated_as_default(built):
     assert r.pass1_ids.shape == (ds.q_sparse.shape[0], 20)
 
 
+# ---------------------------------------------------------------------------
+# packed 4-bit codes as an engine backend (paper §6.1.1 storage; DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def packed_built(small_hybrid):
+    """Same params/seed as `built` but with packed two-per-byte code storage
+    and the pallas-packed backend — codebooks and codes are identical."""
+    ds = small_hybrid
+    idx = HybridIndex.build(
+        ds.x_sparse, ds.x_dense,
+        HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6,
+                          backend="pallas-packed"))
+    return ds, idx
+
+
+def test_packed_storage_halves_code_bytes(built, packed_built):
+    """The acceptance metric: dense-code HBM footprint is halved, and it's
+    the ONLY resident copy (HybridIndex.codes aliases the engine array)."""
+    _, idx = built
+    _, pidx = packed_built
+    assert pidx.engine.arrays.codes_packed
+    assert pidx.engine.arrays.codes.nbytes * 2 == idx.engine.arrays.codes.nbytes
+    assert pidx.codes is pidx.engine.arrays.codes
+
+
+def test_packed_backend_bit_identical_topk(built, packed_built):
+    """PALLAS_PACKED through the full three-pass search returns bit-identical
+    top-k ids to REF (scores within f32 kernel-accumulation noise)."""
+    ds, idx = built
+    _, pidx = packed_built
+    ref = idx.search(ds.q_sparse, ds.q_dense, h=20, alpha=20, beta=5)
+    got = pidx.search(ds.q_sparse, ds.q_dense, h=20, alpha=20, beta=5)
+    np.testing.assert_array_equal(got.ids, ref.ids)
+    np.testing.assert_allclose(got.scores, ref.scores, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "onehot-mxu"])
+def test_unpack_then_score_path(built, packed_built, backend):
+    """Non-Pallas backends on packed storage unpack in-jit and score exactly
+    like their unpacked path: REF is bit-for-bit, onehot matches onehot."""
+    ds, idx = built
+    _, pidx = packed_built
+    q_dims_np, q_vals_np = sparse_queries_to_padded(
+        ds.q_sparse, idx.cols, nq_max=idx.params.nq_max)
+    args = (jnp.asarray(q_dims_np), jnp.asarray(q_vals_np),
+            jnp.asarray(ds.q_dense))
+    b = Backend.from_name(backend)
+    want = ScoringEngine(arrays=idx.engine.arrays, backend=b).search(
+        *args, h=20, alpha=20, beta=5)
+    got = ScoringEngine(arrays=pidx.engine.arrays, backend=b).search(
+        *args, h=20, alpha=20, beta=5)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+
+
+def test_packed_backend_small_codebook_fails_at_build(small_hybrid):
+    """pallas-packed needs l == 16 (the kernel's LUT width); l < 16 must be
+    rejected when the engine is constructed, not at the first search."""
+    ds = small_hybrid
+    with pytest.raises(ValueError, match="l == 16"):
+        HybridIndex.build(
+            ds.x_sparse, ds.x_dense,
+            HybridIndexParams(keep_top=48, head_dims=32, kmeans_iters=2,
+                              pq_codes=8, backend="pallas-packed"))
+
+
+def test_packed_odd_subspace_count(small_hybrid):
+    """K_U odd (here K=1): the phantom pad nibble must not change the search
+    relative to the unpacked ref build."""
+    ds = small_hybrid
+    p = dict(keep_top=48, head_dims=32, kmeans_iters=4, pq_subspaces=1)
+    ref = HybridIndex.build(ds.x_sparse, ds.x_dense, HybridIndexParams(**p))
+    pidx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                             HybridIndexParams(**p, backend="pallas-packed"))
+    assert pidx.engine.arrays.codes.shape == (ds.x_sparse.shape[0], 1)
+    r = ref.search(ds.q_sparse, ds.q_dense, h=10)
+    g = pidx.search(ds.q_sparse, ds.q_dense, h=10)
+    np.testing.assert_array_equal(g.ids, r.ids)
+    np.testing.assert_allclose(g.scores, r.scores, rtol=1e-5, atol=1e-5)
+
+
 def test_engine_is_single_dispatch(built):
     """The three passes lower into ONE jitted computation: the jaxpr of the
     engine search contains the top_k chain with no host boundary."""

@@ -80,6 +80,56 @@ def test_lut16_packed_4bit():
                                rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("k", [12, 13])
+def test_pack_unpack_roundtrip(k):
+    """pack_codes/unpack_codes invert each other for even AND odd K; odd K
+    zero-pads a phantom high nibble that unpack slices off."""
+    from repro.kernels.lut16 import pack_codes, unpack_codes
+    codes = RNG.integers(0, 16, (64, k)).astype(np.uint8)
+    packed = pack_codes(codes)
+    assert packed.shape == (64, (k + 1) // 2)
+    if k % 2:
+        assert (packed[:, -1] >> 4 == 0).all()      # phantom nibble is zero
+    np.testing.assert_array_equal(np.asarray(unpack_codes(packed, k)), codes)
+
+
+def test_pack_codes_rejects_wide_codes():
+    """Codes outside [0, 16) would corrupt the neighbouring nibble — the old
+    silent-misbehavior case must now raise."""
+    from repro.kernels.lut16 import pack_codes, unpack_codes
+    with pytest.raises(ValueError, match="4-bit"):
+        pack_codes(np.full((4, 8), 16, np.uint8))
+    with pytest.raises(ValueError, match="4-bit"):
+        pack_codes(np.full((4, 8), -1, np.int32))
+    with pytest.raises(ValueError):
+        unpack_codes(np.zeros((4, 4), np.uint8), 6)   # 4 bytes can't hold 6
+
+
+@pytest.mark.parametrize("n,k,q", [(512, 16, 8), (777, 13, 5), (300, 1, 3)])
+def test_lut16_packed_via_ops_wrapper(n, k, q):
+    """ops.lut16_adc(packed=True): block padding + the odd-K phantom
+    subspace (zero LUT column) both handled in the wrapper."""
+    from repro.kernels.lut16 import pack_codes
+    codes = RNG.integers(0, 16, (n, k)).astype(np.uint8)
+    lut = jnp.asarray(RNG.normal(size=(q, k, 16)).astype(np.float32))
+    want = lut16_adc_ref(jnp.asarray(codes), lut)
+    got = lut16_adc(jnp.asarray(pack_codes(codes)), lut, packed=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_lut16_packed_shape_mismatch_raises():
+    from repro.kernels.lut16 import pack_codes
+    packed = jnp.asarray(pack_codes(RNG.integers(0, 16, (64, 8))
+                                    .astype(np.uint8)))      # (64, 4)
+    lut16 = jnp.asarray(RNG.normal(size=(2, 16, 16)).astype(np.float32))
+    with pytest.raises(ValueError, match="cannot hold"):
+        lut16_adc(packed, lut16, packed=True)                # 16 != 2*4
+    lut_l8 = jnp.asarray(RNG.normal(size=(2, 8, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="l == 16"):
+        lut16_adc(packed, lut_l8, packed=True)
+
+
 # ---------------------------------------------------------------------------
 # block-sparse tile-skipping matmul
 # ---------------------------------------------------------------------------

@@ -43,6 +43,23 @@ def test_pq_head_kernel_path(model_and_params):
     assert (np.asarray(ia) == np.asarray(ib)).mean() > 0.95
 
 
+def test_pq_head_packed_backend(model_and_params):
+    """pallas-packed head: vocab-side codes stored two-per-byte (half the
+    decode-time pass-1 stream), retrieval unchanged."""
+    cfg, m, params = model_and_params
+    h = jax.random.normal(KEY, (8, cfg.d_model), jnp.float32)
+    a = HybridLMHead(cfg)
+    b = HybridLMHead(cfg, backend="pallas-packed")
+    hpa = a.build(params["lm_head"])
+    hpb = b.build(params["lm_head"])
+    assert hpb.codes_packed
+    v, k = hpa.codes.shape
+    assert hpb.codes.shape == (v, (k + 1) // 2)
+    _, ia = a.approx_topk(hpa, h, None, 10, 8, 0.0)
+    _, ib = b.approx_topk(hpb, h, None, 10, 8, 0.0)
+    assert (np.asarray(ia) == np.asarray(ib)).mean() > 0.95
+
+
 def test_hybrid_penalty_changes_ranking(model_and_params):
     """The sparse (repetition-count) component must steer retrieval — the
     hybrid q·x = dense + sparse decomposition doing real work."""

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Markdown link-and-reference checker (CI gate).
+
+Two classes of dangling reference have bitten this repo:
+
+1. source docstrings citing ``DESIGN.md §<section>`` for sections (or a
+   whole file) that don't exist — 16 files cited DESIGN.md before it was
+   written;
+2. intra-repo markdown links (``[text](relative/path)``) whose target file
+   was renamed or never committed.
+
+This script fails (exit 1) on either.  Zero dependencies; run from anywhere:
+
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
+             "node_modules", ".venv"}
+
+# "DESIGN.md §2" — tolerant of string-literal breaks across source lines:
+# `"...(DESIGN.md "\n    "§Arch-applicability)"` has `" \n "` in between.
+# Dots only bind as sub-section numbers (§2.1), never sentence punctuation.
+_SECTION = r"§[A-Za-z0-9_-]+(?:\.\d+)*"
+CITE_RE = re.compile(rf"DESIGN\.md[\s\"']*({_SECTION})?")
+HEADING_SECTION_RE = re.compile(rf"^#+\s.*?({_SECTION})", re.M)
+MD_LINK_RE = re.compile(r"\[[^\]^\n]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def _iter_files(root: Path, suffixes: tuple[str, ...]):
+    for p in sorted(root.rglob("*")):
+        if any(part in SKIP_DIRS for part in p.parts):
+            continue
+        if p.is_file() and p.suffix in suffixes:
+            yield p
+
+
+def check_design_citations(errors: list[str]) -> None:
+    design = REPO / "DESIGN.md"
+    sections: set[str] = set()
+    if design.exists():
+        sections = set(HEADING_SECTION_RE.findall(design.read_text()))
+    for path in _iter_files(REPO, (".py",)):
+        text = path.read_text(errors="replace")
+        for m in CITE_RE.finditer(text):
+            rel = path.relative_to(REPO)
+            line = text.count("\n", 0, m.start()) + 1
+            if not design.exists():
+                errors.append(f"{rel}:{line}: cites DESIGN.md but the file "
+                              "does not exist")
+                continue
+            sec = m.group(1)
+            if sec is not None and sec not in sections:
+                errors.append(
+                    f"{rel}:{line}: cites DESIGN.md {sec} but DESIGN.md has "
+                    f"no heading with {sec} (has: {' '.join(sorted(sections))})")
+
+
+def check_markdown_links(errors: list[str]) -> None:
+    for path in _iter_files(REPO, (".md",)):
+        text = FENCE_RE.sub("", path.read_text(errors="replace"))
+        for m in MD_LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            resolved = (path.parent / target).resolve()
+            if not resolved.exists():
+                rel = path.relative_to(REPO)
+                errors.append(f"{rel}: link target does not exist: {target}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    check_design_citations(errors)
+    check_markdown_links(errors)
+    if errors:
+        print(f"check_docs: {len(errors)} dangling reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("check_docs: all DESIGN.md citations and markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
