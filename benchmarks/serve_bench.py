@@ -1,0 +1,200 @@
+"""Serving-layer benchmark (DESIGN.md §5): QueryService vs the single-query
+ScoringEngine loop, cache warm-up, refresh pause, and the packed-vs-unpacked
+QPS sweep over the batch buckets.
+
+Emits CSV rows like the other benchmark modules AND writes
+``BENCH_serve.json`` with the documented schema (README "Serving"):
+
+    workload                 points/queries/dims of the synthetic index
+    single_query_loop_qps    one engine.search per query, Q=1 (the baseline
+                             the batched service must beat >= 2x at Q=32)
+    service_qps              {bucket: QPS} for the cold-cache service fed the
+                             stream in chunks of that bucket
+    batched_speedup_q32      service_qps["32"] / single_query_loop_qps
+    cache                    {cold_qps, warm_qps, hit_rate} for an identical
+                             repeated query stream through the LRU cache
+    refresh                  {swap_s, first_search_after_s}: the refresh()
+                             call itself (must not block on in-flight work)
+                             and the first search against the new generation
+    packed                   {bucket: {unpacked_qps, packed_qps, ratio}} —
+                             Backend.PALLAS vs Backend.PALLAS_PACKED at
+                             Q in {1, 8, 32} (interpret-mode numbers are a
+                             structural proxy off-TPU; the HBM bytes halving
+                             in BENCH_engine.json is the hardware claim)
+    smoke                    true when run with --smoke (CI scale)
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Backend, ScoringEngine
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.core.pq import pack_codes
+from repro.core.sparse_index import sparse_queries_to_padded
+from repro.data import make_hybrid_dataset
+from repro.serve import QueryService
+
+from .common import emit, timeit
+
+OUT_JSON = "BENCH_serve.json"
+BUCKETS = (1, 8, 32)
+H, ALPHA, BETA = 20, 20, 5
+
+
+def _build(smoke: bool):
+    """kernels_bench-scale workload (BENCH_engine.json's), or a CI-sized one."""
+    n, d_s, nnz = (4000, 6000, 24) if smoke else (20000, 20000, 48)
+    ds = make_hybrid_dataset(num_points=n, num_queries=32, d_sparse=d_s,
+                             d_dense=64, nnz_per_row=nnz, seed=3)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                            HybridIndexParams(keep_top=96, head_dims=64,
+                                              kmeans_iters=6))
+    q_dims, q_vals = sparse_queries_to_padded(ds.q_sparse, idx.cols,
+                                              nq_max=idx.params.nq_max)
+    return ds, idx, q_dims, q_vals, np.asarray(ds.q_dense, np.float32)
+
+
+def _stream_qps(svc: QueryService, q_dims, q_vals, q_dense,
+                chunk: int, repeat: int) -> float:
+    """Feed the 32-query stream through the service in `chunk`-sized requests."""
+    nq = q_dims.shape[0]
+
+    def run():
+        for lo in range(0, nq, chunk):
+            svc.search(q_dims[lo:lo + chunk], q_vals[lo:lo + chunk],
+                       q_dense[lo:lo + chunk])
+
+    run()  # warm the jit cache for this bucket
+    secs, _ = timeit(run, repeat=repeat)
+    return nq / secs
+
+
+def _engine_bucket_qps(engine: ScoringEngine, q_dims, q_vals, q_dense,
+                       bucket: int, repeat: int) -> float:
+    """Raw engine QPS at one padded batch size (the packed-vs-unpacked probe
+    bypasses the service so cache/bucketing logic can't mask the kernel)."""
+    nq = q_dims.shape[0]
+    chunks = []
+    for lo in range(0, nq, bucket):
+        pad = bucket - min(bucket, nq - lo)
+        chunks.append(tuple(
+            jnp.asarray(np.pad(a[lo:lo + bucket], [(0, pad)] + [(0, 0)] *
+                               (a.ndim - 1), constant_values=c))
+            for a, c in ((q_dims, engine.arrays.d_active), (q_vals, 0),
+                         (q_dense, 0))))
+
+    def run():
+        outs = [engine.search(*c, h=H, alpha=ALPHA, beta=BETA)
+                for c in chunks]
+        return [np.asarray(o[1]) for o in outs]
+
+    run()
+    secs, _ = timeit(run, repeat=repeat)
+    return nq / secs
+
+
+def main(smoke: bool = False):
+    """Run the serving benches; prints CSV rows and writes BENCH_serve.json."""
+    repeat = 2 if smoke else 5
+    ds, idx, q_dims, q_vals, q_dense = _build(smoke)
+    nq = q_dims.shape[0]
+
+    # -- baseline: one engine.search per query ---------------------------
+    singles = [(jnp.asarray(q_dims[i:i + 1]), jnp.asarray(q_vals[i:i + 1]),
+                jnp.asarray(q_dense[i:i + 1])) for i in range(nq)]
+
+    def single_loop():
+        return [np.asarray(idx.engine.search(*s, h=H, alpha=ALPHA,
+                                             beta=BETA)[1]) for s in singles]
+
+    single_loop()
+    s_single, _ = timeit(single_loop, repeat=repeat)
+    qps_single = nq / s_single
+    emit("serve_single_query_loop", s_single / nq * 1e6,
+         f"qps={qps_single:.1f}")
+
+    # -- batched service across buckets (cold cache) ---------------------
+    svc = QueryService(idx.engine, h=H, alpha=ALPHA, beta=BETA,
+                       buckets=BUCKETS, cache_size=0)
+    service_qps = {}
+    for bucket in BUCKETS:
+        qps = _stream_qps(svc, q_dims, q_vals, q_dense, bucket, repeat)
+        service_qps[str(bucket)] = qps
+        emit(f"serve_service_q{bucket}", 1e6 / qps,
+             f"qps={qps:.1f};speedup_vs_single={qps / qps_single:.2f}x")
+
+    # -- warm-cache repeat of the same stream ----------------------------
+    cached = QueryService(idx.engine, h=H, alpha=ALPHA, beta=BETA,
+                          buckets=BUCKETS, cache_size=4 * nq)
+    t0 = time.perf_counter()
+    cached.search(q_dims, q_vals, q_dense)
+    cold_s = time.perf_counter() - t0
+    warm_s, _ = timeit(lambda: cached.search(q_dims, q_vals, q_dense),
+                       repeat=repeat)
+    info = cached.cache_info()
+    emit("serve_cache_warm", warm_s / nq * 1e6,
+         f"qps={nq / warm_s:.1f};hit_rate={info.hit_rate:.3f}")
+
+    # -- refresh pause ----------------------------------------------------
+    idx2 = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                             dataclasses.replace(idx.params, seed=11))
+    t0 = time.perf_counter()
+    svc.refresh(idx2.engine)
+    swap_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.search(q_dims, q_vals, q_dense)
+    first_after_s = time.perf_counter() - t0
+    emit("serve_refresh_swap", swap_s * 1e6,
+         f"first_search_after_us={first_after_s * 1e6:.0f}")
+
+    # -- packed vs unpacked across buckets (satellite of PR 3) -----------
+    arr = idx2.engine.arrays
+    eng_unpacked = ScoringEngine(arrays=arr, backend=Backend.PALLAS)
+    eng_packed = ScoringEngine(
+        arrays=dataclasses.replace(
+            arr, codes=jnp.asarray(pack_codes(np.asarray(arr.codes))),
+            codes_packed=True),
+        backend=Backend.PALLAS_PACKED)
+    packed = {}
+    for bucket in BUCKETS:
+        up = _engine_bucket_qps(eng_unpacked, q_dims, q_vals, q_dense,
+                                bucket, repeat)
+        pk = _engine_bucket_qps(eng_packed, q_dims, q_vals, q_dense,
+                                bucket, repeat)
+        packed[str(bucket)] = {"unpacked_qps": up, "packed_qps": pk,
+                               "ratio": pk / up}
+        emit(f"serve_packed_q{bucket}", 1e6 / pk,
+             f"packed_qps={pk:.1f};unpacked_qps={up:.1f};"
+             f"ratio={pk / up:.2f}x")
+
+    out = {
+        "workload": {"num_points": idx.num_points, "num_queries": nq,
+                     "d_dense": 64, "h": H, "alpha": ALPHA, "beta": BETA},
+        "single_query_loop_qps": qps_single,
+        "service_qps": service_qps,
+        "batched_speedup_q32": service_qps["32"] / qps_single,
+        "cache": {"cold_qps": nq / cold_s, "warm_qps": nq / warm_s,
+                  "hit_rate": info.hit_rate},
+        "refresh": {"swap_s": swap_s, "first_search_after_s": first_after_s},
+        "packed": packed,
+        "smoke": smoke,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: small index, fewer repeats")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

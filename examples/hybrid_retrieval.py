@@ -65,15 +65,28 @@ def main():
     x_sparse = ngram_features(docs, cfg.vocab_size)
     q_sparse = ngram_features(queries, cfg.vocab_size)
 
-    print("building hybrid index + searching...")
-    idx = HybridIndex.build(x_sparse, x_dense,
-                            HybridIndexParams(keep_top=64, head_dims=64,
-                                              kmeans_iters=5))
-    r = idx.search(q_sparse, q_dense, h=10, alpha=20, beta=5)
+    print("building hybrid index + query service...")
+    params = HybridIndexParams(keep_top=64, head_dims=64, kmeans_iters=5)
+    idx = HybridIndex.build(x_sparse, x_dense, params)
 
-    planted_found = np.mean([src in ids for src, ids in zip(q_src, r.ids)])
+    # serve through the batched QueryService (DESIGN.md §5): bucketed
+    # micro-batching + LRU result cache, ids mapped back through pi
+    from repro.core.sparse_index import sparse_queries_to_padded
+    from repro.serve import QueryService
+    svc = QueryService(idx.engine, h=10, alpha=20, beta=5,
+                       cache_size=128, id_map=idx.pi)
+    q_dims, q_vals = sparse_queries_to_padded(q_sparse, idx.cols,
+                                              nq_max=params.nq_max)
+    _, ids = svc.search(q_dims, q_vals, q_dense)
+    _, ids_warm = svc.search(q_dims, q_vals, q_dense)   # served from cache
+    assert np.array_equal(ids, ids_warm)
+    info = svc.cache_info()
+    print(f"service cache: {info.hits} hits / {info.misses} misses "
+          f"(hit rate {info.hit_rate:.2f})")
+
+    planted_found = np.mean([src in row for src, row in zip(q_src, ids)])
     true_ids, _ = bl.exact_topk(q_sparse, q_dense, x_sparse, x_dense, 10)
-    recall = bl.recall_at_h(r.ids, true_ids)
+    recall = bl.recall_at_h(ids, true_ids)
     print(f"planted-source hit rate: {planted_found:.2f}")
     print(f"recall@10 vs exact hybrid search: {recall:.3f}")
     assert planted_found >= 0.7

@@ -26,6 +26,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
@@ -33,16 +34,100 @@ from repro import compat
 from . import engine as eng
 from . import residual as res
 from .pq import ScalarQuant
-from .sparse_index import PaddedInvertedIndex, PaddedSparseRows, score_inverted
+from .sparse_index import (PaddedInvertedIndex, PaddedSparseRows,
+                           TileSparseHead, score_inverted)
 
 __all__ = ["sharded_pass1_topk", "make_sharded_search_fn",
-           "make_sharded_search3_fn", "sharded_three_pass_topk", "merge_topk"]
+           "make_sharded_search3_fn", "sharded_three_pass_topk", "merge_topk",
+           "split_index_arrays"]
 
 
 def merge_topk(scores: jax.Array, ids: jax.Array, k: int):
     """Merge per-shard candidates: (Q, S*k) -> (Q, k)."""
     vals, pos = jax.lax.top_k(scores, k)
     return vals, jnp.take_along_axis(ids, pos, axis=1)
+
+
+def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
+                       ) -> tuple[list[eng.IndexArrays], np.ndarray]:
+    """Row-slice one ``IndexArrays`` into per-shard copies + row offsets.
+
+    The host-side analogue of the shard_map row sharding above, and the
+    fan-out entry point for ``serve/query_service.py`` (DESIGN.md §5): each
+    shard gets its own complete ``IndexArrays`` over rows ``[s*n/S, (s+1)*n/S)``
+    so a ``ScoringEngine`` per shard runs the FULL three-pass search on its
+    rows; the service dispatches all shards back-to-back (JAX async dispatch
+    overlaps them) and merges the per-shard top-k on host.
+
+    Every row-parallel structure is sliced; the inverted index is localized
+    (entries outside the shard re-padded to the ``n_local`` sentinel); the
+    head block is re-padded to the tile grid and its BCSR form rebuilt when
+    the parent carried one.  Column-space structures (codebooks, scales,
+    ``head_pos``) are shared with the parent, not copied.
+
+    Returns ``(shards, row_offsets)`` with ``row_offsets[s]`` the global row
+    id of shard ``s``'s first row.  Requires ``num_points % num_shards == 0``
+    (the same equal-rows contract as ``sharded_pass1_topk``).
+    """
+    n = arrays.num_points
+    if num_shards < 1 or n % num_shards:
+        raise ValueError(
+            f"cannot split {n} rows into {num_shards} equal shards")
+    n_local = n // num_shards
+    offsets = np.arange(num_shards, dtype=np.int32) * n_local
+
+    inv_rows = np.asarray(arrays.inv_index.rows)
+    inv_vals = np.asarray(arrays.inv_index.vals)
+    sres_cols = np.asarray(arrays.sparse_residual.cols)
+    sres_vals = np.asarray(arrays.sparse_residual.vals)
+    res_q = np.asarray(arrays.dense_residual.q)
+    codes = np.asarray(arrays.codes)
+    head_block = (np.asarray(arrays.head.block, np.float32)
+                  if arrays.head is not None else None)
+
+    shards: list[eng.IndexArrays] = []
+    for s in range(num_shards):
+        lo, hi = s * n_local, (s + 1) * n_local
+        inside = (inv_rows >= lo) & (inv_rows < hi)
+        inv_s = PaddedInvertedIndex(
+            rows=jnp.asarray(
+                np.where(inside, inv_rows - lo, n_local).astype(np.int32)),
+            vals=jnp.asarray(
+                np.where(inside, inv_vals, 0.0).astype(np.float32)),
+            num_points=n_local)
+
+        head_s = arrays.head
+        tiles, ptr, col = arrays.head_tiles, arrays.head_ptr, arrays.head_col
+        max_steps = arrays.head_max_steps
+        if arrays.head is not None:
+            br, bc = arrays.head.block_rows, arrays.head.block_cols
+            n_pad = -(-n_local // br) * br
+            blk = np.zeros((n_pad, head_block.shape[1]), np.float32)
+            blk[:n_local] = head_block[lo:hi]
+            occ = blk.reshape(n_pad // br, br,
+                              blk.shape[1] // bc, bc).any(axis=(1, 3))
+            head_s = TileSparseHead(
+                block=jnp.asarray(blk, arrays.head.block.dtype),
+                occupancy=jnp.asarray(occ), head_dims=arrays.head.head_dims,
+                block_rows=br, block_cols=bc)
+            if max_steps > 0:
+                from repro.kernels.ops import bcsr_from_head
+                tiles, ptr, col, max_steps = bcsr_from_head(head_s)
+
+        shards.append(eng.IndexArrays(
+            codebooks=arrays.codebooks,
+            codes=jnp.asarray(codes[lo:hi]),
+            inv_index=inv_s, head=head_s, head_pos=arrays.head_pos,
+            head_tiles=tiles, head_ptr=ptr, head_col=col,
+            dense_residual=ScalarQuant(q=jnp.asarray(res_q[lo:hi]),
+                                       scale=arrays.dense_residual.scale,
+                                       zero=arrays.dense_residual.zero),
+            sparse_residual=PaddedSparseRows(
+                cols=jnp.asarray(sres_cols[lo:hi]),
+                vals=jnp.asarray(sres_vals[lo:hi])),
+            num_points=n_local, d_active=arrays.d_active,
+            head_max_steps=max_steps, codes_packed=arrays.codes_packed))
+    return shards, offsets
 
 
 def _pass1_scores_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals,

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 from functools import partial
 
 import jax
@@ -48,7 +49,7 @@ from .sparse_index import (PaddedInvertedIndex, PaddedSparseRows,
 __all__ = [
     "Backend", "IndexArrays", "ScoringEngine", "adc_scores",
     "scatter_queries_compact", "scatter_head_queries", "pass1_scores",
-    "three_pass_search",
+    "three_pass_search", "query_fingerprint", "release_index_arrays",
 ]
 
 
@@ -303,3 +304,49 @@ class ScoringEngine:
         """Pass-1-only local top-k (the distributed fan-out building block)."""
         scores = pass1_scores(self.arrays, q_dims, q_vals, lut, self.backend)
         return res.topk_candidates(scores, k)
+
+
+# ---------------------------------------------------------------------------
+# Serving hooks (DESIGN.md §5): result-cache fingerprints and the donation
+# hook for double-buffered IndexArrays swaps
+# ---------------------------------------------------------------------------
+
+def query_fingerprint(q_dims, q_vals, q_dense, *extra) -> str:
+    """Content hash of one query (or query batch) for result caching.
+
+    Hashes the raw bytes of the padded sparse query (dims + vals), the dense
+    query, and any extra context (search params, index generation) — two
+    requests collide only if every input byte agrees, so a cache keyed on
+    this digest can never serve a stale or mismatched result.  Host-side
+    numpy; meant to run once per request on arrays that are already on host.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for a in (q_dims, q_vals, q_dense):
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str((a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+    for e in extra:
+        h.update(repr(e).encode())
+    return h.hexdigest()
+
+
+def release_index_arrays(arrays: IndexArrays, *, keep=()) -> int:
+    """Donation hook for double-buffered index swaps (DESIGN.md §5).
+
+    Deletes the device buffers of a RETIRED ``IndexArrays`` copy so its HBM
+    is reclaimed immediately — the host-side analogue of jit buffer donation
+    for a pytree that lives across dispatches rather than inside one.  Leaves
+    that also appear in any pytree of ``keep`` (e.g. the replacement arrays
+    sharing a codebook, or per-shard views sharing ``head_pos``) are skipped,
+    as are non-jax leaves and buffers already deleted.  Returns the number of
+    buffers deleted.  Callers must ensure no in-flight computation still
+    reads ``arrays`` (QueryService refcounts generations for exactly this).
+    """
+    keep_ids = {id(leaf) for tree in keep for leaf in jax.tree.leaves(tree)}
+    deleted = 0
+    for leaf in jax.tree.leaves(arrays):
+        if (isinstance(leaf, jax.Array) and id(leaf) not in keep_ids
+                and not leaf.is_deleted()):
+            leaf.delete()
+            deleted += 1
+    return deleted

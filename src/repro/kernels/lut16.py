@@ -28,7 +28,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lut16_adc_pallas", "pack_codes", "unpack_codes"]
+__all__ = ["lut16_adc_pallas", "pack_codes", "unpack_codes",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """The one backend-detection rule for Pallas interpret fallback: compile
+    on real TPU backends, interpret everywhere else (ops.py imports this
+    too, so the rule lives in exactly one place)."""
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(codes_ref, lut_ref, out_ref, *, compute_dtype,
@@ -64,11 +72,17 @@ def _kernel(codes_ref, lut_ref, out_ref, *, compute_dtype,
                    static_argnames=("bq", "bn", "bk", "interpret",
                                     "compute_dtype", "packed"))
 def lut16_adc_pallas(codes: jax.Array, lut: jax.Array, *, bq: int = 8,
-                     bn: int = 512, bk: int = 32, interpret: bool = True,
+                     bn: int = 512, bk: int = 32,
+                     interpret: bool | None = None,
                      compute_dtype=jnp.float32,
                      packed: bool = False) -> jax.Array:
     """Pallas LUT16 ADC.  Shapes must be divisible by the block sizes
     (ops.py pads).  codes: (N, K) uint8; lut: (Q, K, l) f32 -> (Q, N) f32.
+
+    interpret=None auto-detects: the kernel compiles for real TPU backends
+    and falls back to Pallas interpret mode everywhere else.  Pass an
+    explicit bool to override — CI pins interpret=True so kernel tests mean
+    the same thing on a TPU host as on a CPU runner.
 
     compute_dtype=bfloat16 selects the fast MXU path on real TPUs (the LUT is
     bf16-rounded, matching the paper's 8-bit quantized LUT accuracy budget);
@@ -76,7 +90,12 @@ def lut16_adc_pallas(codes: jax.Array, lut: jax.Array, *, bq: int = 8,
 
     packed=True: codes hold TWO 4-bit subspace codes per byte (shape
     (N, K/2); the paper's storage format) — HBM streams half the bytes and
-    the kernel unpacks in VMEM.  Requires l == 16 and K even."""
+    the kernel unpacks in VMEM.  Requires l == 16 and K even.  Callers
+    should halve ``bk`` (ops.py does): the LUT block spans ``2*bk`` logical
+    subspaces per code-byte block, so halving keeps the LUT VMEM footprint
+    identical to the unpacked kernel's."""
+    if interpret is None:
+        interpret = default_interpret()
     n, k = codes.shape
     q, k2, l = lut.shape
     if packed:

@@ -13,16 +13,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .block_sparse import block_sparse_matmul_pallas, dense_to_bcsr
-from .lut16 import lut16_adc_pallas, pack_codes, unpack_codes
+from .lut16 import (default_interpret as _interpret, lut16_adc_pallas,
+                    pack_codes, unpack_codes)
 from .ref import lut16_adc_ref
 
 __all__ = ["lut16_adc", "lut16_adc_onehot", "block_sparse_matmul",
            "block_sparse_matmul_bcsr", "bcsr_from_head", "pack_codes",
            "unpack_codes"]
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
@@ -36,7 +33,7 @@ def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
 
 
 def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
-              bk: int = 32, compute_dtype=jnp.float32,
+              bk: int | None = None, compute_dtype=jnp.float32,
               packed: bool = False) -> jax.Array:
     """LUT16 ADC: codes (N, K) uint8, lut (Q, K, l) or (K, l) -> (Q, N).
 
@@ -45,13 +42,22 @@ def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
     packed=True: codes hold TWO 4-bit subspace codes per byte, shape
     (N, ceil(K/2)) from pack_codes — HBM streams half the bytes; the kernel
     unpacks in VMEM.  Requires l == 16.  Odd K is handled here by padding the
-    LUT with a zero phantom subspace so the pad nibble (code 0) scores 0."""
+    LUT with a zero phantom subspace so the pad nibble (code 0) scores 0.
+
+    bk=None picks the stored-axis block size: 32 bytes unpacked, 16 bytes
+    packed.  One packed byte is two logical subspaces, so the packed LUT
+    block spans 2*bk subspaces — halving bk keeps the per-step LUT VMEM
+    footprint (bq * 2*bk * l floats) identical to the unpacked kernel's
+    instead of doubling it (BENCH_serve.json records the resulting
+    packed-vs-unpacked QPS at Q in {1, 8, 32})."""
     single = lut.ndim == 2
     if single:
         lut = lut[None]
     lut = jnp.asarray(lut, jnp.float32)
     q, k, l = lut.shape
     n, kc = codes.shape                 # kc: stored (byte) subspace axis
+    if bk is None:
+        bk = 16 if packed else 32
     if packed:
         if l != 16:
             raise ValueError(f"packed codes require l == 16, got l={l}")

@@ -1,13 +1,24 @@
-"""Serving launcher: prefill a batch of prompts, decode N tokens, report
+"""Serving launchers.
+
+LM mode (default): prefill a batch of prompts, decode N tokens, report
 per-step latency — with either the exact head or the paper's PQ hybrid head.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b-smoke \
         --tokens 32 --batch 4 --pq-head
+
+Retrieval mode (DESIGN.md §5): build a synthetic hybrid index, stand up the
+batched QueryService, drive a ragged query stream through it twice (cold +
+warm cache) with a mid-stream index refresh, and report QPS + cache + jit
+stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --retrieval \
+        --points 20000 --queries 64 --shards 4
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -18,18 +29,8 @@ from repro.models import Model
 from repro.serve import greedy_generate
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--pq-head", action="store_true")
-    ap.add_argument("--penalty", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def run_lm(args) -> None:
+    """Decode-loop latency probe (exact vs PQ hybrid head)."""
     cfg = get_config(args.arch)
     model = Model(cfg)
     key = jax.random.PRNGKey(args.seed)
@@ -44,6 +45,90 @@ def main():
           f"({dt / args.tokens * 1e3:.1f} ms/step, "
           f"head={'pq-hybrid' if args.pq_head else 'exact'})")
     print("sample:", jnp.asarray(out)[0, :16].tolist())
+
+
+def run_retrieval(args) -> None:
+    """QueryService under a ragged query stream: QPS, cache, refresh."""
+    import numpy as np
+
+    from repro.core.hybrid import HybridIndex, HybridIndexParams
+    from repro.core.sparse_index import sparse_queries_to_padded
+    from repro.data import make_hybrid_dataset
+    from repro.serve import QueryService
+
+    print(f"building index: {args.points} points, {args.shards} shard(s)...")
+    ds = make_hybrid_dataset(num_points=args.points, num_queries=args.queries,
+                             d_sparse=args.points, d_dense=64,
+                             nnz_per_row=48, seed=args.seed)
+    params = HybridIndexParams(keep_top=96, head_dims=64, kmeans_iters=6)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense, params)
+    q_dims, q_vals = sparse_queries_to_padded(ds.q_sparse, idx.cols,
+                                              nq_max=params.nq_max)
+    q_dense = np.asarray(ds.q_dense, np.float32)
+    svc = QueryService(idx.engine, h=args.h, buckets=(1, 8, 32),
+                       cache_size=4 * args.queries, num_shards=args.shards,
+                       id_map=idx.pi)
+
+    rng = np.random.default_rng(args.seed)
+    sizes = rng.integers(1, 33, 64)
+
+    def stream():
+        served = 0
+        for q in sizes:
+            rows = rng.integers(0, args.queries, int(q))
+            svc.search(q_dims[rows], q_vals[rows], q_dense[rows])
+            served += int(q)
+        return served
+
+    stream()                                    # jit warmup, cold cache
+    t0 = time.perf_counter()
+    n = stream()
+    dt = time.perf_counter() - t0
+    print(f"stream: {n} queries in {dt:.2f}s ({n / dt:.1f} QPS)")
+
+    t0 = time.perf_counter()
+    idx2 = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                             dataclasses.replace(params, seed=args.seed + 1))
+    build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.refresh(idx2.engine, id_map=idx2.pi)
+    swap_s = time.perf_counter() - t0
+    print(f"refresh: rebuild {build_s:.2f}s off-path, swap {swap_s * 1e3:.2f} ms")
+
+    info, jit = svc.cache_info(), svc.jit_cache_info()
+    print(f"cache: {info.hits} hits / {info.misses} misses "
+          f"(hit rate {info.hit_rate:.2f}, {info.evictions} evictions)")
+    print(f"jit shapes: {jit.batch_shapes} (bound {jit.bound})")
+    print("stats:", svc.stats())
+    svc.close()
+
+
+def main():
+    """Parse args and dispatch to the LM or retrieval launcher."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--retrieval", action="store_true",
+                    help="serve a hybrid retrieval index instead of an LM")
+    # LM mode
+    ap.add_argument("--arch")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--pq-head", action="store_true")
+    ap.add_argument("--penalty", type=float, default=0.0)
+    # retrieval mode
+    ap.add_argument("--points", type=int, default=20000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--h", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.retrieval:
+        run_retrieval(args)
+    else:
+        if not args.arch:
+            ap.error("--arch is required in LM mode")
+        run_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,2 +1,6 @@
-from .hybrid_head import HybridLMHead, HybridHeadParams     # noqa: F401
-from .serving import ServeSession, greedy_generate          # noqa: F401
+"""Serving layer (DESIGN.md §5): the batched QueryService request path,
+the PQ-approximated LM head, and the decode loop that consumes it."""
+from .hybrid_head import HybridLMHead, HybridHeadParams          # noqa: F401
+from .query_service import (QueryService, CacheInfo,             # noqa: F401
+                            JitCacheInfo)
+from .serving import ServeSession, greedy_generate               # noqa: F401

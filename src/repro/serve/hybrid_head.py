@@ -38,6 +38,7 @@ __all__ = ["HybridHeadParams", "HybridLMHead"]
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class HybridHeadParams:
+    """Device-resident PQ head: codebooks + codes + residual + exact head."""
     codebooks: PQCodebooks
     codes: jax.Array            # (V, K) uint8; (V, ceil(K/2)) when packed
     residual: ScalarQuant       # int8 residual of embedding columns
@@ -51,6 +52,8 @@ class HybridLMHead:
 
     def __init__(self, cfg, use_kernel: bool = False,
                  backend: Backend | str | None = None):
+        """backend: engine backend name for the pass-1 code scan (ref,
+        onehot-mxu, pallas, pallas-packed); overrides the legacy use_kernel."""
         self.cfg = cfg
         if backend is None:
             backend = Backend.PALLAS if use_kernel else Backend.REF
@@ -121,6 +124,39 @@ class HybridLMHead:
         s3 = jnp.take_along_axis(exact, pos3, axis=1)
         ids3 = jnp.take_along_axis(ids2, pos3, axis=1)
         return s3, ids3
+
+    def approx_topk_bucketed(self, hp: HybridHeadParams, hidden: jax.Array,
+                             token_counts: jax.Array | None, k: int = 50,
+                             alpha: int = 8, penalty: float = 0.0,
+                             buckets: tuple[int, ...] = (1, 8, 32)):
+        """``approx_topk`` behind decode-batch bucketing (DESIGN.md §5).
+
+        ``approx_topk`` recompiles for every distinct decode batch size; a
+        serving loop whose sessions join and leave would melt the jit cache.
+        This wrapper pads the batch up to the same static bucket set the
+        QueryService uses (padded rows are zero hidden states, sliced off)
+        and chunks batches above the largest bucket, so the head compiles
+        at most ``len(buckets)`` times per (k, alpha, penalty) combination.
+        Padding runs device-side (``jnp.pad``) — no host round-trip in the
+        per-token decode path."""
+        from .query_service import bucket_for
+        bks = tuple(sorted(set(buckets)))
+        b = hidden.shape[0]
+        if b > bks[-1]:
+            cap = bks[-1]
+            outs = [self.approx_topk_bucketed(
+                hp, hidden[lo:lo + cap],
+                None if token_counts is None else token_counts[lo:lo + cap],
+                k, alpha, penalty, bks) for lo in range(0, b, cap)]
+            return (jnp.concatenate([o[0] for o in outs]),
+                    jnp.concatenate([o[1] for o in outs]))
+        bucket = bucket_for(b, bks)
+        hid = jnp.pad(jnp.asarray(hidden), ((0, bucket - b), (0, 0)))
+        tc = token_counts
+        if tc is not None:
+            tc = jnp.pad(jnp.asarray(tc), ((0, bucket - b), (0, 0)))
+        vals, ids = self.approx_topk(hp, hid, tc, k, alpha, penalty)
+        return vals[:b], ids[:b]
 
     def exact_topk(self, hp: HybridHeadParams, hidden: jax.Array,
                    token_counts: jax.Array | None, k: int = 50,

@@ -1,0 +1,439 @@
+"""Batched query service — the serving request path over the ScoringEngine
+(DESIGN.md §5; the layer that turns the paper's per-server scorer into the
+§7.2 online system under production query load).
+
+``QueryService`` owns everything between "a client hands us hybrid queries"
+and "refined top-h ids come back":
+
+* **micro-batching into bucketed static shapes** — incoming
+  ``(q_dims, q_vals, q_dense)`` batches are padded up to a small fixed set
+  of batch-size buckets (default 1/8/32), so the jit cache of the underlying
+  ``three_pass_search`` stays bounded by ``len(buckets)`` entries per
+  parameter combination no matter how ragged the request stream is
+  (``jit_cache_info()`` exposes the observed entries and the declared bound);
+
+* **an LRU result cache** — results are cached per *query row* under a
+  content fingerprint (``core.engine.query_fingerprint`` over the padded
+  sparse query, the dense query, the search params, and the index
+  generation), with exact hit/miss/eviction counters (``cache_info()``).
+  Repeats in a warm stream never touch the device;
+
+* **async shard fan-out** — with ``num_shards > 1`` the index is row-sliced
+  once (``core.distributed.split_index_arrays``) into per-shard engines;
+  a request dispatches the FULL three-pass search on every shard
+  back-to-back (JAX async dispatch overlaps them — the in-process analogue
+  of the paper's RPC fan-out) and the per-shard top-h sets are merged on the
+  host, the same merge the ``shard_map`` path does with ``all_gather``;
+
+* **double-buffered index refresh** — ``refresh(new_arrays)`` installs a
+  rebuilt index without blocking in-flight searches: generations are
+  refcounted, a search runs to completion against the generation it
+  acquired, and the retired copy's device buffers are donated back
+  (``core.engine.release_index_arrays``) once its last in-flight search
+  drops the reference.
+
+Results are positions in cache-sorted row order, exactly like
+``ScoringEngine.search`` (pass ``id_map=HybridIndex.pi`` to get original
+ids).  ``benchmarks/serve_bench.py`` measures the QPS/caching/refresh
+claims and writes ``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import split_index_arrays
+from repro.core.engine import (Backend, IndexArrays, ScoringEngine,
+                               query_fingerprint, release_index_arrays)
+
+__all__ = ["QueryService", "CacheInfo", "JitCacheInfo", "bucket_for",
+           "pad_rows"]
+
+DEFAULT_BUCKETS = (1, 8, 32)
+
+
+def bucket_for(q: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket >= q; q above the largest bucket gets the largest
+    bucket (the caller chunks oversized batches)."""
+    for b in buckets:
+        if q <= b:
+            return b
+    return buckets[-1]
+
+
+def pad_rows(x: np.ndarray, rows: int, fill=0) -> np.ndarray:
+    """Pad axis 0 of host array ``x`` up to ``rows`` with ``fill`` — the
+    static-shape bucketing primitive (the PQ LM head's decode batching does
+    the same with ``jnp.pad``, device-side)."""
+    if x.shape[0] >= rows:
+        return x
+    widths = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(x, widths, constant_values=fill)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInfo:
+    """Exact LRU result-cache counters (``QueryService.cache_info()``)."""
+    hits: int
+    misses: int
+    evictions: int
+    size: int
+    capacity: int
+
+    @property
+    def hit_rate(self) -> float:
+        """Hits over total lookups (0.0 on an untouched cache)."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class JitCacheInfo:
+    """Observed jit-cache pressure (``QueryService.jit_cache_info()``).
+
+    ``batch_shapes`` is every padded batch size that reached the engine —
+    bucketing guarantees ``len(batch_shapes) <= len(buckets)``.  ``entries``
+    counts distinct (bucket, params) compilation keys; ``bound`` is the
+    declared ceiling ``len(buckets) * <distinct param combos seen>``."""
+    batch_shapes: tuple[int, ...]
+    entries: int
+    bound: int
+
+
+@dataclasses.dataclass(eq=False)
+class _Generation:
+    """One installed index copy: the single-device engine, optional per-shard
+    engines, and the refcount that gates donation of retired buffers.
+    eq=False: identity semantics for the service's generation registry."""
+    engine: ScoringEngine
+    shards: list[ScoringEngine] | None
+    offsets: np.ndarray | None
+    id_map: np.ndarray | None
+    version: int
+    refs: int = 0
+    retired: bool = False
+    donate: bool = True
+
+
+class QueryService:
+    """The request path end to end: bucketed micro-batching, LRU result
+    caching, (optionally sharded) three-pass search, double-buffered index
+    swaps.  Thread-safe; ``submit`` gives the async client API.
+
+    Parameters
+    ----------
+    engine:
+        The ``ScoringEngine`` to serve (e.g. ``HybridIndex.build(...).engine``).
+        Alternatively pass ``arrays`` (+ ``backend``) and the service builds
+        the engine itself.
+    h, alpha, beta:
+        Default search parameters; per-call overrides are allowed but each
+        distinct combination adds its own jit-cache entries.
+    buckets:
+        Allowed padded batch sizes, ascending.  Bigger request batches are
+        chunked to the largest bucket.
+    cache_size:
+        LRU result-cache capacity in query rows (0 disables caching).
+    num_shards:
+        Row-shard the index into this many per-shard engines and fan out
+        (requires ``num_points % num_shards == 0``).
+    id_map:
+        Optional position -> external id mapping (``HybridIndex.pi``)
+        applied to returned ids.
+    """
+
+    def __init__(self, engine: ScoringEngine | None = None, *,
+                 arrays: IndexArrays | None = None,
+                 backend: Backend | str | None = None,
+                 h: int = 10, alpha: int = 20, beta: int = 5,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 cache_size: int = 1024, num_shards: int = 1,
+                 id_map: np.ndarray | None = None, max_workers: int = 2):
+        if engine is None:
+            if arrays is None:
+                raise ValueError("pass either an engine or arrays")
+            engine = ScoringEngine(arrays=arrays,
+                                   backend=Backend.from_name(backend))
+        if not buckets:
+            raise ValueError("buckets must be non-empty")
+        self.h, self.alpha, self.beta = h, alpha, beta
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.num_shards = num_shards
+        self._lock = threading.Lock()
+        self._version = 0
+        self._next_version = 0      # monotonic; unique even across races
+        self._gens: set[_Generation] = set()   # every not-yet-donated copy
+        self._gen = self._make_generation(engine, id_map, self._version)
+        self._cache: OrderedDict[str, tuple[np.ndarray, np.ndarray]] = \
+            OrderedDict()
+        self._cache_cap = cache_size
+        self._hits = self._misses = self._evictions = 0
+        self._jit_keys: set[tuple] = set()
+        self._requests = self._batches = self._refreshes = 0
+        self._executor: ThreadPoolExecutor | None = None
+        self._max_workers = max_workers
+
+    # -- generations ------------------------------------------------------
+
+    def _make_generation(self, engine: ScoringEngine,
+                         id_map: np.ndarray | None,
+                         version: int) -> _Generation:
+        shards = offsets = None
+        if self.num_shards > 1:
+            parts, offsets = split_index_arrays(engine.arrays,
+                                                self.num_shards)
+            shards = [ScoringEngine(arrays=a, backend=engine.backend)
+                      for a in parts]
+        gen = _Generation(engine=engine, shards=shards, offsets=offsets,
+                          id_map=id_map, version=version)
+        with self._lock:
+            self._gens.add(gen)
+        return gen
+
+    def _acquire(self) -> _Generation:
+        with self._lock:
+            gen = self._gen
+            gen.refs += 1
+            return gen
+
+    def _release(self, gen: _Generation) -> None:
+        with self._lock:
+            gen.refs -= 1
+            dead = gen.retired and gen.refs == 0
+        if dead:
+            self._donate(gen)
+
+    def _donate(self, gen: _Generation) -> None:
+        """Free the retired generation's device buffers (DESIGN.md §5
+        double-buffering: the swap itself never blocks; HBM of the old copy
+        is reclaimed the moment its last in-flight search finishes).
+
+        The keep set spans EVERY generation still registered — the live one
+        AND any other retired copy that hasn't been donated yet (it may
+        still have in-flight readers, or be externally owned via
+        ``donate=False``) — so leaves shared across generations (codebooks,
+        ``head_pos``) survive until their last owner goes."""
+        with self._lock:
+            keep = []
+            for g in self._gens:
+                if g is gen:
+                    continue
+                keep.append(g.engine.arrays)
+                if g.shards is not None:
+                    keep += [s.arrays for s in g.shards]
+            if gen.donate:
+                self._gens.discard(gen)
+        if not gen.donate:
+            return
+        release_index_arrays(gen.engine.arrays, keep=keep)
+        if gen.shards is not None:
+            for s in gen.shards:
+                release_index_arrays(s.arrays, keep=keep)
+
+    def refresh(self, arrays: IndexArrays | ScoringEngine, *,
+                id_map: np.ndarray | None = None,
+                donate: bool = True) -> int:
+        """Install a rebuilt index without blocking in-flight searches.
+
+        Builds the new generation (including shard slices) OFF the serving
+        lock, then swaps the pointer; searches already running keep the old
+        generation alive via refcount and complete against it, so every
+        result is consistent with exactly one index version.  Version
+        numbers come from a monotonic counter read under the lock, so
+        concurrent refreshes never mint duplicate cache-key generations.
+        With ``donate=True`` (the default) the service owns the retired
+        copy's buffers and deletes them once the last in-flight reference
+        drops — callers must not reuse the old ``IndexArrays`` afterwards.
+        Returns the new generation's version number."""
+        with self._lock:
+            backend = self._gen.engine.backend
+            self._next_version += 1
+            version = self._next_version
+        if isinstance(arrays, ScoringEngine):
+            engine = arrays
+        else:
+            engine = ScoringEngine(arrays=arrays, backend=backend)
+        new = self._make_generation(engine, id_map, version)
+        with self._lock:
+            old = self._gen
+            self._gen = new
+            self._version = new.version
+            self._refreshes += 1
+            old.retired = True
+            old.donate = donate and old.engine.arrays is not engine.arrays
+            dead = old.refs == 0
+        if dead:
+            self._donate(old)
+        return new.version
+
+    # -- request path -----------------------------------------------------
+
+    def search(self, q_dims, q_vals, q_dense, *, h: int | None = None,
+               alpha: int | None = None, beta: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """Serve a batch of hybrid queries through cache + bucketed engine.
+
+        q_dims/q_vals: (Q, nq) padded sparse queries (compact dim ids /
+        values, 1-D accepted for a single query); q_dense: (Q, d_dense).
+        Returns ``(scores (Q, h), ids (Q, h))`` numpy arrays; ids are
+        cache-sorted positions, or external ids when the service was built
+        with an ``id_map``.  Duplicate rows within one call are each counted
+        as their own cache lookup."""
+        h = self.h if h is None else h
+        alpha = self.alpha if alpha is None else alpha
+        beta = self.beta if beta is None else beta
+        q_dims = np.atleast_2d(np.asarray(q_dims, np.int32))
+        q_vals = np.atleast_2d(np.asarray(q_vals, np.float32))
+        q_dense = np.atleast_2d(np.asarray(q_dense, np.float32))
+        qn = q_dims.shape[0]
+
+        gen = self._acquire()
+        try:
+            # fingerprints only exist to key the cache: with caching off the
+            # hot path skips the per-row hashing entirely
+            use_cache = self._cache_cap > 0
+            keys = [query_fingerprint(q_dims[i], q_vals[i], q_dense[i],
+                                      h, alpha, beta, gen.version)
+                    for i in range(qn)] if use_cache else None
+            out_s = np.empty((qn, h), np.float32)
+            out_i = np.empty((qn, h), np.int64)
+            with self._lock:
+                self._requests += qn
+                if not use_cache:
+                    self._misses += qn
+                    miss = list(range(qn))
+                else:
+                    miss = []
+                    for i, key in enumerate(keys):
+                        hit = self._cache.get(key)
+                        if hit is not None:
+                            self._cache.move_to_end(key)
+                            self._hits += 1
+                            out_s[i], out_i[i] = hit
+                        else:
+                            self._misses += 1
+                            miss.append(i)
+
+            max_bucket = self.buckets[-1]
+            for lo in range(0, len(miss), max_bucket):
+                rows = miss[lo:lo + max_bucket]
+                s, ids = self._run_batch(gen, q_dims[rows], q_vals[rows],
+                                         q_dense[rows], h, alpha, beta)
+                with self._lock:
+                    for j, i in enumerate(rows):
+                        out_s[i], out_i[i] = s[j], ids[j]
+                        if use_cache:
+                            self._cache[keys[i]] = (s[j].copy(),
+                                                    ids[j].copy())
+                            self._cache.move_to_end(keys[i])
+                            while len(self._cache) > self._cache_cap:
+                                self._cache.popitem(last=False)
+                                self._evictions += 1
+            return out_s, out_i
+        finally:
+            self._release(gen)
+
+    def submit(self, q_dims, q_vals, q_dense, **kw) -> Future:
+        """Async client API: enqueue a search, get a Future of (scores, ids).
+
+        Dispatch order is submission order on a small worker pool; the shard
+        fan-out inside each search already overlaps device work via JAX
+        async dispatch."""
+        with self._lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self._max_workers,
+                    thread_name_prefix="query-service")
+            ex = self._executor
+        return ex.submit(self.search, q_dims, q_vals, q_dense, **kw)
+
+    def _run_batch(self, gen: _Generation, q_dims: np.ndarray,
+                   q_vals: np.ndarray, q_dense: np.ndarray,
+                   h: int, alpha: int, beta: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Pad one miss-batch to its bucket, run the (sharded) engine, trim."""
+        qn = q_dims.shape[0]
+        bucket = bucket_for(qn, self.buckets)
+        d_active = gen.engine.arrays.d_active
+        qd = jnp.asarray(pad_rows(q_dims, bucket, fill=d_active))
+        qv = jnp.asarray(pad_rows(q_vals, bucket))
+        qe = jnp.asarray(pad_rows(q_dense, bucket))
+
+        engines = gen.shards if gen.shards is not None else [gen.engine]
+        with self._lock:
+            self._batches += 1
+            c1, c2 = engines[0].candidate_counts(h, alpha, beta)
+            self._jit_keys.add((bucket, q_dims.shape[1], q_dense.shape[1],
+                                engines[0].num_points, h, c1, c2,
+                                gen.shards is not None))
+
+        if gen.shards is None:
+            s, ids, _ = gen.engine.search(qd, qv, qe,
+                                          h=h, alpha=alpha, beta=beta)
+            s = np.asarray(s)[:qn]
+            ids = np.asarray(ids)[:qn].astype(np.int64)
+        else:
+            # fan-out: dispatch EVERY shard before syncing any (JAX async
+            # dispatch overlaps the per-shard searches), then merge top-h
+            # on host — the in-process form of the paper's §7.2 RPC fan-out.
+            parts = [e.search(qd, qv, qe, h=h, alpha=alpha, beta=beta)
+                     for e in engines]
+            ss = np.concatenate([np.asarray(p[0]) for p in parts], axis=1)
+            ii = np.concatenate(
+                [np.asarray(p[1]).astype(np.int64) + int(off)
+                 for p, off in zip(parts, gen.offsets)], axis=1)
+            # stable sort + shards concatenated in row order => ties break
+            # by lowest global id, matching lax.top_k on the unsharded array
+            order = np.argsort(-ss, axis=1, kind="stable")[:, :h]
+            s = np.take_along_axis(ss, order, axis=1)[:qn]
+            ids = np.take_along_axis(ii, order, axis=1)[:qn]
+        if gen.id_map is not None:
+            ids = np.asarray(gen.id_map)[ids]
+        return s, ids
+
+    # -- introspection ----------------------------------------------------
+
+    def cache_info(self) -> CacheInfo:
+        """Exact LRU counters: hits, misses, evictions, size, capacity."""
+        with self._lock:
+            return CacheInfo(hits=self._hits, misses=self._misses,
+                             evictions=self._evictions,
+                             size=len(self._cache),
+                             capacity=self._cache_cap)
+
+    def jit_cache_info(self) -> JitCacheInfo:
+        """Observed engine compilation keys vs the declared bucketing bound."""
+        with self._lock:
+            shapes = tuple(sorted({k[0] for k in self._jit_keys}))
+            combos = {k[1:] for k in self._jit_keys}
+            return JitCacheInfo(batch_shapes=shapes,
+                                entries=len(self._jit_keys),
+                                bound=len(self.buckets) * max(1, len(combos)))
+
+    def stats(self) -> dict:
+        """Service counters for dashboards/benchmarks (plain dict)."""
+        with self._lock:
+            return {"requests": self._requests, "batches": self._batches,
+                    "refreshes": self._refreshes, "version": self._version,
+                    "cache_hits": self._hits, "cache_misses": self._misses,
+                    "cache_evictions": self._evictions,
+                    "num_shards": self.num_shards, "buckets": self.buckets}
+
+    @property
+    def version(self) -> int:
+        """Version number of the currently installed index generation."""
+        with self._lock:
+            return self._version
+
+    def close(self) -> None:
+        """Shut down the async submit pool (idempotent)."""
+        with self._lock:
+            ex, self._executor = self._executor, None
+        if ex is not None:
+            ex.shutdown(wait=True)

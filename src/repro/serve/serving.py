@@ -19,18 +19,27 @@ from .hybrid_head import HybridLMHead
 
 @dataclasses.dataclass
 class ServeSession:
+    """One serving deployment: model + params + optional PQ hybrid head.
+
+    ``head_buckets`` (DESIGN.md §5): when set, decode-time head calls pad
+    the batch up to these static sizes so sessions joining/leaving the batch
+    cannot grow the head's jit cache beyond ``len(head_buckets)`` entries."""
     model: Model
     params: dict
     max_len: int
     pq_head: HybridLMHead | None = None
     pq_params: object = None
+    head_buckets: tuple[int, ...] | None = None
 
     @classmethod
     def create(cls, model: Model, params: dict, max_len: int,
                use_pq_head: bool | None = None, use_kernel: bool = False,
-               head_backend: str | None = None):
+               head_backend: str | None = None,
+               head_buckets: tuple[int, ...] | None = None):
         """head_backend: engine backend name for the PQ head (ref,
-        onehot-mxu, pallas, pallas-packed); overrides use_kernel."""
+        onehot-mxu, pallas, pallas-packed); overrides use_kernel.
+        head_buckets: static decode-batch buckets for the PQ head (None
+        keeps the exact batch size, one compile per size)."""
         cfg = model.cfg
         use_pq = cfg.pq_head if use_pq_head is None else use_pq_head
         head = hp = None
@@ -39,18 +48,26 @@ class ServeSession:
                                 backend=head_backend)
             hp = head.build(params["lm_head"])
         return cls(model=model, params=params, max_len=max_len,
-                   pq_head=head, pq_params=hp)
+                   pq_head=head, pq_params=hp, head_buckets=head_buckets)
 
     def prefill(self, batch):
+        """Jitted prefill of a prompt batch up to ``max_len``."""
         return jax.jit(self.model.prefill, static_argnums=2)(
             self.params, batch, self.max_len)
 
     def next_token(self, logits_or_hidden, counts, *, penalty: float = 0.0):
+        """Greedy next token from logits (exact head) or hidden states
+        (PQ head), with the sparse repetition-penalty term."""
         if self.pq_head is not None:
             # h=1 needs a deep overfetch (paper Prop. 4: recall tracks the
             # (h, alpha*h) gap; top-1 margins are the tightest)
-            vals, ids = self.pq_head.approx_topk(
-                self.pq_params, logits_or_hidden, counts, 1, 128, penalty)
+            if self.head_buckets is not None:
+                vals, ids = self.pq_head.approx_topk_bucketed(
+                    self.pq_params, logits_or_hidden, counts, 1, 128,
+                    penalty, buckets=self.head_buckets)
+            else:
+                vals, ids = self.pq_head.approx_topk(
+                    self.pq_params, logits_or_hidden, counts, 1, 128, penalty)
             return ids[:, 0]
         logits = logits_or_hidden
         if penalty != 0.0 and counts is not None:

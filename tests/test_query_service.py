@@ -1,0 +1,245 @@
+"""QueryService (serve/query_service.py; DESIGN.md §5): bucketed
+micro-batching bounds the jit cache, the LRU result cache counts exactly,
+refresh() is consistent with exactly one index generation and donates the
+retired buffers, and the shard fan-out matches the single-device engine."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import split_index_arrays
+from repro.core.engine import query_fingerprint, release_index_arrays
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.core.sparse_index import sparse_queries_to_padded
+from repro.serve import QueryService
+
+PARAMS = HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6)
+
+
+@pytest.fixture(scope="module")
+def served(small_hybrid):
+    ds = small_hybrid
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense, PARAMS)
+    q_dims, q_vals = sparse_queries_to_padded(ds.q_sparse, idx.cols,
+                                              nq_max=idx.params.nq_max)
+    return ds, idx, q_dims, q_vals, np.asarray(ds.q_dense, np.float32)
+
+
+def test_service_matches_hybrid_index(served):
+    """Bucketed/cached request path returns the engine's results: ids are
+    bit-identical, scores within batch-padding reduction noise."""
+    ds, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=10, alpha=20, beta=5, id_map=idx.pi)
+    s, ids = svc.search(q_dims, q_vals, q_dense)
+    ref = idx.search(ds.q_sparse, ds.q_dense, h=10, alpha=20, beta=5)
+    np.testing.assert_array_equal(ids, ref.ids)
+    np.testing.assert_allclose(s, ref.scores, rtol=1e-6, atol=1e-6)
+
+
+def test_single_query_1d_inputs(served):
+    """A client sending one unbatched query gets the row-0 result back."""
+    ds, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=10, id_map=idx.pi)
+    batch_s, batch_i = svc.search(q_dims, q_vals, q_dense)
+    s, ids = svc.search(q_dims[0], q_vals[0], q_dense[0])
+    assert s.shape == (1, 10) and ids.shape == (1, 10)
+    np.testing.assert_array_equal(ids[0], batch_i[0])
+
+
+def test_bucketing_bounds_jit_cache(served):
+    """A ragged request stream (every batch size 1..max) never pads to more
+    than len(buckets) distinct shapes — the declared jit-cache bound."""
+    _, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=5, buckets=(1, 4, 12), cache_size=0)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        q = int(rng.integers(1, q_dims.shape[0] + 1))
+        rows = rng.choice(q_dims.shape[0], q, replace=False)
+        svc.search(q_dims[rows], q_vals[rows], q_dense[rows])
+    info = svc.jit_cache_info()
+    assert set(info.batch_shapes) <= {1, 4, 12}
+    assert len(info.batch_shapes) <= len(svc.buckets)
+    assert info.entries <= info.bound == len(svc.buckets)
+
+
+def test_oversized_batch_is_chunked(served):
+    """Requests above the largest bucket split into largest-bucket chunks
+    instead of minting a new shape."""
+    ds, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=10, buckets=(1, 4), cache_size=0,
+                       id_map=idx.pi)
+    s, ids = svc.search(q_dims, q_vals, q_dense)   # 12 queries > bucket 4
+    assert svc.jit_cache_info().batch_shapes == (4,)
+    ref = idx.search(ds.q_sparse, ds.q_dense, h=10, alpha=20, beta=5)
+    np.testing.assert_array_equal(ids, ref.ids)
+
+
+def test_cache_counters_exact_and_eviction(served):
+    """LRU behavior to the letter: per-row hit/miss counts, capacity-bounded
+    size, FIFO-of-least-recently-used eviction."""
+    _, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=5, cache_size=4)
+
+    def one(i):
+        return svc.search(q_dims[i:i + 1], q_vals[i:i + 1],
+                          q_dense[i:i + 1])
+
+    one(0), one(1), one(2)                       # 3 distinct queries: misses
+    info = svc.cache_info()
+    assert (info.hits, info.misses, info.size) == (0, 3, 3)
+
+    one(1)                                       # repeat: pure hit
+    info = svc.cache_info()
+    assert (info.hits, info.misses) == (1, 3)
+
+    one(3), one(4)                               # 5th distinct query evicts
+    info = svc.cache_info()                      # the LRU entry (query 0)
+    assert (info.size, info.capacity, info.evictions) == (4, 4, 1)
+
+    one(0)                                       # evicted => miss again
+    assert svc.cache_info().misses == 6
+    one(4)                                       # still resident => hit
+    assert svc.cache_info().hits == 2
+    assert svc.cache_info().hit_rate == 2 / 8
+
+
+def test_cache_disabled(served):
+    """cache_size=0 bypasses the cache entirely (misses still counted)."""
+    _, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=5, cache_size=0)
+    svc.search(q_dims, q_vals, q_dense)
+    svc.search(q_dims, q_vals, q_dense)
+    info = svc.cache_info()
+    assert info.hits == 0 and info.size == 0
+    assert info.misses == 2 * q_dims.shape[0]
+
+
+def test_fingerprint_distinguishes_params(served):
+    """The cache key covers search params and index generation — h=5 and
+    h=10 results for the same query must not collide."""
+    _, idx, q_dims, q_vals, q_dense = served
+    a = query_fingerprint(q_dims[0], q_vals[0], q_dense[0], 5, 20, 5, 0)
+    b = query_fingerprint(q_dims[0], q_vals[0], q_dense[0], 10, 20, 5, 0)
+    c = query_fingerprint(q_dims[0], q_vals[0], q_dense[0], 5, 20, 5, 1)
+    assert len({a, b, c}) == 3
+    svc = QueryService(idx.engine, cache_size=16)
+    s5, _ = svc.search(q_dims[:1], q_vals[:1], q_dense[:1], h=5)
+    s10, _ = svc.search(q_dims[:1], q_vals[:1], q_dense[:1], h=10)
+    assert s5.shape == (1, 5) and s10.shape == (1, 10)
+    assert svc.cache_info().hits == 0
+
+
+def test_sharded_fanout_matches_single_device(served):
+    """Fan-out over 4 per-shard engines with full per-shard refinement
+    returns bit-identical top-k ids to the unsharded engine (scores to
+    kernel-accumulation noise) — the §7.2 merge done on host."""
+    ds, idx, q_dims, q_vals, q_dense = served
+    # alpha*h covers every local row => per-shard refinement is exact
+    n_local = idx.num_points // 4
+    alpha = beta = n_local // 10 + 1
+    ref_svc = QueryService(idx.engine, h=10, alpha=alpha, beta=beta,
+                           cache_size=0, id_map=idx.pi)
+    fan = QueryService(idx.engine, h=10, alpha=alpha, beta=beta,
+                       cache_size=0, num_shards=4, id_map=idx.pi)
+    ref_s, ref_i = ref_svc.search(q_dims, q_vals, q_dense)
+    s, ids = fan.search(q_dims, q_vals, q_dense)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_allclose(s, ref_s, rtol=1e-5, atol=1e-5)
+
+
+def test_split_index_arrays_shapes(served):
+    """The fan-out entry point slices every row-parallel structure and
+    localizes the inverted index; column-space structures are shared."""
+    _, idx, *_ = served
+    arr = idx.engine.arrays
+    shards, offsets = split_index_arrays(arr, 4)
+    n_local = arr.num_points // 4
+    assert list(offsets) == [0, n_local, 2 * n_local, 3 * n_local]
+    for s in shards:
+        assert s.num_points == n_local
+        assert s.codes.shape[0] == n_local
+        assert s.dense_residual.q.shape[0] == n_local
+        assert s.sparse_residual.cols.shape[0] == n_local
+        assert int(s.inv_index.rows.max()) <= n_local
+        assert s.codebooks is arr.codebooks
+        assert s.head_pos is arr.head_pos
+    with pytest.raises(ValueError, match="equal shards"):
+        split_index_arrays(arr, 7)
+
+
+def test_refresh_mid_stream_consistency(small_hybrid):
+    """Results during a refresh are consistent with exactly ONE of the two
+    index generations; requests after refresh() returns see the new one;
+    the retired generation's buffers are donated once idle."""
+    ds = small_hybrid
+    idx_a = HybridIndex.build(ds.x_sparse, ds.x_dense, PARAMS)
+    idx_b = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                              dataclasses.replace(PARAMS, seed=11))
+    q_dims, q_vals = sparse_queries_to_padded(ds.q_sparse, idx_a.cols,
+                                              nq_max=idx_a.params.nq_max)
+    q_dense = np.asarray(ds.q_dense, np.float32)
+
+    # deterministic per-generation references through identical bucketing
+    ref_a = QueryService(idx_a.engine, h=10, cache_size=0).search(
+        q_dims, q_vals, q_dense)
+    ref_b = QueryService(idx_b.engine, h=10, cache_size=0).search(
+        q_dims, q_vals, q_dense)
+    assert not np.array_equal(ref_a[0], ref_b[0])   # generations distinguishable
+
+    svc = QueryService(idx_a.engine, h=10, cache_size=64)
+    futures = [svc.submit(q_dims, q_vals, q_dense) for _ in range(4)]
+    svc.refresh(idx_b.engine)
+    futures += [svc.submit(q_dims, q_vals, q_dense) for _ in range(2)]
+    results = [f.result() for f in futures]
+    for s, ids in results:
+        from_a = np.array_equal(s, ref_a[0]) and np.array_equal(ids, ref_a[1])
+        from_b = np.array_equal(s, ref_b[0]) and np.array_equal(ids, ref_b[1])
+        assert from_a != from_b                     # exactly one generation
+    # post-refresh submissions (and any later search) see generation B only
+    s, ids = svc.search(q_dims, q_vals, q_dense)
+    np.testing.assert_array_equal(s, ref_b[0])
+    for s, ids in results[4:]:
+        np.testing.assert_array_equal(s, ref_b[0])
+
+    # donation: retired generation's device buffers are gone, new ones alive
+    assert idx_a.engine.arrays.codes.is_deleted()
+    assert not idx_b.engine.arrays.codes.is_deleted()
+    svc.close()
+
+
+def test_release_index_arrays_keep(small_hybrid):
+    """The donation hook skips every leaf shared with a kept pytree."""
+    ds = small_hybrid
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                            dataclasses.replace(PARAMS, kmeans_iters=2))
+    arr = idx.engine.arrays
+    shards, _ = split_index_arrays(arr, 2)
+    # shards share codebooks with the parent: keeping the parent must
+    # protect those leaves while the shard's own slices are freed
+    deleted = release_index_arrays(shards[0], keep=[arr])
+    assert deleted > 0
+    assert shards[0].codes.is_deleted()
+    assert not arr.codes.is_deleted()
+    assert not shards[0].codebooks.centers.is_deleted()   # shared => kept
+
+
+def test_refresh_version_invalidates_cache(small_hybrid):
+    """Cache keys include the generation: a warm query re-executes (miss)
+    after refresh instead of serving the old index's result."""
+    ds = small_hybrid
+    idx_a = HybridIndex.build(ds.x_sparse, ds.x_dense, PARAMS)
+    idx_b = HybridIndex.build(ds.x_sparse, ds.x_dense,
+                              dataclasses.replace(PARAMS, seed=11))
+    q_dims, q_vals = sparse_queries_to_padded(ds.q_sparse, idx_a.cols,
+                                              nq_max=idx_a.params.nq_max)
+    q_dense = np.asarray(ds.q_dense, np.float32)
+    svc = QueryService(idx_a.engine, h=10, cache_size=64)
+    svc.search(q_dims[:1], q_vals[:1], q_dense[:1])
+    svc.search(q_dims[:1], q_vals[:1], q_dense[:1])
+    assert svc.cache_info().hits == 1
+    assert svc.refresh(idx_b.engine) == 1
+    svc.search(q_dims[:1], q_vals[:1], q_dense[:1])
+    info = svc.cache_info()
+    assert info.hits == 1 and info.misses == 2

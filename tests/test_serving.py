@@ -60,6 +60,24 @@ def test_pq_head_packed_backend(model_and_params):
     assert (np.asarray(ia) == np.asarray(ib)).mean() > 0.95
 
 
+def test_pq_head_bucketed_decode_batches(model_and_params):
+    """approx_topk_bucketed (DESIGN.md §5): ragged decode batches pad up to
+    the static buckets — same ids as the unpadded call, for every size."""
+    cfg, m, params = model_and_params
+    head = HybridLMHead(cfg)
+    hp = head.build(params["lm_head"])
+    hid = jax.random.normal(KEY, (7, cfg.d_model), jnp.float32)
+    counts = jnp.zeros((7, cfg.vocab_size), jnp.float32)
+    # b=7 with buckets (2, 4) also exercises the oversized-batch chunking
+    # (7 -> chunks of 4 + 3, the tail padded up to 4)
+    for b in (1, 3, 7):
+        va, ia = head.approx_topk(hp, hid[:b], counts[:b], 10, 8, 0.1)
+        vb, ib = head.approx_topk_bucketed(hp, hid[:b], counts[:b], 10, 8,
+                                           0.1, buckets=(2, 4))
+        assert ib.shape == (b, 10)
+        assert (np.asarray(ia) == np.asarray(ib)).mean() > 0.95
+
+
 def test_hybrid_penalty_changes_ranking(model_and_params):
     """The sparse (repetition-count) component must steer retrieval — the
     hybrid q·x = dense + sparse decomposition doing real work."""

@@ -1,21 +1,28 @@
 #!/usr/bin/env python
 """Markdown link-and-reference checker (CI gate).
 
-Two classes of dangling reference have bitten this repo:
+Four classes of dangling reference have bitten (or would bite) this repo:
 
 1. source docstrings citing ``DESIGN.md §<section>`` for sections (or a
    whole file) that don't exist — 16 files cited DESIGN.md before it was
    written;
 2. intra-repo markdown links (``[text](relative/path)``) whose target file
-   was renamed or never committed.
+   was renamed or never committed;
+3. markdown-referenced ``examples/*.py`` files that don't exist — README
+   quickstart commands live inside code fences, which the link check
+   deliberately skips, so renamed examples rotted silently;
+4. public ``serve/`` API without docstrings — the serving layer is the
+   documented interface of DESIGN.md §5, so every public function/class
+   there must say what it does.
 
-This script fails (exit 1) on either.  Zero dependencies; run from anywhere:
+This script fails (exit 1) on any.  Zero dependencies; run from anywhere:
 
     python tools/check_docs.py
 """
 
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -79,10 +86,51 @@ def check_markdown_links(errors: list[str]) -> None:
                 errors.append(f"{rel}: link target does not exist: {target}")
 
 
+EXAMPLE_RE = re.compile(r"\bexamples/[A-Za-z0-9_./-]+\.py\b")
+
+
+def check_example_references(errors: list[str]) -> None:
+    """Every ``examples/<name>.py`` mentioned in any markdown file must
+    exist — INCLUDING mentions inside code fences (that's where quickstart
+    commands live, and exactly what rots when an example is renamed)."""
+    for path in _iter_files(REPO, (".md",)):
+        text = path.read_text(errors="replace")
+        for m in sorted(set(EXAMPLE_RE.findall(text))):
+            if not (REPO / m).exists():
+                rel = path.relative_to(REPO)
+                errors.append(
+                    f"{rel}: references example file that does not exist: {m}")
+
+
+def _public_defs(node: ast.Module | ast.ClassDef, prefix: str = ""):
+    for child in node.body:
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            if child.name.startswith("_"):
+                continue
+            yield prefix + child.name, child
+            if isinstance(child, ast.ClassDef):
+                yield from _public_defs(child, prefix + child.name + ".")
+
+
+def check_serve_docstrings(errors: list[str]) -> None:
+    """The serving layer (src/repro/serve/) is DESIGN.md §5's documented
+    interface: every public function, class, and method needs a docstring."""
+    for path in sorted((REPO / "src" / "repro" / "serve").glob("*.py")):
+        rel = path.relative_to(REPO)
+        tree = ast.parse(path.read_text(errors="replace"))
+        for name, node in _public_defs(tree):
+            if ast.get_docstring(node) is None:
+                errors.append(f"{rel}:{node.lineno}: public serve API "
+                              f"`{name}` has no docstring")
+
+
 def main() -> int:
     errors: list[str] = []
     check_design_citations(errors)
     check_markdown_links(errors)
+    check_example_references(errors)
+    check_serve_docstrings(errors)
     if errors:
         print(f"check_docs: {len(errors)} dangling reference(s)")
         for e in errors:
