@@ -23,7 +23,27 @@ Emits CSV rows like the other benchmark modules AND writes
                              in BENCH_engine.json is the hardware claim)
     smoke                    true when run with --smoke (CI scale)
 
-Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+``--stream`` instead runs the streaming-mutation workload (DESIGN.md §6)
+and writes ``BENCH_stream.json``:
+
+    workload                 points/queries/dims of the synthetic index
+    delta_free_qps           service QPS before any mutation (chunk 8)
+    delta_qps                same stream with delta_rows live delta-shard
+                             rows fanned in (the headline: must stay within
+                             2x of delta_free_qps — interpret-mode numbers
+                             are a structural proxy off-TPU)
+    delta_ratio              delta_qps / delta_free_qps
+    delta_rows               live rows in the delta when delta_qps ran
+    insert_rate_rows_per_s   encode-on-insert throughput (batches of 16)
+    sustained                {qps, insert_rate, rounds}: interleaved
+                             insert-batch + query-stream rounds on one wall
+                             clock — the serving-while-mutating claim
+    compaction               {seconds, rows_folded}: the fold-down rebuild
+                             + refresh() swap
+    post_compact_qps         stream QPS on the compacted generation
+    smoke                    true when run with --smoke (CI scale)
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--stream]
 """
 
 from __future__ import annotations
@@ -46,6 +66,7 @@ from repro.serve import QueryService
 from .common import emit, timeit
 
 OUT_JSON = "BENCH_serve.json"
+OUT_STREAM_JSON = "BENCH_stream.json"
 BUCKETS = (1, 8, 32)
 H, ALPHA, BETA = 20, 20, 5
 
@@ -192,9 +213,118 @@ def main(smoke: bool = False):
         json.dump(out, f, indent=2)
 
 
+def _sparse_stream_qps(svc: QueryService, q_sparse, q_dense,
+                       chunk: int, repeat: int) -> float:
+    """Stream RAW sparse queries through search_sparse in chunk-sized
+    requests (per-generation encoding included: the compact column space
+    changes at compaction, so this is what a streaming client pays)."""
+    nq = q_sparse.shape[0]
+
+    def run():
+        for lo in range(0, nq, chunk):
+            svc.search_sparse(q_sparse[lo:lo + chunk],
+                              q_dense[lo:lo + chunk])
+
+    run()  # warm the jit cache for this bucket / delta capacity
+    secs, _ = timeit(run, repeat=repeat)
+    return nq / secs
+
+
+def stream_main(smoke: bool = False):
+    """Streaming-mutation workload (DESIGN.md §6): QPS with and without a
+    live delta shard, sustained insert+query interleave, compaction cost.
+    Prints CSV rows and writes BENCH_stream.json."""
+    repeat = 2 if smoke else 5
+    chunk = 8
+    n, d_s, nnz = (4000, 6000, 24) if smoke else (20000, 20000, 48)
+    n_delta = 128 if smoke else 512
+    ds = make_hybrid_dataset(num_points=n + n_delta, num_queries=32,
+                             d_sparse=d_s, d_dense=64, nnz_per_row=nnz,
+                             seed=3)
+    idx = HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n],
+                            HybridIndexParams(keep_top=96, head_dims=64,
+                                              kmeans_iters=6),
+                            mutable=True)
+    svc = QueryService(index=idx, h=H, alpha=ALPHA, beta=BETA,
+                       buckets=BUCKETS, cache_size=0, auto_compact=False)
+    qs, qd = ds.q_sparse, np.asarray(ds.q_dense, np.float32)
+
+    # -- baseline: no mutations yet ---------------------------------------
+    qps_free = _sparse_stream_qps(svc, qs, qd, chunk, repeat)
+    emit("stream_delta_free", 1e6 / qps_free, f"qps={qps_free:.1f}")
+
+    # -- fill the delta, measure insert rate ------------------------------
+    t0 = time.perf_counter()
+    for lo in range(0, n_delta, 16):
+        svc.insert(ds.x_sparse[n + lo: n + lo + 16],
+                   ds.x_dense[n + lo: n + lo + 16])
+    insert_rate = n_delta / (time.perf_counter() - t0)
+    delta_rows = svc.stats()["delta_rows"]
+    assert delta_rows == n_delta
+
+    # -- QPS with the delta fanned in (the headline ratio) ----------------
+    qps_delta = _sparse_stream_qps(svc, qs, qd, chunk, repeat)
+    ratio = qps_delta / qps_free
+    emit("stream_delta_live", 1e6 / qps_delta,
+         f"qps={qps_delta:.1f};ratio_vs_free={ratio:.2f}x;"
+         f"delta_rows={delta_rows}")
+
+    # -- sustained interleave: insert batches racing the query stream -----
+    rounds = 3 if smoke else 6
+    t0 = time.perf_counter()
+    done = 0
+    for r in range(rounds):
+        svc.insert(ds.x_sparse[n + (r % 8) * 8: n + (r % 8) * 8 + 8],
+                   ds.x_dense[n + (r % 8) * 8: n + (r % 8) * 8 + 8],
+                   ids=np.arange(n + n_delta + r * 8,
+                                 n + n_delta + r * 8 + 8))
+        for lo in range(0, 32, chunk):
+            svc.search_sparse(qs[lo:lo + chunk], qd[lo:lo + chunk])
+        done += 8
+    wall = time.perf_counter() - t0
+    sustained_qps = rounds * 32 / wall
+    sustained_ins = done / wall
+    emit("stream_sustained", 1e6 / sustained_qps,
+         f"qps={sustained_qps:.1f};inserts_per_s={sustained_ins:.1f}")
+
+    # -- compaction: fold everything down through refresh() ---------------
+    folded = svc.stats()["delta_rows"]
+    t0 = time.perf_counter()
+    svc.compact()
+    compact_s = time.perf_counter() - t0
+    qps_post = _sparse_stream_qps(svc, qs, qd, chunk, repeat)
+    emit("stream_compaction", compact_s * 1e6,
+         f"rows_folded={folded};post_compact_qps={qps_post:.1f}")
+
+    out = {
+        "workload": {"num_points": n, "num_queries": 32, "d_dense": 64,
+                     "h": H, "alpha": ALPHA, "beta": BETA, "chunk": chunk},
+        "delta_free_qps": qps_free,
+        "delta_qps": qps_delta,
+        "delta_ratio": ratio,
+        "delta_rows": int(delta_rows),
+        "insert_rate_rows_per_s": insert_rate,
+        "sustained": {"qps": sustained_qps, "insert_rate": sustained_ins,
+                      "rounds": rounds},
+        "compaction": {"seconds": compact_s, "rows_folded": int(folded)},
+        "post_compact_qps": qps_post,
+        "smoke": smoke,
+    }
+    with open(OUT_STREAM_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    svc.close()
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI scale: small index, fewer repeats")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the streaming-mutation workload instead "
+                         "(writes BENCH_stream.json)")
     args = ap.parse_args()
-    main(smoke=args.smoke)
+    if args.stream:
+        print("name,us_per_call,derived")
+        stream_main(smoke=args.smoke)
+    else:
+        main(smoke=args.smoke)

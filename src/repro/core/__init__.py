@@ -13,3 +13,4 @@ from .hybrid import HybridIndex, HybridIndexParams, SearchResult      # noqa: F4
 from .pq import (PQCodebooks, train_codebooks, pq_encode, pq_decode,  # noqa: F401
                  adc_lut, adc_scores_ref, scalar_quantize, ScalarQuant)
 from .pruning import prune_split, per_dim_thresholds                  # noqa: F401
+from .streaming import DeltaShard, MutableState, search_mutable       # noqa: F401

@@ -39,13 +39,59 @@ from .sparse_index import (PaddedInvertedIndex, PaddedSparseRows,
 
 __all__ = ["sharded_pass1_topk", "make_sharded_search_fn",
            "make_sharded_search3_fn", "sharded_three_pass_topk", "merge_topk",
-           "split_index_arrays"]
+           "merge_topk_host", "ceil16", "split_index_arrays"]
 
 
 def merge_topk(scores: jax.Array, ids: jax.Array, k: int):
     """Merge per-shard candidates: (Q, S*k) -> (Q, k)."""
     vals, pos = jax.lax.top_k(scores, k)
     return vals, jnp.take_along_axis(ids, pos, axis=1)
+
+
+def ceil16(n: int) -> int:
+    """Round up to the 16 bucket — the tombstone-overfetch granularity
+    (DESIGN.md §6.2): overfetch sizes are jit-static, so bucketing them
+    keeps the compilation cache bounded while mutations accumulate."""
+    return -(-n // 16) * 16
+
+
+def merge_topk_host(parts, h: int, *, drop_ids=None):
+    """Host-side top-h merge over per-engine candidate sets, the streaming
+    generalization of the serving fan-out merge (DESIGN.md §5.4, §6.2).
+
+    parts: iterable of ``(scores (Q, k_i), ids (Q, k_i), filtered)`` — the
+    per-engine top-k, already mapped to a COMMON (external) id space; the
+    widths k_i may differ (the delta shard fetches its whole capacity).
+    ``filtered=True`` parts drop candidates whose id is in ``drop_ids``
+    (main-generation tombstones); the delta part passes False so an
+    upserted row's new copy survives while its superseded main copy dies.
+
+    Stable descending sort over parts concatenated in caller order, so ties
+    break exactly like ``lax.top_k`` on the unsharded array when parts are
+    shard slices in row order.  Entries with non-finite scores (tombstone
+    masks, dropped ids) get id -1; callers overfetch (h + tombstone slack)
+    so a full result always has h real rows.  Returns (scores, ids) (Q, h).
+    """
+    drop = np.asarray(sorted(drop_ids), np.int64) \
+        if drop_ids else np.empty(0, np.int64)
+    ss, ii = [], []
+    for s, ids, filtered in parts:
+        s = np.asarray(s, np.float32)
+        ids = np.asarray(ids, np.int64)
+        if filtered and drop.size:
+            s = np.where(np.isin(ids, drop), -np.inf, s)
+        ss.append(s)
+        ii.append(ids)
+    ss = np.concatenate(ss, axis=1)
+    ii = np.concatenate(ii, axis=1)
+    if ss.shape[1] < h:                       # tiny pool: pad to (Q, h)
+        pad = h - ss.shape[1]
+        ss = np.pad(ss, ((0, 0), (0, pad)), constant_values=-np.inf)
+        ii = np.pad(ii, ((0, 0), (0, pad)), constant_values=-1)
+    order = np.argsort(-ss, axis=1, kind="stable")[:, :h]
+    s_out = np.take_along_axis(ss, order, axis=1)
+    i_out = np.take_along_axis(ii, order, axis=1)
+    return s_out, np.where(np.isfinite(s_out), i_out, -1)
 
 
 def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
@@ -84,6 +130,8 @@ def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
     codes = np.asarray(arrays.codes)
     head_block = (np.asarray(arrays.head.block, np.float32)
                   if arrays.head is not None else None)
+    vmask = (np.asarray(arrays.valid_mask)
+             if arrays.valid_mask is not None else None)
 
     shards: list[eng.IndexArrays] = []
     for s in range(num_shards):
@@ -126,7 +174,9 @@ def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
                 cols=jnp.asarray(sres_cols[lo:hi]),
                 vals=jnp.asarray(sres_vals[lo:hi])),
             num_points=n_local, d_active=arrays.d_active,
-            head_max_steps=max_steps, codes_packed=arrays.codes_packed))
+            head_max_steps=max_steps, codes_packed=arrays.codes_packed,
+            valid_mask=(jnp.asarray(vmask[lo:hi])
+                        if vmask is not None else None)))
     return shards, offsets
 
 

@@ -50,6 +50,7 @@ __all__ = [
     "Backend", "IndexArrays", "ScoringEngine", "adc_scores",
     "scatter_queries_compact", "scatter_head_queries", "pass1_scores",
     "three_pass_search", "query_fingerprint", "release_index_arrays",
+    "tombstone_mask",
 ]
 
 
@@ -127,13 +128,21 @@ class IndexArrays:
     head_max_steps: int = dataclasses.field(metadata=dict(static=True))
     codes_packed: bool = dataclasses.field(
         default=False, metadata=dict(static=True))
+    # (N,) float32 additive row mask: 0 for live rows, -inf for tombstoned or
+    # not-yet-filled slots (DESIGN.md §6).  None (the default, and the only
+    # value the batch build produces) means every row is live.  The mask is a
+    # pytree leaf, so a delta shard can retire rows without reshaping — the
+    # jit cache only grows when the capacity doubles.
+    valid_mask: jax.Array | None = None
 
     @classmethod
     def build(cls, *, codebooks: PQCodebooks, codes: jax.Array,
               inv_index: PaddedInvertedIndex, head: TileSparseHead | None,
               dense_residual: ScalarQuant, sparse_residual: PaddedSparseRows,
               num_points: int, d_active: int,
-              with_bcsr: bool = True, pack: bool = False) -> "IndexArrays":
+              with_bcsr: bool = True, pack: bool = False,
+              pre_packed: bool = False,
+              valid_mask: jax.Array | None = None) -> "IndexArrays":
         """Host-side assembly: derives the head query scatter table and the
         BCSR form once, so search never leaves the device.
 
@@ -146,7 +155,12 @@ class IndexArrays:
         the pass-1 scan stream.  Requires l <= 16 codewords (4 bits); the
         PALLAS_PACKED kernel additionally needs l == 16 — ScoringEngine
         enforces that pairing at construction.  Odd K gets a zero phantom
-        nibble that every scoring path masks out."""
+        nibble that every scoring path masks out.
+
+        pre_packed=True declares that ``codes`` are ALREADY two-per-byte
+        (e.g. a delta shard that packs row by row on append, DESIGN.md §6) —
+        the packed flag is set without re-packing.  valid_mask forwards the
+        (N,) live/tombstone mask; the batch build leaves it None."""
         pos = np.full(d_active + 1, 0, np.int32)
         tiles = jnp.zeros((1, 1, 1), jnp.float32)
         ptr = jnp.zeros((2,), jnp.int32)
@@ -161,11 +175,15 @@ class IndexArrays:
             if with_bcsr:
                 from repro.kernels.ops import bcsr_from_head
                 tiles, ptr, col, max_steps = bcsr_from_head(head)
-        if pack:
+        if pack and pre_packed:
+            raise ValueError("pass pack=True (pack now) or pre_packed=True "
+                             "(already packed), not both")
+        if pack or pre_packed:
             if codebooks.num_codes > 16:
                 raise ValueError(
                     "packed codes need l <= 16 codewords (4 bits), got "
                     f"l={codebooks.num_codes}")
+        if pack:
             from repro.kernels.ops import pack_codes
             codes = jnp.asarray(pack_codes(np.asarray(codes)))
         return cls(codebooks=codebooks, codes=codes, inv_index=inv_index,
@@ -173,7 +191,7 @@ class IndexArrays:
                    head_ptr=ptr, head_col=col, dense_residual=dense_residual,
                    sparse_residual=sparse_residual, num_points=num_points,
                    d_active=d_active, head_max_steps=max_steps,
-                   codes_packed=pack)
+                   codes_packed=pack or pre_packed, valid_mask=valid_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +241,12 @@ def _head_scores(arrays: IndexArrays, q_head: jax.Array,
 def pass1_scores(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
                  lut: jax.Array, backend: Backend = Backend.REF) -> jax.Array:
     """Pass-1 approximate hybrid scores over the full (local) shard:
-    inverted-index sparse + head-block sparse + LUT ADC dense.  (Q, N)."""
+    inverted-index sparse + head-block sparse + LUT ADC dense.  (Q, N).
+
+    When the arrays carry a ``valid_mask`` (delta shard, DESIGN.md §6) it is
+    added here, so tombstoned and empty slots score -inf and can never crowd
+    live rows out of ANY pass's top-k — the later passes only add finite
+    residual terms to -inf."""
     sparse = score_inverted(arrays.inv_index, q_dims, q_vals)
     if arrays.head is not None:
         q_head = scatter_head_queries(q_dims, q_vals, arrays.head_pos,
@@ -231,7 +254,21 @@ def pass1_scores(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
         head_s = _head_scores(arrays, q_head, backend)
         sparse = sparse + head_s[:, : arrays.num_points]
     dense = adc_scores(arrays.codes, lut, backend, packed=arrays.codes_packed)
-    return sparse + dense
+    total = sparse + dense
+    if arrays.valid_mask is not None:
+        total = total + arrays.valid_mask[None, :]
+    return total
+
+
+def tombstone_mask(capacity: int, count: int,
+                   dead: np.ndarray | None = None) -> jax.Array:
+    """(capacity,) additive row mask for a delta shard: 0 for live slots,
+    -inf for tombstoned slots and slots at/after ``count`` (never filled).
+    ``dead``: optional (capacity,) bool of tombstoned slots."""
+    live = np.arange(capacity) < count
+    if dead is not None:
+        live &= ~np.asarray(dead, bool)
+    return jnp.asarray(np.where(live, 0.0, -np.inf).astype(np.float32))
 
 
 @partial(jax.jit, static_argnames=("h", "c1", "c2", "backend"))

@@ -100,11 +100,17 @@ class HybridIndex:
     dense_residual: ScalarQuant
     d_dense: int
     engine: ScoringEngine              # device-resident three-pass scorer
+    # streaming support (core/streaming.py, DESIGN.md §6): present iff the
+    # index was built with mutable=True; owns the retained corpus, the delta
+    # shard, and the tombstone bookkeeping behind insert()/delete()/compact()
+    mutable_state: "object | None" = None
 
     # -- build -------------------------------------------------------------
     @classmethod
     def build(cls, x_sparse: sp.spmatrix, x_dense: np.ndarray,
-              params: HybridIndexParams = HybridIndexParams()) -> "HybridIndex":
+              params: HybridIndexParams = HybridIndexParams(), *,
+              mutable: bool = False,
+              ext_ids: np.ndarray | None = None) -> "HybridIndex":
         x_sparse = x_sparse.tocsr()
         n = x_sparse.shape[0]
         x_dense = np.asarray(x_dense, np.float32)
@@ -162,18 +168,65 @@ class HybridIndex:
         engine = ScoringEngine(arrays=arrays, backend=backend)
         # hold the ENGINE's codes (possibly packed): the unpacked (N, K)
         # build-time array must not stay resident or packing saves nothing.
-        return cls(params=params, num_points=n, pi=pi, cols=cols,
-                   inv_index=inv_index, head=head, head_dim_ids=head_dim_ids,
-                   sparse_residual=sparse_residual, codebooks=cb,
-                   codes=arrays.codes, dense_residual=dres, d_dense=d_dense,
-                   engine=engine)
+        idx = cls(params=params, num_points=n, pi=pi, cols=cols,
+                  inv_index=inv_index, head=head, head_dim_ids=head_dim_ids,
+                  sparse_residual=sparse_residual, codebooks=cb,
+                  codes=arrays.codes, dense_residual=dres, d_dense=d_dense,
+                  engine=engine)
+        if mutable:
+            from .streaming import MutableState
+            idx.mutable_state = MutableState(idx, x_sparse, x_dense,
+                                             ext_ids=ext_ids)
+        elif ext_ids is not None:
+            raise ValueError("ext_ids only applies with mutable=True")
+        return idx
+
+    # -- streaming mutation (thin wrappers over core/streaming.py) ---------
+    def _mutable(self):
+        if self.mutable_state is None:
+            raise ValueError("index is immutable; build with "
+                             "HybridIndex.build(..., mutable=True)")
+        return self.mutable_state
+
+    def insert(self, x_sparse, x_dense, ids=None) -> np.ndarray:
+        """Insert (or upsert) rows into the delta shard (DESIGN.md §6),
+        encoded against the frozen build artifacts.  Returns external ids."""
+        return self._mutable().insert(x_sparse, x_dense, ids=ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by external id; returns how many were live."""
+        return self._mutable().delete(ids)
+
+    def compact(self) -> "HybridIndex":
+        """Fold the delta + tombstones into a fresh batch build of the
+        surviving rows; returns the NEW mutable index (this one is
+        untouched — swap at the call site, e.g. QueryService.refresh)."""
+        return self._mutable().compact()
+
+    @property
+    def delta_version(self) -> int:
+        """Monotone mutation counter (0 for an untouched mutable index)."""
+        return self._mutable().version
 
     # -- search ------------------------------------------------------------
     def search(self, q_sparse: sp.spmatrix, q_dense: np.ndarray, h: int = 20,
                alpha: int | None = None, beta: int | None = None,
                return_pass1: bool = False) -> SearchResult:
         """Thin wrapper: pad queries to the device layout, run the engine's
-        single-jit three-pass search, map positions back to original ids."""
+        single-jit three-pass search, map positions back to original ids.
+
+        A mutable index (build(..., mutable=True)) routes through the
+        delta-merging path instead and returns EXTERNAL ids (which default
+        to build-row positions, so the two paths agree until the first
+        mutation)."""
+        if self.mutable_state is not None:
+            if return_pass1:
+                raise ValueError("return_pass1 is a diagnostic of the "
+                                 "single-engine path; not available on a "
+                                 "mutable index")
+            from .streaming import search_mutable
+            return search_mutable(self, q_sparse, q_dense, h=h,
+                                  alpha=alpha, beta=beta)
         p = self.params
         alpha = p.alpha if alpha is None else alpha
         beta = p.beta if beta is None else beta

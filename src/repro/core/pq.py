@@ -26,7 +26,8 @@ from repro.kernels.lut16 import pack_codes, unpack_codes  # noqa: F401
 __all__ = [
     "PQCodebooks", "train_codebooks", "pq_encode", "pq_decode",
     "adc_lut", "adc_scores_ref", "ScalarQuant", "scalar_quantize",
-    "scalar_dequantize", "whitening_transform", "pack_codes", "unpack_codes",
+    "scalar_dequantize", "scalar_quantize_rows", "encode_rows",
+    "whitening_transform", "pack_codes", "unpack_codes",
 ]
 
 
@@ -184,6 +185,32 @@ def scalar_quantize(x: jax.Array) -> ScalarQuant:
 @jax.jit
 def scalar_dequantize(sq: ScalarQuant) -> jax.Array:
     return (sq.q.astype(jnp.float32) + 128.0) * sq.scale + sq.zero
+
+
+def scalar_quantize_rows(x: np.ndarray, scale: np.ndarray,
+                         zero: np.ndarray) -> np.ndarray:
+    """Quantize NEW rows with FROZEN affine params (delta-shard insert path,
+    DESIGN.md §6): the streaming index must keep serving the main
+    generation's ``scale``/``zero``, so inserted residual rows are clamped
+    into the existing grid instead of re-deriving it.  Same rounding as
+    ``scalar_quantize`` (half-to-even), host-side numpy.  (M, d) -> int8."""
+    x = np.asarray(x, np.float32)
+    scale = np.asarray(scale, np.float32)
+    zero = np.asarray(zero, np.float32)
+    q = np.clip(np.round((x - zero) / scale), 0, 255) - 128
+    return q.astype(np.int8)
+
+
+def encode_rows(x_dense: np.ndarray, codebooks: PQCodebooks, *,
+                pack: bool = False) -> np.ndarray:
+    """Encode-on-insert: PQ-encode NEW dense rows against the FROZEN
+    codebooks of the serving index (no retraining until compaction,
+    DESIGN.md §6).  pack=True returns the rows packed two codes per byte —
+    the delta shard's append unit — with pack_codes' odd-K phantom nibble.
+    (M, d) -> (M, K) uint8, or (M, ceil(K/2)) packed."""
+    codes = np.asarray(pq_encode(jnp.asarray(x_dense, jnp.float32),
+                                 codebooks))
+    return pack_codes(codes) if pack else codes
 
 
 def whitening_transform(x_dense: jax.Array, eps: float = 1e-4):

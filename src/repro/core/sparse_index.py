@@ -35,7 +35,7 @@ __all__ = [
     "build_compact_columns", "build_padded_inverted_index",
     "build_tile_sparse_head", "score_inverted", "score_head_ref",
     "sparse_queries_to_padded", "PaddedSparseRows", "build_padded_rows",
-    "score_rows",
+    "score_rows", "DeltaPostings",
 ]
 
 
@@ -124,6 +124,67 @@ def sparse_queries_to_padded(q_sparse: sp.spmatrix, cols: CompactColumns,
         dims[i, : len(c)] = c
         vals[i, : len(c)] = v
     return dims, vals
+
+
+class DeltaPostings:
+    """Append-only inverted index for a delta shard (DESIGN.md §6).
+
+    Host-side mirror of ``PaddedInvertedIndex`` over the FROZEN compact
+    column space of the serving main index: inserting a row appends one
+    posting per nonzero dim.  ``l_max`` (the rectangle width) doubles
+    amortized when a dim's list overflows — until ``l_cap``, the delta's
+    analogue of the main index's eta-pruning: a power-law hot dim would
+    otherwise grow its list to the full delta row count and blow up the
+    pass-1 gather rectangle.  Beyond the cap, ``append`` hands the entries
+    back as SPILL and the delta shard stores them in its per-slot residual
+    rows instead (scored exactly in pass 3) — the paper's data-index /
+    residual-index split applied to the streaming tier.  Tombstoned rows
+    keep their postings; the delta's ``valid_mask`` zeroes their scores, and
+    compaction drops them for real.
+    """
+
+    def __init__(self, d_active: int, l_max: int = 4,
+                 l_cap: int | None = 16):
+        self.d_active = int(d_active)
+        self.l_max = max(int(l_max), 1)
+        self.l_cap = None if l_cap is None else max(int(l_cap), self.l_max)
+        self._rows = np.full((self.d_active, self.l_max), -1, np.int32)
+        self._vals = np.zeros((self.d_active, self.l_max), np.float32)
+        self._lens = np.zeros(self.d_active, np.int32)
+
+    def append(self, slot: int, dims: np.ndarray,
+               vals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Add row ``slot``'s postings; dims are compact ids < d_active.
+        Returns ``(spill_dims, spill_vals)``: the entries whose dim list is
+        at ``l_cap`` — the caller owns scoring those through pass 3."""
+        spill_d, spill_v = [], []
+        for d, v in zip(np.asarray(dims, np.int64), np.asarray(vals)):
+            n = int(self._lens[d])
+            if self.l_cap is not None and n >= self.l_cap:
+                spill_d.append(int(d))
+                spill_v.append(float(v))
+                continue
+            if n == self.l_max:
+                grow = self.l_max
+                self._rows = np.pad(self._rows, ((0, 0), (0, grow)),
+                                    constant_values=-1)
+                self._vals = np.pad(self._vals, ((0, 0), (0, grow)))
+                self.l_max *= 2
+            self._rows[d, n] = slot
+            self._vals[d, n] = v
+            self._lens[d] = n + 1
+        return (np.asarray(spill_d, np.int32),
+                np.asarray(spill_v, np.float32))
+
+    def to_padded(self, num_points: int) -> PaddedInvertedIndex:
+        """Materialize for the device: empty slots get the ``num_points``
+        sentinel (scatter-dropped by score_inverted), exactly like the batch
+        builder's padding."""
+        rows = np.where(self._rows >= 0, self._rows,
+                        num_points).astype(np.int32)
+        return PaddedInvertedIndex(rows=jnp.asarray(rows),
+                                   vals=jnp.asarray(self._vals),
+                                   num_points=num_points)
 
 
 @jax.jit

@@ -1,0 +1,436 @@
+"""Streaming mutable index: delta shard + tombstones + compaction
+(DESIGN.md §6; the paper's §7 deployment assumption that the index keeps
+serving while the corpus changes).
+
+The batch pipeline (core/hybrid.py) freezes everything at build time:
+codebooks, residual quantization grid, compact column space, cache-sort
+order.  Mutation therefore splits into two tiers:
+
+* ``DeltaShard`` — a small append-friendly side index holding rows inserted
+  since the last build.  Device arrays are sized to an amortized-doubling
+  *capacity* (stable shapes => the jit cache grows O(log inserts), the same
+  argument as the serving layer's batch buckets); a ``valid_mask`` of
+  additive 0/-inf scores tombstones dead slots on device, so they can never
+  crowd live rows out of any pass's top-k.  New rows are encoded against the
+  FROZEN main-index artifacts: PQ codes via the existing codebooks
+  (``core.pq.encode_rows``, packed two-per-byte on append when the main
+  index is packed, odd-K phantom nibble included), int8 dense residual via
+  the frozen scale/zero grid (``scalar_quantize_rows``), and sparse entries
+  as delta posting lists (``sparse_index.DeltaPostings``) over the frozen
+  compact column space.  Sparse dims unseen by the main build stay buffered
+  in the retained corpus row and only become searchable after compaction.
+
+* ``MutableState`` — the host-side source of truth: the retained corpus
+  (initial build rows + appended rows), per-row alive flags, the delta
+  shard, and the set of *main tombstones* (external ids deleted or
+  superseded while resident in the main generation; the search merge drops
+  them host-side).  ``compact()`` folds everything down by re-running the
+  deterministic batch build on the surviving rows in corpus order — which
+  is exactly what makes the incremental-vs-rebuild equivalence property
+  testable bit-for-bit (tests/test_streaming.py).
+
+``HybridIndex.build(..., mutable=True)`` attaches a ``MutableState``;
+``HybridIndex.insert/delete/compact`` are thin wrappers over this module,
+and ``serve/query_service.py`` serves the delta as one more engine in its
+shard fan-out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from .engine import IndexArrays, ScoringEngine, tombstone_mask
+from .pq import PQCodebooks, ScalarQuant, encode_rows, scalar_quantize_rows
+from .sparse_index import (CompactColumns, DeltaPostings, PaddedSparseRows)
+
+__all__ = ["DeltaShard", "DeltaSnapshot", "MutableState", "search_mutable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSnapshot:
+    """One immutable, device-ready view of the delta shard.  Searches hold a
+    snapshot for their whole lifetime, so mutations never race a reader —
+    the streaming analogue of the service's refcounted generations."""
+    arrays: IndexArrays      # capacity-shaped, valid_mask applied
+    ids: np.ndarray          # (capacity,) int64 external ids (-1 = empty)
+    count: int               # slots ever filled (dead ones included)
+    live: int                # slots filled and not tombstoned
+    version: int             # mutation counter at snapshot time
+
+    @property
+    def capacity(self) -> int:
+        """Padded slot count of the device arrays (== arrays.num_points)."""
+        return self.arrays.num_points
+
+
+class DeltaShard:
+    """Append-friendly device-resident side index (DESIGN.md §6.1).
+
+    Host mirrors (numpy) are the source of truth; ``snapshot()`` lazily
+    materializes an ``IndexArrays`` of the full capacity with a tombstone
+    ``valid_mask``.  Slots are append-only — a delete tombstones, an upsert
+    tombstones the old slot and appends — and are only reclaimed by
+    compaction, which throws the whole shard away.
+
+    Sparse layout: per-dim posting lists capped at ``postings_cap`` entries
+    (pass 1), overflow spilled to per-slot residual rows (pass 3).  Both
+    serving paths fetch h == capacity from the delta, so every slot is
+    pass-3 refined and the split loses nothing; the cap is what keeps the
+    pass-1 gather rectangle (d_active, l_max) narrow when a power-law hot
+    dim appears in most delta rows.
+
+    Cost model: an INSERT re-materializes the structural device arrays
+    (O(delta size) host work + transfer — total O(threshold^2) between
+    compactions, deliberately simple since compaction bounds the shard);
+    a DELETE reuses them and swaps only the (capacity,) mask leaf.
+    Incremental device updates (dynamic_update_slice per appended slot)
+    are the known next optimization (ROADMAP).
+    """
+
+    def __init__(self, *, codebooks: PQCodebooks, cols: CompactColumns,
+                 dense_residual: ScalarQuant, d_dense: int, pack: bool,
+                 capacity: int = 64, l_max: int = 4,
+                 postings_cap: int | None = 16):
+        self.codebooks = codebooks
+        self.cols = cols
+        self.pack = pack
+        self._scale = np.asarray(dense_residual.scale, np.float32)
+        self._zero = np.asarray(dense_residual.zero, np.float32)
+        self._scale_j = dense_residual.scale      # device copies, shared with
+        self._zero_j = dense_residual.zero        # the main generation
+        k = codebooks.num_subspaces
+        self._kp = (k + 1) // 2 if pack else k
+        self.capacity = max(int(capacity), 1)
+        self._codes = np.zeros((self.capacity, self._kp), np.uint8)
+        self._resq = np.zeros((self.capacity, d_dense), np.int8)
+        self._postings = DeltaPostings(cols.num_active, l_max=l_max,
+                                       l_cap=postings_cap)
+        # per-slot residual rows: postings overflow past l_cap spills here
+        # and is scored EXACTLY in pass 3 — both serving paths fetch
+        # h == capacity, so every slot is refined and no mass is lost
+        self._rmax = 1
+        self._row_cols = np.full((self.capacity, self._rmax),
+                                 cols.num_active, np.int32)
+        self._row_vals = np.zeros((self.capacity, self._rmax), np.float32)
+        self._ids = np.full(self.capacity, -1, np.int64)
+        self._dead = np.zeros(self.capacity, bool)
+        self.count = 0
+        self.version = 0
+        self.dropped_nnz = 0      # sparse entries outside the compact space
+        self._snapshot: DeltaSnapshot | None = None
+        # structural device arrays (everything but the tombstone mask),
+        # invalidated by inserts only: a delete re-uploads just the
+        # (capacity,) mask leaf instead of the whole shard
+        self._arrays_struct: IndexArrays | None = None
+
+    @property
+    def live_count(self) -> int:
+        """Rows that are filled and not tombstoned."""
+        return self.count - int(self._dead[: self.count].sum())
+
+    def _grow(self, need: int) -> None:
+        cap = self.capacity
+        while cap < need:
+            cap *= 2
+        if cap == self.capacity:
+            return
+        grow = cap - self.capacity
+        self._codes = np.pad(self._codes, ((0, grow), (0, 0)))
+        self._resq = np.pad(self._resq, ((0, grow), (0, 0)))
+        self._row_cols = np.pad(self._row_cols, ((0, grow), (0, 0)),
+                                constant_values=self.cols.num_active)
+        self._row_vals = np.pad(self._row_vals, ((0, grow), (0, 0)))
+        self._ids = np.pad(self._ids, (0, grow), constant_values=-1)
+        self._dead = np.pad(self._dead, (0, grow))
+        self.capacity = cap
+
+    def _grow_rmax(self, need: int) -> None:
+        rmax = self._rmax
+        while rmax < need:
+            rmax *= 2
+        if rmax == self._rmax:
+            return
+        grow = rmax - self._rmax
+        self._row_cols = np.pad(self._row_cols, ((0, 0), (0, grow)),
+                                constant_values=self.cols.num_active)
+        self._row_vals = np.pad(self._row_vals, ((0, 0), (0, grow)))
+        self._rmax = rmax
+
+    def insert_rows(self, x_sparse: sp.spmatrix, x_dense: np.ndarray,
+                    ext_ids: np.ndarray) -> np.ndarray:
+        """Append rows, encoding against the frozen main-index artifacts.
+        Returns the assigned slot numbers."""
+        xs = x_sparse.tocsr()
+        xd = np.asarray(x_dense, np.float32)
+        m = xs.shape[0]
+        assert xd.shape[0] == m == len(ext_ids)
+        self._grow(self.count + m)
+        # dense: PQ codes + residual against frozen codebooks / frozen grid
+        codes_u = encode_rows(xd, self.codebooks, pack=False)
+        from .pq import pack_codes, pq_decode
+        recon = np.asarray(pq_decode(jnp.asarray(codes_u), self.codebooks))
+        resq = scalar_quantize_rows(xd - recon, self._scale, self._zero)
+        codes_store = pack_codes(codes_u) if self.pack else codes_u
+        slots = np.arange(self.count, self.count + m)
+        self._codes[slots] = codes_store
+        self._resq[slots] = resq
+        self._ids[slots] = np.asarray(ext_ids, np.int64)
+        # sparse: postings in the frozen compact column space; entries past
+        # the per-dim cap spill to the slot's pass-3 residual row
+        for j, slot in enumerate(slots):
+            lo, hi = xs.indptr[j], xs.indptr[j + 1]
+            compact = self.cols.to_compact(xs.indices[lo:hi])
+            keep = compact < self.cols.num_active
+            self.dropped_nnz += int((~keep).sum())
+            sd, sv = self._postings.append(int(slot), compact[keep],
+                                           xs.data[lo:hi][keep])
+            if len(sd):
+                self._grow_rmax(len(sd))
+                self._row_cols[slot, : len(sd)] = sd
+                self._row_vals[slot, : len(sd)] = sv
+        self.count += m
+        self.version += 1
+        self._snapshot = None
+        self._arrays_struct = None
+        return slots
+
+    def tombstone(self, slot: int) -> None:
+        """Mark one slot dead; its -inf mask row removes it from scoring."""
+        if not 0 <= slot < self.count:
+            raise IndexError(f"slot {slot} outside filled range "
+                             f"[0, {self.count})")
+        if not self._dead[slot]:
+            self._dead[slot] = True
+            self.version += 1
+            self._snapshot = None
+
+    def snapshot(self) -> DeltaSnapshot:
+        """Materialize (and cache) the device view of the current state.
+        Structural arrays are reused across tombstone-only mutations — a
+        delete swaps in a fresh (capacity,) mask leaf, nothing else."""
+        if self._snapshot is None:
+            cap = self.capacity
+            if self._arrays_struct is None:
+                self._arrays_struct = IndexArrays.build(
+                    codebooks=self.codebooks,
+                    codes=jnp.asarray(self._codes),
+                    inv_index=self._postings.to_padded(cap),
+                    head=None,
+                    dense_residual=ScalarQuant(q=jnp.asarray(self._resq),
+                                               scale=self._scale_j,
+                                               zero=self._zero_j),
+                    # capped-postings spill lives here, refined in pass 3
+                    sparse_residual=PaddedSparseRows(
+                        cols=jnp.asarray(self._row_cols),
+                        vals=jnp.asarray(self._row_vals)),
+                    num_points=cap, d_active=self.cols.num_active,
+                    with_bcsr=False, pre_packed=self.pack)
+            arrays = dataclasses.replace(
+                self._arrays_struct,
+                valid_mask=tombstone_mask(cap, self.count, self._dead))
+            self._snapshot = DeltaSnapshot(
+                arrays=arrays, ids=self._ids.copy(), count=self.count,
+                live=self.live_count, version=self.version)
+        return self._snapshot
+
+
+class MutableState:
+    """Host-side mutation bookkeeping attached to a ``HybridIndex`` built
+    with ``mutable=True`` (DESIGN.md §6): retained corpus, alive flags,
+    delta shard, main tombstones, and the monotone mutation version that
+    result caches key on."""
+
+    def __init__(self, index, x_sparse: sp.csr_matrix, x_dense: np.ndarray,
+                 ext_ids: np.ndarray | None = None,
+                 delta_capacity: int = 64):
+        n = x_sparse.shape[0]
+        self.params = index.params
+        self.x_sparse0 = x_sparse.tocsr()
+        self.x_dense0 = np.asarray(x_dense, np.float32)
+        self.ids_built = (np.arange(n, dtype=np.int64) if ext_ids is None
+                          else np.asarray(ext_ids, np.int64))
+        assert len(self.ids_built) == n
+        if len(np.unique(self.ids_built)) != n:
+            raise ValueError("ext_ids must be unique")
+        if n and self.ids_built.min() < 0:
+            raise ValueError("external ids must be non-negative (-1 is the "
+                             "merge layer's empty-slot sentinel)")
+        self.alive0 = np.ones(n, bool)
+        self.extra_sparse: list[sp.csr_matrix] = []
+        self.extra_dense: list[np.ndarray] = []
+        self.extra_ids: list[int] = []
+        self.extra_alive: list[bool] = []
+        self.main_tombstones: set[int] = set()
+        self.version = 0
+        self.next_id = int(self.ids_built.max(initial=-1)) + 1
+        self._loc = {int(e): ("init", i)
+                     for i, e in enumerate(self.ids_built)}
+        self.delta = DeltaShard(
+            codebooks=index.codebooks, cols=index.cols,
+            dense_residual=index.dense_residual, d_dense=index.d_dense,
+            pack=index.params.resolve_pack(), capacity=delta_capacity)
+
+    # -- mutation ---------------------------------------------------------
+
+    def insert(self, x_sparse, x_dense, ids=None) -> np.ndarray:
+        """Insert (or upsert) rows; returns the external ids assigned."""
+        xs = sp.csr_matrix(x_sparse)
+        if xs.shape[1] != self.x_sparse0.shape[1]:
+            raise ValueError(
+                f"sparse width {xs.shape[1]} != corpus width "
+                f"{self.x_sparse0.shape[1]}")
+        xd = np.atleast_2d(np.asarray(x_dense, np.float32))
+        if xd.shape[1] != self.x_dense0.shape[1]:
+            raise ValueError(
+                f"dense width {xd.shape[1]} != corpus width "
+                f"{self.x_dense0.shape[1]}")
+        m = xs.shape[0]
+        if m == 0:
+            return np.empty(0, np.int64)
+        if ids is None:
+            ids = np.arange(self.next_id, self.next_id + m, dtype=np.int64)
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if not (len(ids) == m == xd.shape[0]):
+            raise ValueError(
+                f"row-count mismatch: {m} sparse, {xd.shape[0]} dense, "
+                f"{len(ids)} ids")
+        if len(np.unique(ids)) != m:
+            raise ValueError("duplicate external ids within one insert batch")
+        if ids.min() < 0:
+            raise ValueError("external ids must be non-negative (-1 is the "
+                             "merge layer's empty-slot sentinel)")
+        # encode FIRST, retire old copies after: if validation or encoding
+        # raises, the upserted ids' existing rows must survive untouched
+        slots = self.delta.insert_rows(xs, xd, ids)
+        for e in ids:
+            self._kill(int(e))            # upsert: retire any existing row
+        for j, (e, _slot) in enumerate(zip(ids, slots)):
+            self.extra_sparse.append(xs[j])
+            self.extra_dense.append(xd[j])
+            self.extra_ids.append(int(e))
+            self.extra_alive.append(True)
+            self._loc[int(e)] = ("extra", len(self.extra_ids) - 1)
+        self.next_id = max(self.next_id, int(ids.max()) + 1)
+        self.version += 1
+        return ids
+
+    def _kill(self, ext_id: int) -> bool:
+        loc = self._loc.get(ext_id)
+        if loc is None:
+            return False
+        kind, i = loc
+        if kind == "init":
+            if not self.alive0[i]:
+                return False
+            self.alive0[i] = False
+            self.main_tombstones.add(ext_id)
+        else:
+            if not self.extra_alive[i]:
+                return False
+            self.extra_alive[i] = False
+            self.delta.tombstone(i)       # slot j == extra index j
+        del self._loc[ext_id]
+        return True
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by external id; returns how many were live."""
+        killed = 0
+        for e in np.atleast_1d(np.asarray(ids, np.int64)):
+            killed += self._kill(int(e))
+        if killed:
+            self.version += 1
+        return killed
+
+    # -- compaction -------------------------------------------------------
+
+    @property
+    def live_rows(self) -> int:
+        """Logical corpus size: surviving initial rows + live inserts."""
+        return int(self.alive0.sum()) + sum(self.extra_alive)
+
+    def survivors(self) -> tuple[sp.csr_matrix, np.ndarray, np.ndarray]:
+        """Surviving corpus rows in canonical order (initial order, then
+        insertion order) — the exact input a from-scratch batch build on the
+        current logical contents would receive, which is what the
+        equivalence property test relies on."""
+        keep0 = np.flatnonzero(self.alive0)
+        xs_parts = [self.x_sparse0[keep0]]
+        xd_parts = [self.x_dense0[keep0]]
+        ids = [self.ids_built[keep0]]
+        live = [j for j, a in enumerate(self.extra_alive) if a]
+        if live:
+            xs_parts += [self.extra_sparse[j] for j in live]
+            xd_parts.append(np.stack([self.extra_dense[j] for j in live]))
+            ids.append(np.asarray([self.extra_ids[j] for j in live],
+                                  np.int64))
+        xs = sp.vstack(xs_parts, format="csr") if len(xs_parts) > 1 \
+            else xs_parts[0]
+        return xs, np.concatenate(xd_parts, axis=0), np.concatenate(ids)
+
+    def compact(self):
+        """Fold delta + tombstones into a fresh batch build of the surviving
+        rows (new codebooks, new compact column space, new cache-sort).
+        Returns a NEW mutable ``HybridIndex``; the caller swaps it in (the
+        service does this through its double-buffered ``refresh()``)."""
+        from .hybrid import HybridIndex
+        if self.live_rows == 0:
+            raise ValueError(
+                "cannot compact an empty corpus: the batch build (k-means, "
+                "column space) needs at least one surviving row; keep the "
+                "delta serving or insert before compacting")
+        xs, xd, ids = self.survivors()
+        new = HybridIndex.build(xs, xd, self.params, mutable=True,
+                                ext_ids=ids)
+        # carry the id counter: the fresh state only sees surviving ids, so
+        # recomputing max+1 could re-mint a previously deleted id and
+        # resurrect it under new content
+        new.mutable_state.next_id = max(new.mutable_state.next_id,
+                                        self.next_id)
+        return new
+
+
+def search_mutable(index, q_sparse, q_dense, h: int = 20,
+                   alpha: int | None = None, beta: int | None = None):
+    """Three-pass search over main generation + delta shard with host merge
+    (DESIGN.md §6.2) — the single-process form of what QueryService does in
+    its fan-out.  Returns a SearchResult whose ids are EXTERNAL ids.
+
+    The main engine overfetches by the (16-bucketed) tombstone count so that
+    dropping tombstoned ids at the merge can never leave fewer than h live
+    results; overfetch-then-truncate of a deterministic top-k is exact, so a
+    mutation-free index returns bit-identical results to the plain path."""
+    from .distributed import ceil16, merge_topk_host
+    from .hybrid import SearchResult
+    from .sparse_index import sparse_queries_to_padded
+
+    st = index.mutable_state
+    p = index.params
+    alpha = p.alpha if alpha is None else alpha
+    beta = p.beta if beta is None else beta
+    q_dims, q_vals = sparse_queries_to_padded(q_sparse, index.cols,
+                                              nq_max=p.nq_max)
+    qd, qv = jnp.asarray(q_dims), jnp.asarray(q_vals)
+    qe = jnp.asarray(np.asarray(q_dense, np.float32))
+
+    slack = ceil16(len(st.main_tombstones)) if st.main_tombstones else 0
+    h_main = min(h + slack, index.num_points)
+    out_main = index.engine.search(qd, qv, qe, h=h_main, alpha=alpha,
+                                   beta=beta)
+    snap = st.delta.snapshot() if st.delta.live_count else None
+    out_delta = None
+    if snap is not None:
+        eng = ScoringEngine(arrays=snap.arrays, backend=index.engine.backend)
+        out_delta = eng.search(qd, qv, qe, h=snap.capacity, alpha=alpha,
+                               beta=beta)
+
+    pos = np.asarray(out_main[1]).astype(np.int64)
+    parts = [(np.asarray(out_main[0]), st.ids_built[index.pi[pos]], True)]
+    if out_delta is not None:
+        dpos = np.asarray(out_delta[1]).astype(np.int64)
+        parts.append((np.asarray(out_delta[0]), snap.ids[dpos], False))
+    s, ids = merge_topk_host(parts, h, drop_ids=st.main_tombstones)
+    return SearchResult(ids=ids, scores=s)

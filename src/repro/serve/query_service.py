@@ -30,27 +30,44 @@ and "refined top-h ids come back":
   refcounted, a search runs to completion against the generation it
   acquired, and the retired copy's device buffers are donated back
   (``core.engine.release_index_arrays``) once its last in-flight search
-  drops the reference.
+  drops the reference;
+
+* **streaming mutation** (DESIGN.md §6) — constructed with a *mutable*
+  ``HybridIndex`` (``index=``), the service gains ``insert()``/``delete()``:
+  inserts land in the index's device-resident delta shard
+  (``core.streaming.DeltaShard``) which is served as ONE MORE engine in the
+  fan-out above; deletes tombstone either a delta slot (device-side -inf
+  mask) or a main-generation row (dropped at the host merge, with the main
+  engines overfetching by the tombstone count so results never come up
+  short).  Every mutation bumps a version that the result-cache fingerprint
+  incorporates, so a cached hit can never return pre-mutation results.
+  Once the delta outgrows ``compact_min_rows`` / ``compact_ratio``, a
+  background compaction rebuilds the main index from the surviving rows and
+  swaps it through the same refcounted ``refresh()`` double-buffer.
 
 Results are positions in cache-sorted row order, exactly like
 ``ScoringEngine.search`` (pass ``id_map=HybridIndex.pi`` to get original
-ids).  ``benchmarks/serve_bench.py`` measures the QPS/caching/refresh
-claims and writes ``BENCH_serve.json``.
+ids); a mutable service maps to external ids automatically.
+``benchmarks/serve_bench.py`` measures the QPS/caching/refresh claims and
+writes ``BENCH_serve.json`` (``--stream`` adds ``BENCH_stream.json``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import split_index_arrays
+from repro.core.distributed import (ceil16, merge_topk_host,
+                                    split_index_arrays)
 from repro.core.engine import (Backend, IndexArrays, ScoringEngine,
                                query_fingerprint, release_index_arrays)
+from repro.core.sparse_index import sparse_queries_to_padded
 
 __all__ = ["QueryService", "CacheInfo", "JitCacheInfo", "bucket_for",
            "pad_rows"]
@@ -121,6 +138,21 @@ class _Generation:
     donate: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class _DeltaView:
+    """Immutable snapshot of the mutable side-state a search pairs with the
+    generation it acquired (DESIGN.md §6): the delta-shard engine (None when
+    the delta is empty), the slot -> external-id map, and the main-row
+    tombstones dropped at the host merge.  Swapped atomically under the
+    serving lock; in-flight searches keep the view they started with (the
+    delta arrays stay alive through the Python reference)."""
+    engine: ScoringEngine | None
+    ids: np.ndarray | None            # (capacity,) int64 slot -> external id
+    live: int
+    capacity: int
+    deleted: frozenset                # main-generation tombstoned ids
+
+
 class QueryService:
     """The request path end to end: bucketed micro-batching, LRU result
     caching, (optionally sharded) three-pass search, double-buffered index
@@ -146,18 +178,40 @@ class QueryService:
     id_map:
         Optional position -> external id mapping (``HybridIndex.pi``)
         applied to returned ids.
+    index:
+        A MUTABLE ``HybridIndex`` (built with ``mutable=True``) enabling
+        ``insert()``/``delete()``/``compact()``.  Supplies the engine and
+        the external-id map when those aren't passed explicitly.
+    auto_compact, compact_min_rows, compact_ratio:
+        Compaction policy (DESIGN.md §6.3): when the pending mutation count
+        (delta live rows + main tombstones) reaches
+        ``max(compact_min_rows, compact_ratio * main_rows)``, a background
+        thread rebuilds the index from the surviving rows and swaps it via
+        ``refresh()``.  ``auto_compact=False`` leaves compaction to explicit
+        ``compact()`` calls.
     """
 
     def __init__(self, engine: ScoringEngine | None = None, *,
                  arrays: IndexArrays | None = None,
                  backend: Backend | str | None = None,
+                 index=None,
                  h: int = 10, alpha: int = 20, beta: int = 5,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  cache_size: int = 1024, num_shards: int = 1,
-                 id_map: np.ndarray | None = None, max_workers: int = 2):
+                 id_map: np.ndarray | None = None, max_workers: int = 2,
+                 auto_compact: bool = True, compact_min_rows: int = 256,
+                 compact_ratio: float = 0.25):
+        if index is not None:
+            if index.mutable_state is None:
+                raise ValueError("index= needs HybridIndex.build(..., "
+                                 "mutable=True)")
+            if engine is None:
+                engine = index.engine
+            if id_map is None:
+                id_map = index.mutable_state.ids_built[index.pi]
         if engine is None:
             if arrays is None:
-                raise ValueError("pass either an engine or arrays")
+                raise ValueError("pass an engine, arrays, or a mutable index")
             engine = ScoringEngine(arrays=arrays,
                                    backend=Backend.from_name(backend))
         if not buckets:
@@ -178,6 +232,22 @@ class QueryService:
         self._requests = self._batches = self._refreshes = 0
         self._executor: ThreadPoolExecutor | None = None
         self._max_workers = max_workers
+        # streaming mutation state (all guarded by _mut_lock except the
+        # view/version, which searches read under _lock)
+        self._index = index
+        self._mut_lock = threading.RLock()
+        self._delta_view: _DeltaView | None = None
+        self._mutation_version = 0
+        self._auto_compact = auto_compact
+        self._compact_min_rows = compact_min_rows
+        self._compact_ratio = compact_ratio
+        self._compactions = 0
+        self._last_compaction_s: float | None = None
+        self._compact_thread: threading.Thread | None = None
+        self._closed = False
+        if index is not None:
+            with self._mut_lock:
+                self._install_view()
 
     # -- generations ------------------------------------------------------
 
@@ -201,6 +271,18 @@ class QueryService:
             gen = self._gen
             gen.refs += 1
             return gen
+
+    def _acquire_view(self):
+        """Atomically pin (generation, delta view, mutation version, index):
+        a search must never pair a new main with an old delta or vice versa
+        — the stress test's no-mixed-generation invariant.  The index handle
+        rides along because compaction swaps it in the same critical section
+        as the generation pointer: query encoding against ``index.cols``
+        (search_sparse) is only valid for THIS generation."""
+        with self._lock:
+            gen = self._gen
+            gen.refs += 1
+            return gen, self._delta_view, self._mutation_version, self._index
 
     def _release(self, gen: _Generation) -> None:
         with self._lock:
@@ -250,7 +332,15 @@ class QueryService:
         With ``donate=True`` (the default) the service owns the retired
         copy's buffers and deletes them once the last in-flight reference
         drops — callers must not reuse the old ``IndexArrays`` afterwards.
-        Returns the new generation's version number."""
+        Returns the new generation's version number.
+
+        Not available on a mutable service: an external swap would leave the
+        delta shard encoded against (and sharing device buffers with) the
+        retired generation — ``compact()`` is the mutable path's refresh."""
+        if self._index is not None:
+            raise ValueError(
+                "refresh() would desync the delta shard and compact column "
+                "space of a mutable service; use insert()/delete()/compact()")
         with self._lock:
             backend = self._gen.engine.backend
             self._next_version += 1
@@ -260,17 +350,170 @@ class QueryService:
         else:
             engine = ScoringEngine(arrays=arrays, backend=backend)
         new = self._make_generation(engine, id_map, version)
+        return self._swap(new, donate)
+
+    def _swap(self, new: _Generation, donate: bool, on_swap=None) -> int:
+        """Install a built generation; ``on_swap`` runs under the serving
+        lock in the same critical section as the pointer swap (compaction
+        uses it to retire the delta view atomically with the new main)."""
         with self._lock:
             old = self._gen
             self._gen = new
             self._version = new.version
             self._refreshes += 1
             old.retired = True
-            old.donate = donate and old.engine.arrays is not engine.arrays
+            old.donate = donate and \
+                old.engine.arrays is not new.engine.arrays
+            if on_swap is not None:
+                on_swap()
             dead = old.refs == 0
         if dead:
             self._donate(old)
         return new.version
+
+    # -- streaming mutation (DESIGN.md §6) --------------------------------
+
+    def _require_index(self):
+        if self._index is None:
+            raise ValueError("service has no mutable index; construct with "
+                             "QueryService(index=HybridIndex.build(..., "
+                             "mutable=True))")
+
+    def _install_view(self) -> None:
+        """Snapshot the index's delta + tombstones into an immutable view and
+        swap it in under the serving lock (callers hold _mut_lock).  The
+        mutation version bump is what invalidates result-cache entries."""
+        st = self._index.mutable_state
+        snap = st.delta.snapshot()
+        engine = None
+        if snap.live:
+            engine = ScoringEngine(arrays=snap.arrays,
+                                   backend=self._index.engine.backend)
+        view = _DeltaView(engine=engine, ids=snap.ids, live=snap.live,
+                          capacity=snap.capacity,
+                          deleted=frozenset(st.main_tombstones))
+        with self._lock:
+            self._delta_view = view
+            self._mutation_version += 1
+
+    def insert(self, x_sparse, x_dense, ids=None) -> np.ndarray:
+        """Insert (or upsert) rows into the delta shard; they are searchable
+        as soon as this returns (encoded against the frozen main-index
+        artifacts — see core/streaming.py).  Returns the external ids.
+        May trigger background compaction per the service's policy."""
+        self._require_index()
+        with self._mut_lock:
+            assigned = self._index.insert(x_sparse, x_dense, ids=ids)
+            self._install_view()
+            due = self._auto_compact and self._compact_due()
+        if due:
+            self._spawn_compaction()
+        return assigned
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by external id: delta slots die on device (-inf
+        mask), main-generation rows at the host merge.  Searches dispatched
+        after this returns never report the ids.  Returns #rows killed."""
+        self._require_index()
+        with self._mut_lock:
+            killed = self._index.delete(ids)
+            if killed:
+                self._install_view()
+                due = self._auto_compact and self._compact_due()
+            else:
+                due = False
+        if due:
+            self._spawn_compaction()
+        return killed
+
+    def _compact_due(self) -> bool:
+        st = self._index.mutable_state
+        if st.live_rows == 0:
+            return False        # batch build needs >= 1 surviving row
+        pending = st.delta.live_count + len(st.main_tombstones)
+        floor = max(self._compact_min_rows,
+                    int(self._compact_ratio * self._gen.engine.num_points))
+        return pending >= floor
+
+    def _spawn_compaction(self) -> None:
+        with self._lock:
+            if self._closed or (self._compact_thread is not None
+                                and self._compact_thread.is_alive()):
+                return
+            t = threading.Thread(target=self._compact_bg,
+                                 name="query-service-compact", daemon=True)
+            self._compact_thread = t
+            # start INSIDE the lock: an unstarted thread reads as not-alive,
+            # so starting outside would let a second spawner overwrite the
+            # slot and leave a rebuild running that close() never joins
+            t.start()
+
+    def _compact_bg(self) -> None:
+        with self._lock:
+            # closes the spawn/close race: a thread created before close()
+            # but started after it must not begin a rebuild
+            if self._closed:
+                return
+        try:
+            self.compact()
+        except Exception:                     # pragma: no cover - diagnostic
+            import traceback
+            traceback.print_exc()
+
+    def compact(self) -> int:
+        """Fold the delta + tombstones into a fresh batch build of the
+        surviving rows and swap it through the double-buffered refresh
+        (DESIGN.md §6.3).  Mutations are serialized with the rebuild
+        (they'd be lost otherwise); searches keep serving the old
+        generation + delta throughout and flip atomically at the swap, so
+        no result ever mixes the old delta with the new main.  Returns the
+        installed generation's version."""
+        self._require_index()
+        t0 = time.perf_counter()
+        with self._mut_lock:
+            st = self._index.mutable_state
+            if st.delta.count == 0 and not st.main_tombstones:
+                return self.version              # nothing to fold
+            new_idx = self._index.compact()          # heavy; off serving lock
+            new_state = new_idx.mutable_state
+            engine = new_idx.engine
+            with self._lock:
+                self._next_version += 1
+                version = self._next_version
+            new_gen = self._make_generation(
+                engine, new_state.ids_built[new_idx.pi], version)
+
+            def on_swap():
+                self._index = new_idx
+                self._delta_view = _DeltaView(
+                    engine=None, ids=None, live=0, capacity=0,
+                    deleted=frozenset())
+                self._mutation_version += 1
+                self._compactions += 1
+                self._last_compaction_s = time.perf_counter() - t0
+
+            return self._swap(new_gen, donate=True, on_swap=on_swap)
+
+    def search_sparse(self, q_sparse, q_dense, *, h: int | None = None,
+                      alpha: int | None = None, beta: int | None = None):
+        """Entry point for RAW scipy sparse queries: encode against the
+        pinned generation's compact column space, then serve.  Mutable
+        services need this across compactions — the compact space changes
+        with each rebuild, so pre-padded ``q_dims`` are generation-bound;
+        the generation is held for the WHOLE encode+search so a concurrent
+        compaction can never score old-space dim ids against a new index."""
+        self._require_index()
+        gen, view, mut_version, idx = self._acquire_view()
+        try:
+            q_dims, q_vals = sparse_queries_to_padded(q_sparse, idx.cols,
+                                                      nq_max=idx.params.nq_max)
+            return self._serve(gen, view, mut_version,
+                               np.atleast_2d(np.asarray(q_dims, np.int32)),
+                               np.atleast_2d(np.asarray(q_vals, np.float32)),
+                               np.atleast_2d(np.asarray(q_dense, np.float32)),
+                               h, alpha, beta)
+        finally:
+            self._release(gen)
 
     # -- request path -----------------------------------------------------
 
@@ -284,60 +527,76 @@ class QueryService:
         Returns ``(scores (Q, h), ids (Q, h))`` numpy arrays; ids are
         cache-sorted positions, or external ids when the service was built
         with an ``id_map``.  Duplicate rows within one call are each counted
-        as their own cache lookup."""
-        h = self.h if h is None else h
-        alpha = self.alpha if alpha is None else alpha
-        beta = self.beta if beta is None else beta
+        as their own cache lookup.
+
+        NOTE (mutable services): pre-padded ``q_dims`` are bound to the
+        compact column space of the generation they were encoded against,
+        which changes at every compaction — streaming clients should call
+        ``search_sparse`` (raw queries, per-generation encoding) instead of
+        caching padded queries across mutations."""
         q_dims = np.atleast_2d(np.asarray(q_dims, np.int32))
         q_vals = np.atleast_2d(np.asarray(q_vals, np.float32))
         q_dense = np.atleast_2d(np.asarray(q_dense, np.float32))
-        qn = q_dims.shape[0]
-
-        gen = self._acquire()
+        gen, view, mut_version, _ = self._acquire_view()
         try:
-            # fingerprints only exist to key the cache: with caching off the
-            # hot path skips the per-row hashing entirely
-            use_cache = self._cache_cap > 0
-            keys = [query_fingerprint(q_dims[i], q_vals[i], q_dense[i],
-                                      h, alpha, beta, gen.version)
-                    for i in range(qn)] if use_cache else None
-            out_s = np.empty((qn, h), np.float32)
-            out_i = np.empty((qn, h), np.int64)
-            with self._lock:
-                self._requests += qn
-                if not use_cache:
-                    self._misses += qn
-                    miss = list(range(qn))
-                else:
-                    miss = []
-                    for i, key in enumerate(keys):
-                        hit = self._cache.get(key)
-                        if hit is not None:
-                            self._cache.move_to_end(key)
-                            self._hits += 1
-                            out_s[i], out_i[i] = hit
-                        else:
-                            self._misses += 1
-                            miss.append(i)
-
-            max_bucket = self.buckets[-1]
-            for lo in range(0, len(miss), max_bucket):
-                rows = miss[lo:lo + max_bucket]
-                s, ids = self._run_batch(gen, q_dims[rows], q_vals[rows],
-                                         q_dense[rows], h, alpha, beta)
-                with self._lock:
-                    for j, i in enumerate(rows):
-                        out_s[i], out_i[i] = s[j], ids[j]
-                        if use_cache:
-                            self._cache[keys[i]] = (s[j].copy(),
-                                                    ids[j].copy())
-                            self._cache.move_to_end(keys[i])
-                            while len(self._cache) > self._cache_cap:
-                                self._cache.popitem(last=False)
-                                self._evictions += 1
-            return out_s, out_i
+            return self._serve(gen, view, mut_version, q_dims, q_vals,
+                               q_dense, h, alpha, beta)
         finally:
             self._release(gen)
+
+    def _serve(self, gen: _Generation, view: "_DeltaView | None",
+               mut_version: int, q_dims: np.ndarray, q_vals: np.ndarray,
+               q_dense: np.ndarray, h: int | None, alpha: int | None,
+               beta: int | None) -> tuple[np.ndarray, np.ndarray]:
+        """Cache + batch + fan-out against an already-pinned generation
+        (the caller holds the refcount)."""
+        h = self.h if h is None else h
+        alpha = self.alpha if alpha is None else alpha
+        beta = self.beta if beta is None else beta
+        qn = q_dims.shape[0]
+        # fingerprints only exist to key the cache: with caching off the
+        # hot path skips the per-row hashing entirely.  The key covers
+        # BOTH the generation and the delta-shard mutation version —
+        # a cached hit can never serve pre-insert/pre-delete results.
+        use_cache = self._cache_cap > 0
+        keys = [query_fingerprint(q_dims[i], q_vals[i], q_dense[i],
+                                  h, alpha, beta, gen.version, mut_version)
+                for i in range(qn)] if use_cache else None
+        out_s = np.empty((qn, h), np.float32)
+        out_i = np.empty((qn, h), np.int64)
+        with self._lock:
+            self._requests += qn
+            if not use_cache:
+                self._misses += qn
+                miss = list(range(qn))
+            else:
+                miss = []
+                for i, key in enumerate(keys):
+                    hit = self._cache.get(key)
+                    if hit is not None:
+                        self._cache.move_to_end(key)
+                        self._hits += 1
+                        out_s[i], out_i[i] = hit
+                    else:
+                        self._misses += 1
+                        miss.append(i)
+
+        max_bucket = self.buckets[-1]
+        for lo in range(0, len(miss), max_bucket):
+            rows = miss[lo:lo + max_bucket]
+            s, ids = self._run_batch(gen, view, q_dims[rows],
+                                     q_vals[rows], q_dense[rows],
+                                     h, alpha, beta)
+            with self._lock:
+                for j, i in enumerate(rows):
+                    out_s[i], out_i[i] = s[j], ids[j]
+                    if use_cache:
+                        self._cache[keys[i]] = (s[j].copy(), ids[j].copy())
+                        self._cache.move_to_end(keys[i])
+                        while len(self._cache) > self._cache_cap:
+                            self._cache.popitem(last=False)
+                            self._evictions += 1
+        return out_s, out_i
 
     def submit(self, q_dims, q_vals, q_dense, **kw) -> Future:
         """Async client API: enqueue a search, get a Future of (scores, ids).
@@ -353,11 +612,20 @@ class QueryService:
             ex = self._executor
         return ex.submit(self.search, q_dims, q_vals, q_dense, **kw)
 
-    def _run_batch(self, gen: _Generation, q_dims: np.ndarray,
-                   q_vals: np.ndarray, q_dense: np.ndarray,
-                   h: int, alpha: int, beta: int
+    def _run_batch(self, gen: _Generation, view: _DeltaView | None,
+                   q_dims: np.ndarray, q_vals: np.ndarray,
+                   q_dense: np.ndarray, h: int, alpha: int, beta: int
                    ) -> tuple[np.ndarray, np.ndarray]:
-        """Pad one miss-batch to its bucket, run the (sharded) engine, trim."""
+        """Pad one miss-batch to its bucket, fan out over the main engine(s)
+        plus the delta shard, merge on host.
+
+        The delta is literally one more engine in the fan-out (DESIGN.md
+        §6.2); its tombstoned slots score -inf on device, main-generation
+        tombstones are dropped by the host merge.  With tombstones pending,
+        every main engine overfetches by the (16-bucketed, so the jit cache
+        stays bounded) tombstone count — overfetch-then-truncate of a
+        deterministic top-k is exact, so the mutation-free path returns the
+        very same bits as before."""
         qn = q_dims.shape[0]
         bucket = bucket_for(qn, self.buckets)
         d_active = gen.engine.arrays.d_active
@@ -365,37 +633,53 @@ class QueryService:
         qv = jnp.asarray(pad_rows(q_vals, bucket))
         qe = jnp.asarray(pad_rows(q_dense, bucket))
 
+        deleted = view.deleted if view is not None else frozenset()
+        slack = ceil16(len(deleted)) if deleted else 0
         engines = gen.shards if gen.shards is not None else [gen.engine]
+        offsets = (gen.offsets if gen.shards is not None
+                   else np.zeros(1, np.int64))
+        h_fetch = [min(h + slack, e.num_points) for e in engines]
+        delta_engine = view.engine if view is not None else None
+
         with self._lock:
             self._batches += 1
-            c1, c2 = engines[0].candidate_counts(h, alpha, beta)
+            c1, c2 = engines[0].candidate_counts(h_fetch[0], alpha, beta)
             self._jit_keys.add((bucket, q_dims.shape[1], q_dense.shape[1],
-                                engines[0].num_points, h, c1, c2,
+                                engines[0].num_points, h_fetch[0], c1, c2,
                                 gen.shards is not None))
+            if delta_engine is not None:
+                hd = delta_engine.num_points        # fetch every delta slot
+                cd1, cd2 = delta_engine.candidate_counts(hd, alpha, beta)
+                self._jit_keys.add((bucket, q_dims.shape[1],
+                                    q_dense.shape[1], hd, hd, cd1, cd2,
+                                    "delta"))
 
-        if gen.shards is None:
-            s, ids, _ = gen.engine.search(qd, qv, qe,
-                                          h=h, alpha=alpha, beta=beta)
-            s = np.asarray(s)[:qn]
-            ids = np.asarray(ids)[:qn].astype(np.int64)
-        else:
-            # fan-out: dispatch EVERY shard before syncing any (JAX async
-            # dispatch overlaps the per-shard searches), then merge top-h
-            # on host — the in-process form of the paper's §7.2 RPC fan-out.
-            parts = [e.search(qd, qv, qe, h=h, alpha=alpha, beta=beta)
-                     for e in engines]
-            ss = np.concatenate([np.asarray(p[0]) for p in parts], axis=1)
-            ii = np.concatenate(
-                [np.asarray(p[1]).astype(np.int64) + int(off)
-                 for p, off in zip(parts, gen.offsets)], axis=1)
-            # stable sort + shards concatenated in row order => ties break
-            # by lowest global id, matching lax.top_k on the unsharded array
-            order = np.argsort(-ss, axis=1, kind="stable")[:, :h]
-            s = np.take_along_axis(ss, order, axis=1)[:qn]
-            ids = np.take_along_axis(ii, order, axis=1)[:qn]
-        if gen.id_map is not None:
-            ids = np.asarray(gen.id_map)[ids]
-        return s, ids
+        # fan-out: dispatch EVERY engine before syncing any (JAX async
+        # dispatch overlaps the searches), then merge top-h on host — the
+        # in-process form of the paper's §7.2 RPC fan-out.
+        outs = [e.search(qd, qv, qe, h=hf, alpha=alpha, beta=beta)
+                for e, hf in zip(engines, h_fetch)]
+        delta_out = None
+        if delta_engine is not None:
+            delta_out = delta_engine.search(
+                qd, qv, qe, h=delta_engine.num_points, alpha=alpha,
+                beta=beta)
+
+        # assemble per-engine candidate parts in a COMMON id space.  Shards
+        # stay in row order so stable-sort tie-breaking matches lax.top_k
+        # on the unsharded array.
+        parts = []
+        for out, off in zip(outs, offsets):
+            s = np.asarray(out[0])[:qn]
+            ids = np.asarray(out[1])[:qn].astype(np.int64) + int(off)
+            if gen.id_map is not None:
+                ids = np.asarray(gen.id_map)[ids]
+            parts.append((s, ids, True))
+        if delta_out is not None:
+            s = np.asarray(delta_out[0])[:qn]
+            pos = np.asarray(delta_out[1])[:qn].astype(np.int64)
+            parts.append((s, view.ids[pos], False))
+        return merge_topk_host(parts, h, drop_ids=deleted)
 
     # -- introspection ----------------------------------------------------
 
@@ -419,11 +703,20 @@ class QueryService:
     def stats(self) -> dict:
         """Service counters for dashboards/benchmarks (plain dict)."""
         with self._lock:
+            view = self._delta_view
             return {"requests": self._requests, "batches": self._batches,
                     "refreshes": self._refreshes, "version": self._version,
                     "cache_hits": self._hits, "cache_misses": self._misses,
                     "cache_evictions": self._evictions,
-                    "num_shards": self.num_shards, "buckets": self.buckets}
+                    "num_shards": self.num_shards, "buckets": self.buckets,
+                    "mutation_version": self._mutation_version,
+                    "delta_rows": view.live if view is not None else 0,
+                    "delta_capacity":
+                        view.capacity if view is not None else 0,
+                    "deleted_pending":
+                        len(view.deleted) if view is not None else 0,
+                    "compactions": self._compactions,
+                    "last_compaction_s": self._last_compaction_s}
 
     @property
     def version(self) -> int:
@@ -432,8 +725,16 @@ class QueryService:
             return self._version
 
     def close(self) -> None:
-        """Shut down the async submit pool (idempotent)."""
+        """Shut down the async submit pool and wait out any in-flight
+        background compaction (idempotent).  The closed flag is set in the
+        same critical section that reads the compaction thread, and
+        _spawn_compaction refuses once it's set — so no compaction can
+        start after close() returns."""
         with self._lock:
             ex, self._executor = self._executor, None
+            self._closed = True
+            ct = self._compact_thread
         if ex is not None:
             ex.shutdown(wait=True)
+        if ct is not None and ct.is_alive():
+            ct.join()

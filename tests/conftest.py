@@ -13,6 +13,20 @@ def small_hybrid():
 
 
 @pytest.fixture(scope="session")
+def exact_topk(small_hybrid):
+    """Cached brute-force scores + exact top-20 ids for the shared
+    pinned-seed dataset — the recall-regression reference
+    (tests/test_recall.py): computed once per session so every recall
+    assertion compares against identical ground truth."""
+    ds = small_hybrid
+    exact = (np.asarray((ds.q_sparse @ ds.x_sparse.T).todense())
+             + np.asarray(ds.q_dense, np.float32)
+             @ np.asarray(ds.x_dense, np.float32).T)
+    ids = np.argsort(-exact, axis=1)[:, :20]
+    return exact, ids
+
+
+@pytest.fixture(scope="session")
 def powerlaw_sparse():
     rng = np.random.default_rng(0)
     n, d = 1500, 300

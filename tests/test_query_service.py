@@ -1,9 +1,13 @@
-"""QueryService (serve/query_service.py; DESIGN.md §5): bucketed
+"""QueryService (serve/query_service.py; DESIGN.md §5, §6): bucketed
 micro-batching bounds the jit cache, the LRU result cache counts exactly,
 refresh() is consistent with exactly one index generation and donates the
-retired buffers, and the shard fan-out matches the single-device engine."""
+retired buffers, the shard fan-out matches the single-device engine, and the
+streaming mutation path (insert/delete/compaction) never serves tombstoned,
+duplicated, or stale-cached results — including under threaded load."""
 
 import dataclasses
+import threading
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -223,6 +227,178 @@ def test_release_index_arrays_keep(small_hybrid):
     assert shards[0].codes.is_deleted()
     assert not arr.codes.is_deleted()
     assert not shards[0].codebooks.centers.is_deleted()   # shared => kept
+
+
+# -- streaming mutation (DESIGN.md §6) ---------------------------------------
+
+MUT_PARAMS = HybridIndexParams(keep_top=32, head_dims=24, kmeans_iters=4)
+
+
+@pytest.fixture()
+def mut_served():
+    """Small mutable index + service (fresh per test: mutation is stateful)."""
+    from repro.data import make_hybrid_dataset
+    ds = make_hybrid_dataset(num_points=800, num_queries=8, d_sparse=2000,
+                             d_dense=16, nnz_per_row=24, seed=21)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense, MUT_PARAMS,
+                            mutable=True)
+    return ds, idx
+
+
+def test_insert_invalidates_result_cache(mut_served):
+    """REGRESSION (ISSUE 4 satellite): the cache fingerprint must cover the
+    delta-shard mutation version, not just the main generation — a warm
+    query re-executes after insert() instead of serving pre-insert results."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=5, cache_size=64, auto_compact=False)
+    s0, i0 = svc.search_sparse(ds.q_sparse[:1], ds.q_dense[:1])
+    svc.search_sparse(ds.q_sparse[:1], ds.q_dense[:1])
+    assert svc.cache_info().hits == 1
+    new = svc.insert(ds.q_sparse[0] * 1e3, ds.q_dense[0])
+    s1, i1 = svc.search_sparse(ds.q_sparse[:1], ds.q_dense[:1])
+    info = svc.cache_info()
+    assert (info.hits, info.misses) == (1, 2)     # post-insert lookup missed
+    assert i1[0, 0] == new[0] and new[0] not in i0
+    # delete must invalidate too
+    svc.delete(new)
+    s2, i2 = svc.search_sparse(ds.q_sparse[:1], ds.q_dense[:1])
+    assert svc.cache_info().misses == 3
+    assert new[0] not in i2
+    svc.close()
+
+
+def test_service_mutation_matches_core_index(mut_served):
+    """The service's delta fan-out + host merge returns exactly what the
+    core mutable search returns — single-engine and 4-shard fan-out alike."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=10, cache_size=0, auto_compact=False)
+    svc.insert(ds.q_sparse[:3] * 1e3, ds.q_dense[:3])
+    svc.delete([1, 2, 3])
+    ref = idx.search(ds.q_sparse, ds.q_dense, h=10)
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense)
+    np.testing.assert_array_equal(ids, ref.ids)
+    np.testing.assert_array_equal(s, ref.scores)
+    fan = QueryService(index=idx, h=10, cache_size=0, num_shards=4,
+                       auto_compact=False)
+    s4, i4 = fan.search_sparse(ds.q_sparse, ds.q_dense)
+    np.testing.assert_array_equal(i4, ref.ids)
+    np.testing.assert_allclose(s4, ref.scores, rtol=1e-5, atol=1e-5)
+    svc.close(); fan.close()
+
+
+def test_service_compact_preserves_results_and_resets_delta(mut_served):
+    """compact() folds the delta through refresh(): same logical results
+    (dominant inserts stay top-1, deletes stay gone), delta/tombstone
+    counters reset, generation bumped, old buffers donated."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=5, cache_size=16, auto_compact=False)
+    new = svc.insert(ds.q_sparse[:2] * 1e3, ds.q_dense[:2])
+    svc.delete([5, 6])
+    old_arrays = idx.engine.arrays
+    v = svc.compact()
+    assert v == svc.version > 0
+    st = svc.stats()
+    assert st["compactions"] == 1
+    assert st["delta_rows"] == 0 and st["deleted_pending"] == 0
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense)
+    assert ids[0, 0] == new[0] and ids[1, 0] == new[1]
+    assert 5 not in ids and 6 not in ids
+    assert old_arrays.codes.is_deleted()          # retired gen donated
+    # compacting an unmutated index is a no-op
+    assert svc.compact() == v
+    svc.close()
+
+
+def test_auto_compaction_triggers_in_background(mut_served):
+    """Crossing the compact_min_rows floor spawns the background rebuild;
+    the service keeps serving and ends up on a fresh generation with an
+    empty delta."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=5, cache_size=0, auto_compact=True,
+                       compact_min_rows=8, compact_ratio=0.0)
+    new = svc.insert(ds.x_sparse[:8], ds.x_dense[:8] * 0 + ds.q_dense[0])
+    deadline = time.time() + 120
+    while svc.stats()["compactions"] == 0 and time.time() < deadline:
+        svc.search_sparse(ds.q_sparse[:1], ds.q_dense[:1])  # keep serving
+        time.sleep(0.05)
+    st = svc.stats()
+    assert st["compactions"] >= 1 and st["delta_rows"] == 0
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense, h=20)
+    assert set(new) <= set(np.asarray(ids).ravel()) | set()
+    svc.close()
+
+
+def test_refresh_rejected_on_mutable_service(mut_served):
+    """External refresh() would pair the live delta (sharing the retired
+    generation's device buffers and column space) with a foreign main
+    index — the mutable path must route through compact() instead."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=5, cache_size=0, auto_compact=False)
+    svc.insert(ds.q_sparse[0], ds.q_dense[0])
+    with pytest.raises(ValueError, match="compact"):
+        svc.refresh(idx.engine)
+    svc.close()
+
+
+def test_mutation_under_load(mut_served):
+    """Stress: threaded searches racing insert()/delete()/background
+    compaction must never observe a tombstoned id (deleted before the
+    search started), a duplicate id within one result row, or a
+    non-monotone score row (the mixed-generation smell) — extends the
+    refresh old-xor-new consistency test to continuous mutation."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=10, cache_size=0, auto_compact=True,
+                       compact_min_rows=20, compact_ratio=0.0)
+    deleted_log: set[int] = set()
+    log_lock = threading.Lock()
+    stop = threading.Event()
+    failures: list[str] = []
+
+    def searcher():
+        qi = 0
+        while not stop.is_set():
+            with log_lock:
+                dead_before = set(deleted_log)
+            s, ids = svc.search_sparse(ds.q_sparse[qi % 8: qi % 8 + 1],
+                                       ds.q_dense[qi % 8: qi % 8 + 1])
+            qi += 1
+            row = ids[0]
+            real = row[row >= 0]
+            if len(set(real)) != len(real):
+                failures.append(f"duplicate ids: {row}")
+            if set(int(e) for e in real) & dead_before:
+                failures.append(f"tombstoned id served: {row}")
+            srow = s[0][np.isfinite(s[0])]
+            if np.any(np.diff(srow) > 1e-4):
+                failures.append(f"non-monotone scores: {s[0]}")
+
+    threads = [threading.Thread(target=searcher) for _ in range(3)]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(3)
+    known = list(range(800))
+    try:
+        for i in range(30):
+            src = int(rng.integers(0, 800))
+            new = svc.insert(ds.x_sparse[src], ds.x_dense[src])
+            known.append(int(new[0]))
+            if i % 4 == 3 and known:
+                victim = known.pop(int(rng.integers(0, len(known))))
+                if svc.delete([victim]):
+                    with log_lock:
+                        deleted_log.add(victim)
+            time.sleep(0.01)
+        svc.compact()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        svc.close()
+    assert not failures, failures[:5]
+    # post-quiesce: every tombstoned id stays gone
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense, h=20)
+    assert not (set(np.asarray(ids).ravel()) & deleted_log)
+    assert svc.stats()["compactions"] >= 1
 
 
 def test_refresh_version_invalidates_cache(small_hybrid):

@@ -1,0 +1,86 @@
+"""Recall-regression harness (DESIGN.md §6; ISSUE satellite).
+
+Pinned-seed dataset (conftest ``small_hybrid``) + cached exact scores
+(conftest ``exact_topk``): recall@20 of the three-pass search is asserted
+against RECORDED floors in three index states — fresh batch build, streaming
+delta present, and post-compaction — so future kernel or merge changes can't
+silently trade recall for speed.  Observed values at recording time (2026-07,
+seed 7): fresh 1.000, delta-present 0.996, post-compaction 1.000, packed
+delta 0.996; floors leave ~4pp of slack for benign numeric drift.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+
+PARAMS = HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6)
+H = 20
+N_STREAM = 400            # rows streamed in, out of the 4000-row dataset
+
+FLOOR_FRESH = 0.97
+FLOOR_DELTA = 0.95
+FLOOR_POST_COMPACTION = 0.97
+
+
+def _recall(ids, exact_ids):
+    return float(np.mean([len(set(ids[i]) & set(exact_ids[i])) / H
+                          for i in range(ids.shape[0])]))
+
+
+@pytest.fixture(scope="module")
+def streamed(small_hybrid):
+    """Mutable index built on 90% of the corpus with the last 10% streamed
+    in — the delta-present serving state."""
+    ds = small_hybrid
+    n0 = ds.num_points - N_STREAM
+    idx = HybridIndex.build(ds.x_sparse[:n0], ds.x_dense[:n0], PARAMS,
+                            mutable=True)
+    idx.insert(ds.x_sparse[n0:], ds.x_dense[n0:])
+    return ds, idx
+
+
+def test_fresh_build_recall_floor(small_hybrid, exact_topk):
+    """Batch build on the full corpus holds the recorded recall@20 floor."""
+    ds = small_hybrid
+    _, exact_ids = exact_topk
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense, PARAMS)
+    r = idx.search(ds.q_sparse, ds.q_dense, h=H)
+    assert _recall(r.ids, exact_ids) >= FLOOR_FRESH
+
+
+def test_delta_present_recall_floor(streamed, exact_topk):
+    """With 10% of the corpus living in the delta shard (frozen codebooks,
+    frozen residual grid, posting lists only), recall@20 must not fall
+    below the recorded floor."""
+    ds, idx = streamed
+    _, exact_ids = exact_topk
+    assert idx.mutable_state.delta.live_count == N_STREAM
+    r = idx.search(ds.q_sparse, ds.q_dense, h=H)
+    assert _recall(r.ids, exact_ids) >= FLOOR_DELTA
+
+
+def test_post_compaction_recall_floor(streamed, exact_topk):
+    """Compaction folds the delta into a fresh batch build; recall returns
+    to (at least) the fresh-build floor."""
+    ds, idx = streamed
+    _, exact_ids = exact_topk
+    idx2 = idx.compact()
+    assert idx2.mutable_state.delta.live_count == 0
+    r = idx2.search(ds.q_sparse, ds.q_dense, h=H)
+    assert _recall(r.ids, exact_ids) >= FLOOR_POST_COMPACTION
+
+
+def test_packed_delta_recall_floor(small_hybrid, exact_topk):
+    """The packed 4-bit delta append path (two codes per byte) holds the
+    same delta-present floor as unpacked storage."""
+    ds = small_hybrid
+    _, exact_ids = exact_topk
+    n0 = ds.num_points - N_STREAM
+    params = HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6,
+                               backend="pallas-packed")
+    idx = HybridIndex.build(ds.x_sparse[:n0], ds.x_dense[:n0], params,
+                            mutable=True)
+    idx.insert(ds.x_sparse[n0:], ds.x_dense[n0:])
+    r = idx.search(ds.q_sparse, ds.q_dense, h=H)
+    assert _recall(r.ids, exact_ids) >= FLOOR_DELTA
