@@ -1,0 +1,156 @@
+"""Persistence benchmark (DESIGN.md §7): snapshot bandwidth, WAL append
+latency, replay rate, and recovery-vs-rebuild.
+
+Emits CSV rows like the other benchmark modules AND writes
+``BENCH_persist.json`` with the documented schema (README "Persistence"):
+
+    workload     points/dims of the synthetic index + streamed row count
+    snapshot     {bytes, write_s, write_mb_s, load_s, load_mb_s}:
+                 leaf-blob volume and the verified write/load bandwidth of
+                 one committed generation
+    wal          {records, append_us, bytes_per_record}: mean fsync'd
+                 append latency of single-row insert records (a throwaway
+                 log — measured pure, off the real store)
+    recovery     {replayed_records, replayed_rows, recover_s,
+                 replay_rows_per_s, rebuild_s, speedup_vs_rebuild}: full
+                 restart (snapshot load + WAL tail replay) vs re-running
+                 the batch build from raw rows — the reason the subsystem
+                 exists
+    smoke        true when run with --smoke (CI scale)
+
+All scratch stores live in a temp directory that is removed even when a
+measurement fails (ISSUE 5 satellite: no leaked snapshot dirs).
+
+Run:  PYTHONPATH=src python -m benchmarks.persist_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro import persist
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.data import make_hybrid_dataset
+from repro.serve import QueryService
+
+from .common import emit
+
+OUT_JSON = "BENCH_persist.json"
+H = 20
+
+
+def _store_bytes(root: str) -> int:
+    """Total leaf-blob volume of the committed snapshot (manifest sizes)."""
+    cur = persist.read_current(root)
+    with open(os.path.join(root, cur["snapshot"], "manifest.json")) as f:
+        manifest = json.load(f)
+    return sum(int(m["nbytes"]) for m in manifest["leaves"].values())
+
+
+def main(smoke: bool = False):
+    """Run the persistence benches; prints CSV rows, writes
+    BENCH_persist.json, and cleans its temp stores up on ANY exit path."""
+    n, d_s, nnz, n_delta = ((4000, 6000, 24, 128) if smoke
+                            else (20000, 20000, 48, 512))
+    wal_probes = 32 if smoke else 128
+    ds = make_hybrid_dataset(num_points=n + n_delta, num_queries=8,
+                             d_sparse=d_s, d_dense=64, nnz_per_row=nnz,
+                             seed=5)
+    idx = HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n],
+                            HybridIndexParams(keep_top=96, head_dims=64,
+                                              kmeans_iters=6),
+                            mutable=True)
+    tmp = tempfile.mkdtemp(prefix="persist-bench-")
+    try:
+        root = os.path.join(tmp, "store")
+
+        # -- snapshot write/load bandwidth --------------------------------
+        t0 = time.perf_counter()
+        dur = persist.bootstrap(root, idx)
+        write_s = time.perf_counter() - t0
+        snap_bytes = _store_bytes(root)
+        mb = snap_bytes / 2**20
+        emit("persist_snapshot_write", write_s * 1e6,
+             f"mb={mb:.1f};mb_per_s={mb / write_s:.1f}")
+        t0 = time.perf_counter()
+        persist.load_snapshot(root)
+        load_s = time.perf_counter() - t0
+        emit("persist_snapshot_load", load_s * 1e6,
+             f"mb_per_s={mb / load_s:.1f}")
+        dur.close()
+
+        # -- WAL append latency (throwaway log, fsync'd single rows) ------
+        wal = persist.MutationWAL(os.path.join(tmp, "wal-probe"))
+        t0 = time.perf_counter()
+        for i in range(wal_probes):
+            wal.append_insert(ds.x_sparse[n + (i % n_delta)],
+                              ds.x_dense[n + (i % n_delta)][None],
+                              np.asarray([n + i]))
+        append_s = (time.perf_counter() - t0) / wal_probes
+        wal_bytes = os.path.getsize(wal.segment_paths[-1])
+        wal.close()
+        emit("persist_wal_append", append_s * 1e6,
+             f"bytes_per_record={wal_bytes // wal_probes}")
+
+        # -- stream mutations into the real store, then recover -----------
+        svc = QueryService(restore_from=root, h=H, cache_size=0,
+                           auto_compact=False)
+        for lo in range(0, n_delta, 16):
+            svc.insert(ds.x_sparse[n + lo: n + lo + 16],
+                       ds.x_dense[n + lo: n + lo + 16])
+        svc.delete(list(range(8)))
+        svc.close()
+
+        t0 = time.perf_counter()
+        rec = persist.recover(root)
+        recover_s = time.perf_counter() - t0
+        rec.durability.close()
+        replay_s = max(recover_s - load_s, 1e-9)
+        replay_rate = n_delta / replay_s
+        emit("persist_recover", recover_s * 1e6,
+             f"replayed={rec.replayed};replay_rows_per_s={replay_rate:.1f}")
+
+        # -- the alternative: rebuild the batch index from raw rows -------
+        xs, xd, ids = rec.index.mutable_state.survivors()
+        t0 = time.perf_counter()
+        HybridIndex.build(xs, xd, idx.params, mutable=True, ext_ids=ids)
+        rebuild_s = time.perf_counter() - t0
+        emit("persist_rebuild_baseline", rebuild_s * 1e6,
+             f"recover_speedup={rebuild_s / recover_s:.2f}x")
+
+        out = {
+            "workload": {"num_points": n, "d_sparse": d_s, "d_dense": 64,
+                         "streamed_rows": n_delta, "h": H},
+            "snapshot": {"bytes": int(snap_bytes), "write_s": write_s,
+                         "write_mb_s": mb / write_s, "load_s": load_s,
+                         "load_mb_s": mb / load_s},
+            "wal": {"records": wal_probes, "append_us": append_s * 1e6,
+                    "bytes_per_record": wal_bytes // wal_probes},
+            "recovery": {"replayed_records": int(rec.replayed),
+                         "replayed_rows": int(n_delta),
+                         "recover_s": recover_s,
+                         "replay_rows_per_s": replay_rate,
+                         "rebuild_s": rebuild_s,
+                         "speedup_vs_rebuild": rebuild_s / recover_s},
+            "smoke": smoke,
+        }
+        with open(OUT_JSON, "w") as f:
+            json.dump(out, f, indent=2)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: small index, fewer probes")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

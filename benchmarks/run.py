@@ -12,16 +12,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table2,table3,fig4,kernels,engine,"
-                         "serve,roofline")
+                         "serve,persist,roofline")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only
-             else ["fig4", "kernels", "engine", "serve", "table2", "table3",
-                   "roofline"])
-    from . import (engine_bench, fig4, kernels_bench, roofline_table,
-                   serve_bench, table2, table3)
+             else ["fig4", "kernels", "engine", "serve", "persist",
+                   "table2", "table3", "roofline"])
+    from . import (engine_bench, fig4, kernels_bench, persist_bench,
+                   roofline_table, serve_bench, table2, table3)
     mods = {"table2": table2, "table3": table3, "fig4": fig4,
             "kernels": kernels_bench, "engine": engine_bench,
-            "serve": serve_bench, "roofline": roofline_table}
+            "serve": serve_bench, "persist": persist_bench,
+            "roofline": roofline_table}
     print("name,us_per_call,derived")
     for n in names:
         mods[n].main()

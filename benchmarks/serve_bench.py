@@ -34,7 +34,16 @@ and writes ``BENCH_stream.json``:
                              are a structural proxy off-TPU)
     delta_ratio              delta_qps / delta_free_qps
     delta_rows               live rows in the delta when delta_qps ran
-    insert_rate_rows_per_s   encode-on-insert throughput (batches of 16)
+    insert_rate_rows_per_s   encode-on-insert throughput (batches of 16,
+                             fused incremental device appends — the default)
+    insert                   {incremental_rows_per_s, rebuild_rows_per_s,
+                             speedup, incremental_bytes_per_row,
+                             rebuild_bytes_per_row, upload_reduction}:
+                             fused dynamic_update_slice appends vs
+                             per-insert full re-materialization; off-TPU
+                             the rates are a structural proxy and the
+                             bytes columns (structural host->device upload
+                             per inserted row) carry the hardware claim
     sustained                {qps, insert_rate, rounds}: interleaved
                              insert-batch + query-stream rounds on one wall
                              clock — the serving-while-mutating claim
@@ -244,7 +253,10 @@ def stream_main(smoke: bool = False):
     idx = HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n],
                             HybridIndexParams(keep_top=96, head_dims=64,
                                               kmeans_iters=6),
-                            mutable=True)
+                            mutable=True,
+                            # pre-size the delta so the fill measures the
+                            # steady-state append paths, not growth steps
+                            delta_capacity=n_delta)
     svc = QueryService(index=idx, h=H, alpha=ALPHA, beta=BETA,
                        buckets=BUCKETS, cache_size=0, auto_compact=False)
     qs, qd = ds.q_sparse, np.asarray(ds.q_dense, np.float32)
@@ -253,12 +265,31 @@ def stream_main(smoke: bool = False):
     qps_free = _sparse_stream_qps(svc, qs, qd, chunk, repeat)
     emit("stream_delta_free", 1e6 / qps_free, f"qps={qps_free:.1f}")
 
-    # -- fill the delta, measure insert rate ------------------------------
-    t0 = time.perf_counter()
-    for lo in range(0, n_delta, 16):
-        svc.insert(ds.x_sparse[n + lo: n + lo + 16],
-                   ds.x_dense[n + lo: n + lo + 16])
-    insert_rate = n_delta / (time.perf_counter() - t0)
+    # -- fill the delta, measure insert rate + structural upload volume:
+    # full re-materialization vs fused dynamic_update_slice appends
+    # (DESIGN.md §6.1; wall-clock off-TPU is a structural proxy — the
+    # hardware claim is the bytes column) ---------------------------------
+    delta = idx.mutable_state.delta
+
+    def _fill(lo, hi, incremental):
+        delta.incremental = incremental
+        b0 = delta.upload_bytes
+        t0 = time.perf_counter()
+        for s in range(lo, hi, 16):
+            svc.insert(ds.x_sparse[n + s: n + s + 16],
+                       ds.x_dense[n + s: n + s + 16])
+        return ((hi - lo) / (time.perf_counter() - t0),
+                (delta.upload_bytes - b0) / (hi - lo))
+
+    q = n_delta // 4
+    _fill(0, q, False)                      # warm the rebuild path
+    rebuild_rate, rebuild_bytes = _fill(q, 2 * q, False)
+    _fill(2 * q, 3 * q, True)               # warm the incremental path
+    insert_rate, incr_bytes = _fill(3 * q, n_delta, True)
+    emit("stream_insert_incremental", 1e6 / insert_rate,
+         f"rows_per_s={insert_rate:.1f};rebuild_rows_per_s="
+         f"{rebuild_rate:.1f};speedup={insert_rate / rebuild_rate:.2f}x;"
+         f"bytes_per_row={incr_bytes:.0f}_vs_{rebuild_bytes:.0f}")
     delta_rows = svc.stats()["delta_rows"]
     assert delta_rows == n_delta
 
@@ -304,6 +335,17 @@ def stream_main(smoke: bool = False):
         "delta_ratio": ratio,
         "delta_rows": int(delta_rows),
         "insert_rate_rows_per_s": insert_rate,
+        # fused incremental appends vs per-insert re-materialization.  The
+        # rebuild window runs earlier in the fill (smaller delta), so its
+        # rate is flattered and the speedup is a conservative floor; the
+        # bytes columns carry the hardware claim (host->device structural
+        # upload per inserted row) independent of interpret-mode wall clock
+        "insert": {"incremental_rows_per_s": insert_rate,
+                   "rebuild_rows_per_s": rebuild_rate,
+                   "speedup": insert_rate / rebuild_rate,
+                   "incremental_bytes_per_row": incr_bytes,
+                   "rebuild_bytes_per_row": rebuild_bytes,
+                   "upload_reduction": rebuild_bytes / max(incr_bytes, 1.0)},
         "sustained": {"qps": sustained_qps, "insert_rate": sustained_ins,
                       "rounds": rounds},
         "compaction": {"seconds": compact_s, "rows_folded": int(folded)},

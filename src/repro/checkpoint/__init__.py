@@ -1,2 +1,4 @@
 from .checkpoint import (save_checkpoint, restore_checkpoint,  # noqa: F401
                          latest_step, CheckpointManager)
+from .leaves import (write_array_blob, read_array_blob,  # noqa: F401
+                     pack_arrays, unpack_arrays, array_sha256, fsync_dir)

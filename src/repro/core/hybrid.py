@@ -110,7 +110,8 @@ class HybridIndex:
     def build(cls, x_sparse: sp.spmatrix, x_dense: np.ndarray,
               params: HybridIndexParams = HybridIndexParams(), *,
               mutable: bool = False,
-              ext_ids: np.ndarray | None = None) -> "HybridIndex":
+              ext_ids: np.ndarray | None = None,
+              delta_capacity: int = 64) -> "HybridIndex":
         x_sparse = x_sparse.tocsr()
         n = x_sparse.shape[0]
         x_dense = np.asarray(x_dense, np.float32)
@@ -175,11 +176,38 @@ class HybridIndex:
                   engine=engine)
         if mutable:
             from .streaming import MutableState
+            # delta_capacity pre-sizes the delta shard's device arrays
+            # (amortized doubling still applies past it); a caller that
+            # knows its insert rate avoids the growth re-materializations
             idx.mutable_state = MutableState(idx, x_sparse, x_dense,
-                                             ext_ids=ext_ids)
+                                             ext_ids=ext_ids,
+                                             delta_capacity=delta_capacity)
         elif ext_ids is not None:
             raise ValueError("ext_ids only applies with mutable=True")
         return idx
+
+    # -- persistence (thin wrappers over repro/persist, DESIGN.md §7) ------
+    @classmethod
+    def load(cls, root: str, *, backend=None) -> "HybridIndex":
+        """Recover a mutable index from a durable store: committed snapshot
+        (checksum-verified leaf blobs) + WAL-tail replay through the
+        streaming machinery — bit-identical, ids and scores, to the index
+        at its last durably-acked mutation.  ``backend`` overrides the
+        recorded engine backend (any backend serves any snapshot)."""
+        from repro.persist import recover
+        rec = recover(root, backend=backend)
+        rec.durability.close()       # load-only: no appends from here
+        return rec.index
+
+    def save(self, root: str) -> str:
+        """Bootstrap a durable store for this freshly built mutable index
+        (initial snapshot + empty WAL) without keeping a WAL handle open —
+        the one-shot "write my index to disk" form.  Serving with
+        durability goes through ``QueryService(persist_dir=…)`` instead."""
+        from repro.persist import bootstrap
+        d = bootstrap(root, self)
+        d.close()
+        return root
 
     # -- streaming mutation (thin wrappers over core/streaming.py) ---------
     def _mutable(self):

@@ -186,6 +186,17 @@ class DeltaPostings:
                                    vals=jnp.asarray(self._vals),
                                    num_points=num_points)
 
+    def rows_for(self, dims: np.ndarray,
+                 num_points: int) -> tuple[np.ndarray, np.ndarray]:
+        """Padded ``(rows, vals)`` rectangles for just the given dims — the
+        incremental device-update unit (DESIGN.md §6.1): after an insert,
+        only the touched dims' posting rows cross to the device instead of
+        the whole (d_active, l_max) rectangle."""
+        d = np.asarray(dims, np.int64)
+        rows = np.where(self._rows[d] >= 0, self._rows[d],
+                        num_points).astype(np.int32)
+        return rows, self._vals[d]
+
 
 @jax.jit
 def score_inverted(index: PaddedInvertedIndex, q_dims: jax.Array,

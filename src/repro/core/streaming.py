@@ -39,15 +39,46 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
 
+from .distributed import ceil16, merge_topk_host
 from .engine import IndexArrays, ScoringEngine, tombstone_mask
 from .pq import PQCodebooks, ScalarQuant, encode_rows, scalar_quantize_rows
-from .sparse_index import (CompactColumns, DeltaPostings, PaddedSparseRows)
+from .sparse_index import (CompactColumns, DeltaPostings,
+                           PaddedInvertedIndex, PaddedSparseRows)
 
-__all__ = ["DeltaShard", "DeltaSnapshot", "MutableState", "search_mutable"]
+__all__ = ["DeltaShard", "DeltaSnapshot", "MutableState", "search_mutable",
+           "plan_overfetch", "fanout_search"]
+
+
+@jax.jit
+def _append_batch(codes, resq, rcols, rvals, inv_rows, inv_vals, start,
+                  c_rows, r_rows, rc_rows, rv_rows, dims, p_rows, p_vals):
+    """ONE fused device dispatch per insert batch (ROADMAP item; DESIGN.md
+    §6.1): the appended slots land as a contiguous
+    ``lax.dynamic_update_slice`` block into each structural array, and the
+    touched dims' posting rectangles as one row scatter — O(rows appended)
+    transfer instead of re-uploading the whole shard.  ``dims`` are padded
+    to a power-of-two count with repeats of a real dim (duplicate indices
+    carry identical rows), so the jit cache grows with
+    (batch size, log touched-dims, log capacity), not per insert."""
+    dus = jax.lax.dynamic_update_slice
+    return (dus(codes, c_rows, (start, 0)), dus(resq, r_rows, (start, 0)),
+            dus(rcols, rc_rows, (start, 0)), dus(rvals, rv_rows, (start, 0)),
+            inv_rows.at[dims].set(p_rows), inv_vals.at[dims].set(p_vals))
+
+
+@jax.jit
+def _append_batch_rows(codes, resq, rcols, rvals, start,
+                       c_rows, r_rows, rc_rows, rv_rows):
+    """Row-only variant of ``_append_batch`` for inserts that touched no
+    posting list (pure-dense rows, or everything spilled past the cap)."""
+    dus = jax.lax.dynamic_update_slice
+    return (dus(codes, c_rows, (start, 0)), dus(resq, r_rows, (start, 0)),
+            dus(rcols, rc_rows, (start, 0)), dus(rvals, rv_rows, (start, 0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,12 +114,15 @@ class DeltaShard:
     pass-1 gather rectangle (d_active, l_max) narrow when a power-law hot
     dim appears in most delta rows.
 
-    Cost model: an INSERT re-materializes the structural device arrays
-    (O(delta size) host work + transfer — total O(threshold^2) between
-    compactions, deliberately simple since compaction bounds the shard);
-    a DELETE reuses them and swaps only the (capacity,) mask leaf.
-    Incremental device updates (dynamic_update_slice per appended slot)
-    are the known next optimization (ROADMAP).
+    Cost model: an INSERT appends incrementally on device — ONE fused
+    dispatch writing the appended slots as a contiguous
+    ``dynamic_update_slice`` block into every structural array plus a
+    scatter of the touched dims' posting rows (O(rows appended) transfer
+    instead of re-uploading the whole shard; ``incremental=False`` restores
+    the old full re-materialization, kept as the benchmark baseline).
+    Capacity / rectangle growth still re-materializes (the shapes
+    changed).  A DELETE reuses the structural arrays and swaps only the
+    (capacity,) mask leaf.
     """
 
     def __init__(self, *, codebooks: PQCodebooks, cols: CompactColumns,
@@ -121,6 +155,13 @@ class DeltaShard:
         self.count = 0
         self.version = 0
         self.dropped_nnz = 0      # sparse entries outside the compact space
+        # incremental device appends (fused dynamic_update_slice batch);
+        # False restores full re-materialization per insert (bench baseline)
+        self.incremental = True
+        # host->device bytes shipped for structural arrays (rebuilds count
+        # the whole shard, incremental appends only the new rows) — the
+        # transfer-volume claim benchmarks/serve_bench.py records
+        self.upload_bytes = 0
         self._snapshot: DeltaSnapshot | None = None
         # structural device arrays (everything but the tombstone mask),
         # invalidated by inserts only: a delete re-uploads just the
@@ -168,6 +209,8 @@ class DeltaShard:
         xd = np.asarray(x_dense, np.float32)
         m = xs.shape[0]
         assert xd.shape[0] == m == len(ext_ids)
+        cap0, lmax0, rmax0 = (self.capacity, self._postings.l_max,
+                              self._rmax)
         self._grow(self.count + m)
         # dense: PQ codes + residual against frozen codebooks / frozen grid
         codes_u = encode_rows(xd, self.codebooks, pack=False)
@@ -181,12 +224,15 @@ class DeltaShard:
         self._ids[slots] = np.asarray(ext_ids, np.int64)
         # sparse: postings in the frozen compact column space; entries past
         # the per-dim cap spill to the slot's pass-3 residual row
+        touched: list[int] = []
         for j, slot in enumerate(slots):
             lo, hi = xs.indptr[j], xs.indptr[j + 1]
             compact = self.cols.to_compact(xs.indices[lo:hi])
             keep = compact < self.cols.num_active
             self.dropped_nnz += int((~keep).sum())
-            sd, sv = self._postings.append(int(slot), compact[keep],
+            kept = compact[keep]
+            touched.extend(int(d) for d in kept)
+            sd, sv = self._postings.append(int(slot), kept,
                                            xs.data[lo:hi][keep])
             if len(sd):
                 self._grow_rmax(len(sd))
@@ -195,8 +241,57 @@ class DeltaShard:
         self.count += m
         self.version += 1
         self._snapshot = None
-        self._arrays_struct = None
+        if (self.incremental and self._arrays_struct is not None
+                and self.capacity == cap0
+                and self._postings.l_max == lmax0 and self._rmax == rmax0):
+            # device-side append: rows are written in place of the (already
+            # correctly sized) structural arrays — O(rows) transfer
+            self._incremental_append(slots, np.unique(
+                np.asarray(touched, np.int64)))
+        else:
+            # shape changed (capacity/rectangle growth) or no device copy
+            # yet: fall back to full re-materialization at next snapshot()
+            self._arrays_struct = None
         return slots
+
+    def _incremental_append(self, slots: np.ndarray,
+                            dims: np.ndarray) -> None:
+        """Functionally update the structural device arrays with the rows
+        just appended — one fused ``_append_batch`` dispatch.  Updates
+        build NEW device arrays, so snapshots held by in-flight searches
+        keep the leaves they pinned."""
+        st = self._arrays_struct
+        lo, m = int(slots[0]), len(slots)
+        row_args = (jnp.asarray(self._codes[lo:lo + m]),
+                    jnp.asarray(self._resq[lo:lo + m]),
+                    jnp.asarray(self._row_cols[lo:lo + m]),
+                    jnp.asarray(self._row_vals[lo:lo + m]))
+        self.upload_bytes += sum(
+            a[lo:lo + m].nbytes for a in (self._codes, self._resq,
+                                          self._row_cols, self._row_vals))
+        inv = st.inv_index
+        if dims.size:
+            pad = 1 << max(int(np.ceil(np.log2(dims.size))), 0)
+            dims_p = np.concatenate(
+                [dims, np.full(pad - dims.size, dims[0], dims.dtype)])
+            rows_h, vals_h = self._postings.rows_for(dims_p, self.capacity)
+            self.upload_bytes += rows_h.nbytes + vals_h.nbytes
+            codes, resq, rcols, rvals, irows, ivals = _append_batch(
+                st.codes, st.dense_residual.q, st.sparse_residual.cols,
+                st.sparse_residual.vals, inv.rows, inv.vals, jnp.int32(lo),
+                *row_args, jnp.asarray(dims_p.astype(np.int32)),
+                jnp.asarray(rows_h), jnp.asarray(vals_h))
+            inv = PaddedInvertedIndex(rows=irows, vals=ivals,
+                                      num_points=inv.num_points)
+        else:
+            codes, resq, rcols, rvals = _append_batch_rows(
+                st.codes, st.dense_residual.q, st.sparse_residual.cols,
+                st.sparse_residual.vals, jnp.int32(lo), *row_args)
+        self._arrays_struct = dataclasses.replace(
+            st, codes=codes, inv_index=inv,
+            dense_residual=ScalarQuant(q=resq, scale=self._scale_j,
+                                       zero=self._zero_j),
+            sparse_residual=PaddedSparseRows(cols=rcols, vals=rvals))
 
     def tombstone(self, slot: int) -> None:
         """Mark one slot dead; its -inf mask row removes it from scoring."""
@@ -215,6 +310,11 @@ class DeltaShard:
         if self._snapshot is None:
             cap = self.capacity
             if self._arrays_struct is None:
+                self.upload_bytes += (
+                    self._codes.nbytes + self._resq.nbytes
+                    + self._row_cols.nbytes + self._row_vals.nbytes
+                    + self._postings._rows.nbytes
+                    + self._postings._vals.nbytes)
                 self._arrays_struct = IndexArrays.build(
                     codebooks=self.codebooks,
                     codes=jnp.asarray(self._codes),
@@ -260,6 +360,10 @@ class MutableState:
             raise ValueError("external ids must be non-negative (-1 is the "
                              "merge layer's empty-slot sentinel)")
         self.alive0 = np.ones(n, bool)
+        # cache-sorted position -> external id, computed ONCE: pi and
+        # ids_built are both frozen for this generation, and the search
+        # hot path must not re-gather an O(N) map per call
+        self.id_map = self.ids_built[index.pi]
         self.extra_sparse: list[sp.csr_matrix] = []
         self.extra_dense: list[np.ndarray] = []
         self.extra_ids: list[int] = []
@@ -393,17 +497,73 @@ class MutableState:
         return new
 
 
+def plan_overfetch(engines, h: int, deleted) -> list[int]:
+    """Per-main-engine fetch depths under pending tombstones (DESIGN.md
+    §6.2): every main engine overfetches by the 16-bucketed tombstone count
+    (the bucket keeps the jit-static fetch sizes bounded) so dropping
+    tombstoned ids at the merge can never leave fewer than h live results;
+    overfetch-then-truncate of a deterministic top-k is exact, so the
+    mutation-free path stays bit-identical to the plain one."""
+    slack = ceil16(len(deleted)) if deleted else 0
+    return [min(h + slack, e.num_points) for e in engines]
+
+
+def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
+                  delta_ids, deleted, qd, qv, qe, *, h: int, alpha: int,
+                  beta: int, qn: int | None = None):
+    """THE fan-out merge (DESIGN.md §6.2): dispatch every main engine plus
+    the delta engine back-to-back (JAX async dispatch overlaps them — the
+    in-process form of the paper's §7.2 RPC fan-out), assemble the per-
+    engine candidates in the common EXTERNAL id space, and merge top-h on
+    the host with main-generation tombstones dropped.
+
+    Shared by ``search_mutable`` (one engine, one offset) and
+    ``QueryService._run_batch`` (per-shard engines + bucket padding) — one
+    implementation instead of the two copies a parity test used to pin.
+
+    engines/h_fetch/offsets: the main engines, their fetch depths
+    (``plan_overfetch``), and each engine's global row offset; ``id_map``
+    maps global row positions to external ids (None = identity);
+    ``delta_engine`` fetches its whole capacity so tombstone-masked slots
+    can never crowd out live ones, with ``delta_ids`` mapping slots to
+    external ids; ``qn`` trims bucket padding before the merge.  Returns
+    ``(scores, ids) (qn, h)`` numpy arrays.
+    """
+    outs = [e.search(qd, qv, qe, h=hf, alpha=alpha, beta=beta)
+            for e, hf in zip(engines, h_fetch)]
+    delta_out = None
+    if delta_engine is not None:
+        delta_out = delta_engine.search(qd, qv, qe,
+                                        h=delta_engine.num_points,
+                                        alpha=alpha, beta=beta)
+    # assemble per-engine candidate parts in a COMMON id space.  Shards
+    # stay in row order so stable-sort tie-breaking matches lax.top_k on
+    # the unsharded array.
+    parts = []
+    for out, off in zip(outs, offsets):
+        s = np.asarray(out[0])
+        ids = np.asarray(out[1]).astype(np.int64)
+        if qn is not None:
+            s, ids = s[:qn], ids[:qn]
+        ids = ids + int(off)
+        if id_map is not None:
+            ids = np.asarray(id_map)[ids]
+        parts.append((s, ids, True))
+    if delta_out is not None:
+        s = np.asarray(delta_out[0])
+        pos = np.asarray(delta_out[1]).astype(np.int64)
+        if qn is not None:
+            s, pos = s[:qn], pos[:qn]
+        parts.append((s, delta_ids[pos], False))
+    return merge_topk_host(parts, h, drop_ids=deleted)
+
+
 def search_mutable(index, q_sparse, q_dense, h: int = 20,
                    alpha: int | None = None, beta: int | None = None):
     """Three-pass search over main generation + delta shard with host merge
     (DESIGN.md §6.2) — the single-process form of what QueryService does in
-    its fan-out.  Returns a SearchResult whose ids are EXTERNAL ids.
-
-    The main engine overfetches by the (16-bucketed) tombstone count so that
-    dropping tombstoned ids at the merge can never leave fewer than h live
-    results; overfetch-then-truncate of a deterministic top-k is exact, so a
-    mutation-free index returns bit-identical results to the plain path."""
-    from .distributed import ceil16, merge_topk_host
+    its fan-out (literally the same ``fanout_search`` helper).  Returns a
+    SearchResult whose ids are EXTERNAL ids."""
     from .hybrid import SearchResult
     from .sparse_index import sparse_queries_to_padded
 
@@ -416,21 +576,15 @@ def search_mutable(index, q_sparse, q_dense, h: int = 20,
     qd, qv = jnp.asarray(q_dims), jnp.asarray(q_vals)
     qe = jnp.asarray(np.asarray(q_dense, np.float32))
 
-    slack = ceil16(len(st.main_tombstones)) if st.main_tombstones else 0
-    h_main = min(h + slack, index.num_points)
-    out_main = index.engine.search(qd, qv, qe, h=h_main, alpha=alpha,
-                                   beta=beta)
+    h_fetch = plan_overfetch([index.engine], h, st.main_tombstones)
     snap = st.delta.snapshot() if st.delta.live_count else None
-    out_delta = None
+    delta_engine = None
     if snap is not None:
-        eng = ScoringEngine(arrays=snap.arrays, backend=index.engine.backend)
-        out_delta = eng.search(qd, qv, qe, h=snap.capacity, alpha=alpha,
-                               beta=beta)
-
-    pos = np.asarray(out_main[1]).astype(np.int64)
-    parts = [(np.asarray(out_main[0]), st.ids_built[index.pi[pos]], True)]
-    if out_delta is not None:
-        dpos = np.asarray(out_delta[1]).astype(np.int64)
-        parts.append((np.asarray(out_delta[0]), snap.ids[dpos], False))
-    s, ids = merge_topk_host(parts, h, drop_ids=st.main_tombstones)
+        delta_engine = ScoringEngine(arrays=snap.arrays,
+                                     backend=index.engine.backend)
+    s, ids = fanout_search(
+        [index.engine], h_fetch, np.zeros(1, np.int64),
+        st.id_map, delta_engine,
+        snap.ids if snap is not None else None, st.main_tombstones,
+        qd, qv, qe, h=h, alpha=alpha, beta=beta)
     return SearchResult(ids=ids, scores=s)

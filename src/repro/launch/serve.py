@@ -13,6 +13,16 @@ stats.
 
     PYTHONPATH=src python -m repro.launch.serve --retrieval \
         --points 20000 --queries 64 --shards 4
+
+Durable retrieval (DESIGN.md §7): ``--persist-dir DIR`` builds a mutable
+index, bootstraps a snapshot store + mutation WAL there, and serves with
+every mutation logged; ``--restore DIR`` resumes that store after a
+crash/restart (snapshot load + WAL replay) and serves the recovered index.
+
+    PYTHONPATH=src python -m repro.launch.serve --retrieval \
+        --persist-dir /tmp/hybrid-store          # first run
+    PYTHONPATH=src python -m repro.launch.serve --retrieval \
+        --restore /tmp/hybrid-store              # after a restart
 """
 
 from __future__ import annotations
@@ -47,6 +57,43 @@ def run_lm(args) -> None:
     print("sample:", jnp.asarray(out)[0, :16].tolist())
 
 
+def run_durable_retrieval(args) -> None:
+    """Durable serving loop (DESIGN.md §7): bootstrap or restore a snapshot
+    store + WAL, mutate under load, and report recovery/persistence stats."""
+    from repro.core.hybrid import HybridIndex, HybridIndexParams
+    from repro.data import make_hybrid_dataset
+    from repro.serve import QueryService
+
+    ds = make_hybrid_dataset(num_points=args.points, num_queries=args.queries,
+                             d_sparse=args.points, d_dense=64,
+                             nnz_per_row=48, seed=args.seed)
+    n0 = args.points - 64
+    if args.restore:
+        print(f"recovering from {args.restore} ...")
+        t0 = time.perf_counter()
+        svc = QueryService(restore_from=args.restore, h=args.h,
+                           auto_compact=False)
+        print(f"recovered in {time.perf_counter() - t0:.2f}s; "
+              f"stats: {svc.stats()}")
+    else:
+        print(f"building durable index: {n0} points -> {args.persist_dir}")
+        params = HybridIndexParams(keep_top=96, head_dims=64, kmeans_iters=6)
+        idx = HybridIndex.build(ds.x_sparse[:n0], ds.x_dense[:n0], params,
+                                mutable=True)
+        svc = QueryService(index=idx, h=args.h,
+                           persist_dir=args.persist_dir, auto_compact=False)
+        new = svc.insert(ds.x_sparse[n0:], ds.x_dense[n0:])
+        svc.delete(new[:8])
+        print(f"logged {len(new)} inserts + 8 deletes to the WAL; "
+              f"stats: {svc.stats()}")
+    t0 = time.perf_counter()
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense)
+    dt = time.perf_counter() - t0
+    print(f"served {ids.shape[0]} queries in {dt:.2f}s "
+          f"(top ids {ids[0, :5].tolist()})")
+    svc.close()
+
+
 def run_retrieval(args) -> None:
     """QueryService under a ragged query stream: QPS, cache, refresh."""
     import numpy as np
@@ -55,6 +102,9 @@ def run_retrieval(args) -> None:
     from repro.core.sparse_index import sparse_queries_to_padded
     from repro.data import make_hybrid_dataset
     from repro.serve import QueryService
+
+    if args.restore or args.persist_dir:
+        return run_durable_retrieval(args)
 
     print(f"building index: {args.points} points, {args.shards} shard(s)...")
     ds = make_hybrid_dataset(num_points=args.points, num_queries=args.queries,
@@ -122,6 +172,12 @@ def main():
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--h", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--persist-dir",
+                    help="bootstrap a durable snapshot store + WAL here "
+                         "and serve with every mutation logged")
+    ap.add_argument("--restore",
+                    help="recover the index from this store (snapshot + "
+                         "WAL replay) and serve it")
     args = ap.parse_args()
     if args.retrieval:
         run_retrieval(args)

@@ -1,0 +1,20 @@
+"""Durable index persistence (DESIGN.md §7): snapshot store + mutation WAL
++ crash recovery for the streaming mutable index.
+
+* ``snapshot`` — versioned on-disk copies of a pristine generation
+  (manifest + checksummed per-leaf blobs, atomic rename-on-commit);
+* ``wal`` — framed, checksummed, segmented log of every acked mutation,
+  truncated at each compaction snapshot;
+* ``recovery`` — ``recover()`` = snapshot-load + WAL-tail replay through
+  the normal streaming machinery, bit-identical to the never-crashed index;
+  ``Durability``/``bootstrap()`` are the serving layer's attach points
+  (``QueryService(persist_dir=…)`` / ``QueryService(restore_from=…)``,
+  ``HybridIndex.load``).
+"""
+
+from .snapshot import (FORMAT_VERSION, list_snapshots,  # noqa: F401
+                       load_snapshot, read_current, write_snapshot)
+from .wal import (RECORD_DELETE, RECORD_INSERT, MutationWAL,  # noqa: F401
+                  WalRecord)
+from .recovery import (Durability, RecoveryResult, apply_record,  # noqa: F401
+                       bootstrap, recover)

@@ -1,0 +1,257 @@
+"""Mutation write-ahead log (DESIGN.md §7.2).
+
+Every acked ``insert``/``delete`` appends ONE framed record before the call
+returns, so a process crash loses at most the mutation that was still being
+written — and that one was never acked to the client.  Records are the
+normalized mutation inputs (CSR parts + dense rows + external ids), NOT
+encoded index state: replay re-runs the exact ``core/streaming.py``
+encode-on-insert machinery, which is what makes a recovered index
+bit-identical to the never-crashed one (tests/test_persist.py).
+
+Frame format (little-endian, 19-byte header)::
+
+    magic   2s   b"WR"
+    kind    u8   1 = insert, 2 = delete
+    seq     u64  global monotone mutation sequence number
+    length  u32  payload byte count
+    crc32   u32  zlib.crc32 of magic+kind+seq+length THEN the payload —
+                 the header fields are covered too, so a flipped bit in
+                 ``seq`` or ``kind`` is a detected error, not a silently
+                 skipped or reordered mutation
+    payload      checkpoint.leaves.pack_arrays of the record's arrays
+
+Truncation policy: a reader stops at the FIRST anomaly — short header,
+wrong magic, short payload, or crc mismatch — and everything before it is
+the recovered state ("recover to the last complete record").  A torn tail
+is expected after a crash, so reopening the log for append truncates the
+garbage and resumes; corruption earlier in the stream also stops the scan
+there (later records' preconditions may be gone), which recovery reports
+through its replayed-count/last-seq result rather than by resurrecting
+records past the damage.
+
+Segmentation: each file ``wal-<first_seq>.log`` covers records
+``[first_seq, next segment's first_seq)``.  ``rotate()`` starts a fresh
+segment at a snapshot/compaction point; ``truncate_before(seq)`` deletes
+whole segments strictly below the snapshot's replay horizon.  Replay after
+recovery therefore touches exactly the tail the latest snapshot doesn't
+already contain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import zlib
+
+import numpy as np
+
+from repro.checkpoint.leaves import fsync_dir, pack_arrays, unpack_arrays
+
+__all__ = ["MutationWAL", "WalRecord", "RECORD_INSERT", "RECORD_DELETE"]
+
+RECORD_INSERT = 1
+RECORD_DELETE = 2
+
+_MAGIC = b"WR"
+_HEADER = struct.Struct("<2sBQII")      # magic, kind, seq, length, crc32
+_PREFIX = struct.Struct("<2sBQI")       # the crc-covered header fields
+_SEG_PREFIX, _SEG_SUFFIX = "wal-", ".log"
+
+
+def _frame_crc(kind: int, seq: int, payload: bytes) -> int:
+    """crc32 over the header prefix (magic, kind, seq, length) AND the
+    payload, so header corruption is detected, not silently replayed."""
+    return zlib.crc32(payload,
+                      zlib.crc32(_PREFIX.pack(_MAGIC, kind, seq,
+                                              len(payload))))
+
+
+@dataclasses.dataclass(frozen=True)
+class WalRecord:
+    """One decoded WAL record: the mutation kind, its global sequence
+    number, and the payload arrays (``pack_arrays`` names)."""
+    seq: int
+    kind: int
+    arrays: dict
+
+
+def _segment_path(wal_dir: str, first_seq: int) -> str:
+    return os.path.join(wal_dir, f"{_SEG_PREFIX}{first_seq:020d}{_SEG_SUFFIX}")
+
+
+def _segment_first_seq(name: str) -> int | None:
+    if not (name.startswith(_SEG_PREFIX) and name.endswith(_SEG_SUFFIX)):
+        return None
+    try:
+        return int(name[len(_SEG_PREFIX):-len(_SEG_SUFFIX)])
+    except ValueError:
+        return None
+
+
+def _scan_segment(path: str):
+    """Decode one segment file.  Returns ``(records, valid_bytes, clean)``:
+    every complete record in order, the byte offset of the first anomaly
+    (== file size when clean), and whether the file ended exactly on a
+    record boundary."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    records, off = [], 0
+    while True:
+        header = buf[off:off + _HEADER.size]
+        if len(header) < _HEADER.size:
+            return records, off, len(header) == 0
+        magic, kind, seq, length, crc = _HEADER.unpack(header)
+        if magic != _MAGIC:
+            return records, off, False
+        payload = buf[off + _HEADER.size:off + _HEADER.size + length]
+        if len(payload) < length or _frame_crc(kind, seq, payload) != crc:
+            return records, off, False
+        records.append(WalRecord(seq=seq, kind=kind,
+                                 arrays=unpack_arrays(payload)))
+        off += _HEADER.size + length
+
+
+def _has_valid_frame_after(buf: bytes, start: int) -> bool:
+    """True if a crc-valid frame decodes anywhere past ``start`` — the
+    torn-tail / bitrot discriminator: a crash leaves garbage with nothing
+    decodable after it, mid-log corruption leaves acked records stranded
+    past the damage (and truncating those would silently lose them)."""
+    i = buf.find(_MAGIC, start)
+    while i != -1:
+        header = buf[i:i + _HEADER.size]
+        if len(header) == _HEADER.size:
+            magic, kind, seq, length, crc = _HEADER.unpack(header)
+            payload = buf[i + _HEADER.size:i + _HEADER.size + length]
+            if len(payload) == length and _frame_crc(kind, seq,
+                                                     payload) == crc:
+                return True
+        i = buf.find(_MAGIC, i + 1)
+    return False
+
+
+class MutationWAL:
+    """Append-only, segmented, checksummed mutation log.
+
+    Opening an existing directory scans the ACTIVE (last) segment — the
+    only one a crash can tear — truncates any torn tail, and resumes the
+    sequence counter after its last complete record, so
+    append-after-recovery continues the same log.  All appends go through
+    one file handle; callers serialize (the service holds its mutation
+    lock)."""
+
+    def __init__(self, wal_dir: str, *, sync: bool = True):
+        self.wal_dir = wal_dir
+        self.sync = sync
+        os.makedirs(wal_dir, exist_ok=True)
+        self._segments = sorted(
+            s for s in (_segment_first_seq(n) for n in os.listdir(wal_dir))
+            if s is not None)
+        self.next_seq = 1
+        if not self._segments:
+            self._segments = [1]
+            self._file = open(_segment_path(wal_dir, 1), "ab")
+        else:
+            active = _segment_path(wal_dir, self._segments[-1])
+            records, valid, clean = _scan_segment(active)
+            if not clean:
+                with open(active, "rb") as f:
+                    buf = f.read()
+                if _has_valid_frame_after(buf, valid + 1):
+                    raise ValueError(
+                        f"{active}: corruption at byte {valid} with intact "
+                        "records after it — this is bitrot, not a torn "
+                        "tail; refusing to truncate acked mutations "
+                        "(restore the file or cut a fresh snapshot)")
+                with open(active, "r+b") as f:     # drop the torn tail
+                    f.truncate(valid)
+            self.next_seq = (records[-1].seq + 1 if records
+                             else self._segments[-1])
+            self._file = open(active, "ab")
+
+    # -- append -----------------------------------------------------------
+
+    def append(self, kind: int, arrays: dict) -> int:
+        """Frame + append one record; durable (flushed, fsync'd when
+        ``sync``) before returning.  Returns the record's sequence number."""
+        seq = self.next_seq
+        payload = pack_arrays(arrays)
+        frame = _HEADER.pack(_MAGIC, kind, seq, len(payload),
+                             _frame_crc(kind, seq, payload)) + payload
+        self._file.write(frame)
+        self._file.flush()
+        if self.sync:
+            os.fsync(self._file.fileno())
+        self.next_seq = seq + 1
+        return seq
+
+    def append_insert(self, x_sparse, x_dense, ids) -> int:
+        """Log one normalized insert batch (CSR parts + dense + ids)."""
+        xs = x_sparse.tocsr()
+        return self.append(RECORD_INSERT, {
+            "data": xs.data, "indices": xs.indices, "indptr": xs.indptr,
+            "shape": np.asarray(xs.shape, np.int64),
+            "dense": np.asarray(x_dense, np.float32),
+            "ids": np.asarray(ids, np.int64)})
+
+    def append_delete(self, ids) -> int:
+        """Log one delete (the requested external ids, live or not —
+        replaying a no-op delete is itself a no-op)."""
+        return self.append(RECORD_DELETE,
+                           {"ids": np.atleast_1d(np.asarray(ids, np.int64))})
+
+    # -- segmentation -----------------------------------------------------
+
+    def rotate(self) -> int:
+        """Close the active segment and start a new one at ``next_seq`` —
+        the snapshot/compaction cut point.  Returns the new segment's first
+        sequence number (the snapshot's ``replay_from_seq``)."""
+        self._file.close()
+        first = self.next_seq
+        self._segments.append(first)
+        self._file = open(_segment_path(self.wal_dir, first), "ab")
+        fsync_dir(self.wal_dir)
+        return first
+
+    def truncate_before(self, seq: int) -> int:
+        """Delete whole segments every record of which is ``< seq`` (i.e.
+        fully covered by a committed snapshot).  The active segment is never
+        deleted.  Returns how many segments were removed."""
+        removed = 0
+        while len(self._segments) > 1 and self._segments[1] <= seq:
+            os.remove(_segment_path(self.wal_dir, self._segments.pop(0)))
+            removed += 1
+        if removed:
+            fsync_dir(self.wal_dir)
+        return removed
+
+    # -- replay -----------------------------------------------------------
+
+    def records(self, from_seq: int = 0) -> list[WalRecord]:
+        """Every complete record with ``seq >= from_seq``, in order, across
+        all segments — stopping at the torn tail of the ACTIVE segment.
+        An unclean NON-active segment is never a crash artifact (only the
+        last segment was being appended to), so it raises instead of
+        silently recovering a partial prefix of acked mutations."""
+        out = []
+        for i, first in enumerate(self._segments):
+            path = _segment_path(self.wal_dir, first)
+            records, valid, clean = _scan_segment(path)
+            if not clean and i + 1 < len(self._segments):
+                raise ValueError(
+                    f"{path}: corruption at byte {valid} in a sealed "
+                    "(non-active) WAL segment — acked mutations would be "
+                    "lost; refusing to recover past it")
+            out.extend(r for r in records if r.seq >= from_seq)
+        return out
+
+    @property
+    def segment_paths(self) -> list[str]:
+        """Current segment files, oldest first (the active one is last)."""
+        return [_segment_path(self.wal_dir, s) for s in self._segments]
+
+    def close(self) -> None:
+        """Flush and close the append handle (idempotent)."""
+        if not self._file.closed:
+            self._file.flush()
+            self._file.close()

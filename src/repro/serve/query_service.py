@@ -43,7 +43,13 @@ and "refined top-h ids come back":
   incorporates, so a cached hit can never return pre-mutation results.
   Once the delta outgrows ``compact_min_rows`` / ``compact_ratio``, a
   background compaction rebuilds the main index from the surviving rows and
-  swaps it through the same refcounted ``refresh()`` double-buffer.
+  swaps it through the same refcounted ``refresh()`` double-buffer;
+
+* **durability** (DESIGN.md §7) — ``persist_dir=`` attaches a snapshot
+  store + mutation WAL (``repro/persist``): every acked mutation is
+  WAL-logged before the call returns, each compaction cuts a snapshot and
+  truncates the log, and ``QueryService(restore_from=…)`` resumes after a
+  crash bit-identical to the state at the last durably-acked mutation.
 
 Results are positions in cache-sorted row order, exactly like
 ``ScoringEngine.search`` (pass ``id_map=HybridIndex.pi`` to get original
@@ -63,11 +69,11 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import (ceil16, merge_topk_host,
-                                    split_index_arrays)
+from repro.core.distributed import split_index_arrays
 from repro.core.engine import (Backend, IndexArrays, ScoringEngine,
                                query_fingerprint, release_index_arrays)
 from repro.core.sparse_index import sparse_queries_to_padded
+from repro.core.streaming import fanout_search, plan_overfetch
 
 __all__ = ["QueryService", "CacheInfo", "JitCacheInfo", "bucket_for",
            "pad_rows"]
@@ -189,6 +195,22 @@ class QueryService:
         thread rebuilds the index from the surviving rows and swaps it via
         ``refresh()``.  ``auto_compact=False`` leaves compaction to explicit
         ``compact()`` calls.
+    persist_dir:
+        Make a mutable service DURABLE (DESIGN.md §7): bootstrap a snapshot
+        store + mutation WAL at this path for the freshly built ``index=``.
+        Every acked ``insert``/``delete`` is WAL-logged before the call
+        returns; each ``compact()`` cuts a new snapshot and truncates the
+        log.  Refuses a path that already holds a store (use
+        ``restore_from``).
+    restore_from:
+        Resume a durable service after a crash/restart: recover the index
+        from this store (snapshot load + WAL-tail replay, bit-identical to
+        the state at the last durably-acked mutation) and keep persisting
+        into it.  Mutually exclusive with ``index=``/``persist_dir``.
+    persist_sync:
+        fsync each WAL append before acking (the default).  ``False`` trades
+        the power-loss guarantee for append latency (process-crash safety
+        is retained — the bytes are flushed to the OS).
     """
 
     def __init__(self, engine: ScoringEngine | None = None, *,
@@ -200,7 +222,28 @@ class QueryService:
                  cache_size: int = 1024, num_shards: int = 1,
                  id_map: np.ndarray | None = None, max_workers: int = 2,
                  auto_compact: bool = True, compact_min_rows: int = 256,
-                 compact_ratio: float = 0.25):
+                 compact_ratio: float = 0.25,
+                 persist_dir: str | None = None,
+                 restore_from: str | None = None,
+                 persist_sync: bool = True):
+        self._durability = None
+        self._recovery = None
+        if restore_from is not None:
+            if index is not None or persist_dir is not None:
+                raise ValueError("restore_from= recovers the index from the "
+                                 "store; don't also pass index=/persist_dir=")
+            from repro import persist
+            rec = persist.recover(restore_from, sync=persist_sync)
+            index, self._durability, self._recovery = \
+                rec.index, rec.durability, rec
+        elif persist_dir is not None:
+            if index is None:
+                raise ValueError("persist_dir= bootstraps a NEW store for a "
+                                 "mutable index=; pass restore_from= to "
+                                 "resume an existing one")
+            from repro import persist
+            self._durability = persist.bootstrap(persist_dir, index,
+                                                 sync=persist_sync)
         if index is not None:
             if index.mutable_state is None:
                 raise ValueError("index= needs HybridIndex.build(..., "
@@ -208,7 +251,7 @@ class QueryService:
             if engine is None:
                 engine = index.engine
             if id_map is None:
-                id_map = index.mutable_state.ids_built[index.pi]
+                id_map = index.mutable_state.id_map
         if engine is None:
             if arrays is None:
                 raise ValueError("pass an engine, arrays, or a mutable index")
@@ -400,10 +443,21 @@ class QueryService:
         """Insert (or upsert) rows into the delta shard; they are searchable
         as soon as this returns (encoded against the frozen main-index
         artifacts — see core/streaming.py).  Returns the external ids.
+        On a durable service the batch is WAL-logged (fsync'd) before this
+        returns — apply-then-log, so a crash mid-call loses at most this
+        not-yet-acked batch (DESIGN.md §7.4).  If the append itself FAILS
+        (disk full), the exception propagates (the batch was never acked,
+        though it may stay visible until restart) and the durability handle
+        is poisoned: further mutations are refused so recoverable and
+        served state cannot silently diverge.
         May trigger background compaction per the service's policy."""
         self._require_index()
         with self._mut_lock:
+            if self._durability is not None:
+                self._durability.ensure_ok()
             assigned = self._index.insert(x_sparse, x_dense, ids=ids)
+            if self._durability is not None and len(assigned):
+                self._durability.log_insert(x_sparse, x_dense, assigned)
             self._install_view()
             due = self._auto_compact and self._compact_due()
         if due:
@@ -413,11 +467,18 @@ class QueryService:
     def delete(self, ids) -> int:
         """Tombstone rows by external id: delta slots die on device (-inf
         mask), main-generation rows at the host merge.  Searches dispatched
-        after this returns never report the ids.  Returns #rows killed."""
+        after this returns never report the ids.  On a durable service the
+        delete is WAL-logged before this returns (no-op deletes are not
+        logged — nothing changed); a failed append poisons the durability
+        handle exactly like ``insert``.  Returns #rows killed."""
         self._require_index()
         with self._mut_lock:
+            if self._durability is not None:
+                self._durability.ensure_ok()
             killed = self._index.delete(ids)
             if killed:
+                if self._durability is not None:
+                    self._durability.log_delete(ids)
                 self._install_view()
                 due = self._auto_compact and self._compact_due()
             else:
@@ -466,8 +527,11 @@ class QueryService:
         (DESIGN.md §6.3).  Mutations are serialized with the rebuild
         (they'd be lost otherwise); searches keep serving the old
         generation + delta throughout and flip atomically at the swap, so
-        no result ever mixes the old delta with the new main.  Returns the
-        installed generation's version."""
+        no result ever mixes the old delta with the new main.  On a durable
+        service the compacted generation is snapshotted and the WAL
+        truncated right after the swap (DESIGN.md §7.4 covers the crash
+        window between the two).  Returns the installed generation's
+        version."""
         self._require_index()
         t0 = time.perf_counter()
         with self._mut_lock:
@@ -480,8 +544,8 @@ class QueryService:
             with self._lock:
                 self._next_version += 1
                 version = self._next_version
-            new_gen = self._make_generation(
-                engine, new_state.ids_built[new_idx.pi], version)
+            new_gen = self._make_generation(engine, new_state.id_map,
+                                            version)
 
             def on_swap():
                 self._index = new_idx
@@ -492,7 +556,13 @@ class QueryService:
                 self._compactions += 1
                 self._last_compaction_s = time.perf_counter() - t0
 
-            return self._swap(new_gen, donate=True, on_swap=on_swap)
+            out = self._swap(new_gen, donate=True, on_swap=on_swap)
+            if self._durability is not None:
+                # snapshot = compaction output: cut it while still holding
+                # the mutation lock so no WAL record lands between the swap
+                # and the log rotation it anchors
+                self._durability.checkpoint(new_idx)
+            return out
 
     def search_sparse(self, q_sparse, q_dense, *, h: int | None = None,
                       alpha: int | None = None, beta: int | None = None):
@@ -634,11 +704,10 @@ class QueryService:
         qe = jnp.asarray(pad_rows(q_dense, bucket))
 
         deleted = view.deleted if view is not None else frozenset()
-        slack = ceil16(len(deleted)) if deleted else 0
         engines = gen.shards if gen.shards is not None else [gen.engine]
         offsets = (gen.offsets if gen.shards is not None
                    else np.zeros(1, np.int64))
-        h_fetch = [min(h + slack, e.num_points) for e in engines]
+        h_fetch = plan_overfetch(engines, h, deleted)
         delta_engine = view.engine if view is not None else None
 
         with self._lock:
@@ -654,32 +723,14 @@ class QueryService:
                                     q_dense.shape[1], hd, hd, cd1, cd2,
                                     "delta"))
 
-        # fan-out: dispatch EVERY engine before syncing any (JAX async
-        # dispatch overlaps the searches), then merge top-h on host — the
-        # in-process form of the paper's §7.2 RPC fan-out.
-        outs = [e.search(qd, qv, qe, h=hf, alpha=alpha, beta=beta)
-                for e, hf in zip(engines, h_fetch)]
-        delta_out = None
-        if delta_engine is not None:
-            delta_out = delta_engine.search(
-                qd, qv, qe, h=delta_engine.num_points, alpha=alpha,
-                beta=beta)
-
-        # assemble per-engine candidate parts in a COMMON id space.  Shards
-        # stay in row order so stable-sort tie-breaking matches lax.top_k
-        # on the unsharded array.
-        parts = []
-        for out, off in zip(outs, offsets):
-            s = np.asarray(out[0])[:qn]
-            ids = np.asarray(out[1])[:qn].astype(np.int64) + int(off)
-            if gen.id_map is not None:
-                ids = np.asarray(gen.id_map)[ids]
-            parts.append((s, ids, True))
-        if delta_out is not None:
-            s = np.asarray(delta_out[0])[:qn]
-            pos = np.asarray(delta_out[1])[:qn].astype(np.int64)
-            parts.append((s, view.ids[pos], False))
-        return merge_topk_host(parts, h, drop_ids=deleted)
+        # the shared fan-out merge (core/streaming.py::fanout_search — the
+        # same helper search_mutable uses): dispatch every engine before
+        # syncing any, assemble in the common id space, merge on host.
+        return fanout_search(engines, h_fetch, offsets, gen.id_map,
+                             delta_engine,
+                             view.ids if view is not None else None,
+                             deleted, qd, qv, qe, h=h, alpha=alpha,
+                             beta=beta, qn=qn)
 
     # -- introspection ----------------------------------------------------
 
@@ -716,7 +767,14 @@ class QueryService:
                     "deleted_pending":
                         len(view.deleted) if view is not None else 0,
                     "compactions": self._compactions,
-                    "last_compaction_s": self._last_compaction_s}
+                    "last_compaction_s": self._last_compaction_s,
+                    "durable": self._durability is not None,
+                    "wal_next_seq": (self._durability.wal.next_seq
+                                     if self._durability is not None
+                                     else 0),
+                    "recovered_replayed":
+                        (self._recovery.replayed
+                         if self._recovery is not None else 0)}
 
     @property
     def version(self) -> int:
@@ -738,3 +796,6 @@ class QueryService:
             ex.shutdown(wait=True)
         if ct is not None and ct.is_alive():
             ct.join()
+        with self._mut_lock:
+            if self._durability is not None:
+                self._durability.close()

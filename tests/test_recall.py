@@ -1,4 +1,4 @@
-"""Recall-regression harness (DESIGN.md §6; ISSUE satellite).
+"""Recall-regression harness (DESIGN.md §6, §7; ISSUE satellite).
 
 Pinned-seed dataset (conftest ``small_hybrid``) + cached exact scores
 (conftest ``exact_topk``): recall@20 of the three-pass search is asserted
@@ -7,12 +7,22 @@ delta present, and post-compaction — so future kernel or merge changes can't
 silently trade recall for speed.  Observed values at recording time (2026-07,
 seed 7): fresh 1.000, delta-present 0.996, post-compaction 1.000, packed
 delta 0.996; floors leave ~4pp of slack for benign numeric drift.
+
+The persistence tier (DESIGN.md §7) rides the same floors: an index
+RECOVERED from a snapshot store + WAL replay must hold the delta-present
+floor when the tail is replayed into a live delta, and the fresh-build
+floor after a durable compaction — recovery that silently lost rows or
+resurrected tombstones would show up here even if bit-level parity tests
+were ever loosened.
 """
+
+import shutil
 
 import numpy as np
 import pytest
 
 from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.serve import QueryService
 
 PARAMS = HybridIndexParams(keep_top=48, head_dims=48, kmeans_iters=6)
 H = 20
@@ -68,6 +78,53 @@ def test_post_compaction_recall_floor(streamed, exact_topk):
     idx2 = idx.compact()
     assert idx2.mutable_state.delta.live_count == 0
     r = idx2.search(ds.q_sparse, ds.q_dense, h=H)
+    assert _recall(r.ids, exact_ids) >= FLOOR_POST_COMPACTION
+
+
+@pytest.fixture(scope="module")
+def durable_streamed(small_hybrid, tmp_path_factory):
+    """A durable store whose WAL tail holds the last 10% of the corpus:
+    built on 90%, the rest streamed through a WAL-logging service, then the
+    process "dies" (service closed).  Recovery replays the tail into a live
+    delta — the delta-present restart state."""
+    ds = small_hybrid
+    n0 = ds.num_points - N_STREAM
+    root = str(tmp_path_factory.mktemp("recall-store"))
+    idx = HybridIndex.build(ds.x_sparse[:n0], ds.x_dense[:n0], PARAMS,
+                            mutable=True)
+    svc = QueryService(index=idx, h=H, cache_size=0, auto_compact=False,
+                       persist_dir=root)
+    svc.insert(ds.x_sparse[n0:], ds.x_dense[n0:])
+    svc.close()
+    return ds, root
+
+
+def test_recovered_delta_recall_floor(durable_streamed, exact_topk):
+    """Recovery from a delta-present store (snapshot + WAL-replayed tail)
+    holds the same recall@20 floor as the live delta-present index."""
+    ds, root = durable_streamed
+    _, exact_ids = exact_topk
+    idx = HybridIndex.load(root)
+    assert idx.mutable_state.delta.live_count == N_STREAM
+    r = idx.search(ds.q_sparse, ds.q_dense, h=H)
+    assert _recall(r.ids, exact_ids) >= FLOOR_DELTA
+
+
+def test_recovered_post_compaction_recall_floor(durable_streamed, exact_topk,
+                                                tmp_path):
+    """A durable compaction cuts a snapshot; recovery from THAT snapshot
+    (empty WAL tail) holds the fresh-build floor."""
+    ds, root = durable_streamed
+    _, exact_ids = exact_topk
+    copy = str(tmp_path / "store")          # leave the shared fixture as-is
+    shutil.copytree(root, copy)
+    svc = QueryService(restore_from=copy, h=H, cache_size=0,
+                       auto_compact=False)
+    svc.compact()
+    svc.close()
+    idx = HybridIndex.load(copy)
+    assert idx.mutable_state.delta.live_count == 0
+    r = idx.search(ds.q_sparse, ds.q_dense, h=H)
     assert _recall(r.ids, exact_ids) >= FLOOR_POST_COMPACTION
 
 

@@ -11,9 +11,10 @@ Four classes of dangling reference have bitten (or would bite) this repo:
 3. markdown-referenced ``examples/*.py`` files that don't exist — README
    quickstart commands live inside code fences, which the link check
    deliberately skips, so renamed examples rotted silently;
-4. public ``serve/`` API without docstrings — the serving layer is the
-   documented interface of DESIGN.md §5, so every public function/class
-   there must say what it does.
+4. public ``serve/`` or ``persist/`` API without docstrings — the serving
+   layer is the documented interface of DESIGN.md §5 and the durability
+   layer of DESIGN.md §7, so every public function/class there must say
+   what it does.
 
 This script fails (exit 1) on any.  Zero dependencies; run from anywhere:
 
@@ -113,16 +114,22 @@ def _public_defs(node: ast.Module | ast.ClassDef, prefix: str = ""):
                 yield from _public_defs(child, prefix + child.name + ".")
 
 
-def check_serve_docstrings(errors: list[str]) -> None:
-    """The serving layer (src/repro/serve/) is DESIGN.md §5's documented
-    interface: every public function, class, and method needs a docstring."""
-    for path in sorted((REPO / "src" / "repro" / "serve").glob("*.py")):
-        rel = path.relative_to(REPO)
-        tree = ast.parse(path.read_text(errors="replace"))
-        for name, node in _public_defs(tree):
-            if ast.get_docstring(node) is None:
-                errors.append(f"{rel}:{node.lineno}: public serve API "
-                              f"`{name}` has no docstring")
+DOC_GATED_PACKAGES = ("serve", "persist")
+
+
+def check_api_docstrings(errors: list[str]) -> None:
+    """The serving layer (src/repro/serve/, DESIGN.md §5) and the
+    durability layer (src/repro/persist/, DESIGN.md §7) are documented
+    interfaces: every public function, class, and method needs a
+    docstring."""
+    for pkg in DOC_GATED_PACKAGES:
+        for path in sorted((REPO / "src" / "repro" / pkg).glob("*.py")):
+            rel = path.relative_to(REPO)
+            tree = ast.parse(path.read_text(errors="replace"))
+            for name, node in _public_defs(tree):
+                if ast.get_docstring(node) is None:
+                    errors.append(f"{rel}:{node.lineno}: public {pkg} API "
+                                  f"`{name}` has no docstring")
 
 
 def main() -> int:
@@ -130,7 +137,7 @@ def main() -> int:
     check_design_citations(errors)
     check_markdown_links(errors)
     check_example_references(errors)
-    check_serve_docstrings(errors)
+    check_api_docstrings(errors)
     if errors:
         print(f"check_docs: {len(errors)} dangling reference(s)")
         for e in errors:
