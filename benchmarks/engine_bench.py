@@ -88,46 +88,117 @@ def main():
     from repro.core.pq import pack_codes
     arr = idx.engine.arrays
     packed_codes = jnp.asarray(pack_codes(np.asarray(arr.codes)))
-    eng_packed = ScoringEngine(
-        arrays=dataclasses.replace(arr, codes=packed_codes,
-                                   codes_packed=True),
-        backend=Backend.PALLAS_PACKED)
+    arr_packed = dataclasses.replace(arr, codes=packed_codes,
+                                     codes_packed=True)
+    # fused-vs-materialize A/B on both Pallas backends: same arrays, the
+    # fused flag is the only difference (c1 = alpha*h = 400 fits the buffer)
+    engines = {
+        "pallas_fused": ScoringEngine(arrays=arr, backend=Backend.PALLAS,
+                                      fused=True),
+        "pallas_materialize": ScoringEngine(arrays=arr,
+                                            backend=Backend.PALLAS,
+                                            fused=False),
+        "packed_fused": ScoringEngine(arrays=arr_packed,
+                                      backend=Backend.PALLAS_PACKED,
+                                      fused=True),
+        "packed_materialize": ScoringEngine(arrays=arr_packed,
+                                            backend=Backend.PALLAS_PACKED,
+                                            fused=False),
+    }
 
-    def run_packed():
-        s, i, _ = eng_packed.search(q_dims, q_vals, q_dense,
-                                    h=h, alpha=alpha, beta=beta)
-        return np.asarray(s), np.asarray(i)
+    def runner(e):
+        def run():
+            s, i, _ = e.search(q_dims, q_vals, q_dense,
+                               h=h, alpha=alpha, beta=beta)
+            return np.asarray(s), np.asarray(i)
+        return run
 
     run_engine()  # jit warmup
     run_host()
-    run_packed()
     s_eng, _ = timeit(run_engine, repeat=9)
     s_host, _ = timeit(run_host, repeat=9)
-    s_pk, _ = timeit(run_packed, repeat=5)
+    secs = {}
+    for name, e in engines.items():
+        run = runner(e)
+        run()
+        secs[name], _ = timeit(run, repeat=5)
 
+    from repro.kernels.lut16 import candidate_buffer_width, default_interpret
+    interpret = bool(default_interpret())
+    qps = {name: nq / s for name, s in secs.items()}
     qps_eng = nq / s_eng
     qps_host = nq / s_host
-    qps_pk = nq / s_pk
     bytes_unpacked = int(arr.codes.nbytes)
     bytes_packed = int(packed_codes.nbytes)
     emit("engine_host_loop", s_host / nq * 1e6, f"qps={qps_host:.1f}")
     emit("engine_single_jit", s_eng / nq * 1e6,
          f"qps={qps_eng:.1f};speedup={s_host / s_eng:.2f}x")
-    emit("engine_packed4bit", s_pk / nq * 1e6,
-         f"qps={qps_pk:.1f};codes_bytes={bytes_packed};"
+    emit("engine_fused_pass1", secs["pallas_fused"] / nq * 1e6,
+         f"qps={qps['pallas_fused']:.1f};"
+         f"vs_materialize="
+         f"{secs['pallas_materialize'] / secs['pallas_fused']:.2f}x")
+    emit("engine_packed4bit", secs["packed_fused"] / nq * 1e6,
+         f"qps={qps['packed_fused']:.1f};codes_bytes={bytes_packed};"
          f"unpacked_bytes={bytes_unpacked};"
-         f"hbm_reduction={bytes_unpacked / bytes_packed:.2f}x")
+         f"hbm_reduction={bytes_unpacked / bytes_packed:.2f}x;"
+         f"vs_unpacked_fused="
+         f"{secs['pallas_fused'] / secs['packed_fused']:.2f}x")
+
+    # structural half of the packed-speedup floor: the fused pass-1 jaxpr
+    # holds no (Q, N) fp32 score matrix (see predicted_pass1_bytes for why
+    # the materialize round-trip is what sank packed QPS)
+    import functools
+    from repro.kernels.ops import dense_scores_materialized, lut16_adc_topk
+    c1 = min(max(alpha * h, h), idx.num_points)
+    lut = adc_lut(q_dense, idx.codebooks)
+    no_dense_mat = not dense_scores_materialized(
+        functools.partial(lut16_adc_topk, k=c1, fused=True, packed=True),
+        packed_codes, lut)
+
+    # predicted-vs-measured pass-1 bytes/point (roofline satellite)
+    from repro.roofline.pass1 import measured_bytes, predicted_pass1_bytes
+    cbuf = candidate_buffer_width(c1)
+    pred = {
+        "fused_bytes_per_point": predicted_pass1_bytes(
+            q=nq, n=idx.num_points, k_codes=arr.codes.shape[1],
+            fused=True, cbuf=cbuf) / idx.num_points,
+        "materialize_bytes_per_point": predicted_pass1_bytes(
+            q=nq, n=idx.num_points, k_codes=arr.codes.shape[1],
+            fused=False, cbuf=cbuf) / idx.num_points,
+        "fused_packed_bytes_per_point": predicted_pass1_bytes(
+            q=nq, n=idx.num_points, k_codes=packed_codes.shape[1],
+            packed=True, fused=True, cbuf=cbuf) / idx.num_points,
+    }
+    meas = measured_bytes(
+        functools.partial(lut16_adc_topk, k=c1, fused=True),
+        jnp.asarray(arr.codes), lut)
+    roofline = {"interpret": interpret, "predicted": pred,
+                "measured_fused_bytes_per_point":
+                    None if meas is None else meas / idx.num_points}
+
+    from .kernels_bench import autotune_fused_blocks
+    autotune = autotune_fused_blocks(packed=False)
 
     with open(OUT_JSON, "w") as f:
-        json.dump({"workload": "kernels_bench",
+        json.dump({"workload": "engine_bench",
+                   "interpret": interpret,
                    "num_points": idx.num_points, "num_queries": nq,
                    "h": h, "alpha": alpha, "beta": beta,
                    "host_loop_qps": qps_host, "engine_qps": qps_eng,
                    "speedup": qps_eng / qps_host,
-                   "engine_packed_qps": qps_pk,
-                   "packed_vs_unpacked_speedup": qps_pk / qps_eng,
+                   "engine_fused_qps": qps["pallas_fused"],
+                   "engine_unfused_qps": qps["pallas_materialize"],
+                   "fused_vs_materialize_speedup":
+                       qps["pallas_fused"] / qps["pallas_materialize"],
+                   "engine_packed_qps": qps["packed_fused"],
+                   "engine_packed_unfused_qps": qps["packed_materialize"],
+                   "packed_vs_unpacked_speedup":
+                       qps["packed_fused"] / qps["pallas_fused"],
+                   "no_dense_materialization": no_dense_mat,
                    "codes_bytes_unpacked": bytes_unpacked,
-                   "codes_bytes_packed": bytes_packed}, f, indent=2)
+                   "codes_bytes_packed": bytes_packed,
+                   "pass1_roofline": roofline,
+                   "autotune": autotune}, f, indent=2)
 
 
 if __name__ == "__main__":

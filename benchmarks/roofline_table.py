@@ -13,7 +13,39 @@ RESULTS = [
 ]
 
 
+def pass1_rows():
+    """Predicted-vs-measured pass-1 bytes/point from BENCH_engine.json
+    (DESIGN.md §2.5's byte equation) — the CI-smoke half of the roofline
+    table: interpret-mode measurements are labeled so they can never pose
+    as TPU numbers."""
+    if not os.path.exists("BENCH_engine.json"):
+        emit("roofline_pass1", 0.0,
+             "missing (run benchmarks.run --only engine)")
+        return
+    with open("BENCH_engine.json") as f:
+        bench = json.load(f)
+    rl = bench.get("pass1_roofline")
+    if not rl:
+        emit("roofline_pass1", 0.0, "BENCH_engine.json has no pass1_roofline")
+        return
+    pred = rl["predicted"]
+    meas = rl.get("measured_fused_bytes_per_point")
+    emit("roofline_pass1_fused", 0.0,
+         f"predicted_bytes_per_point={pred['fused_bytes_per_point']:.1f};"
+         f"measured={'n/a' if meas is None else f'{meas:.1f}'};"
+         f"interpret={rl['interpret']}")
+    emit("roofline_pass1_materialize", 0.0,
+         f"predicted_bytes_per_point="
+         f"{pred['materialize_bytes_per_point']:.1f};"
+         f"vs_fused="
+         f"{pred['materialize_bytes_per_point'] / pred['fused_bytes_per_point']:.1f}x")
+    emit("roofline_pass1_fused_packed", 0.0,
+         f"predicted_bytes_per_point="
+         f"{pred['fused_packed_bytes_per_point']:.1f}")
+
+
 def main():
+    pass1_rows()
     for path, mesh in RESULTS:
         if not os.path.exists(path):
             emit(f"roofline_{mesh}", 0.0, "missing (run launch.dryrun)")

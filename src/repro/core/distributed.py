@@ -194,13 +194,35 @@ def _pass1_scores_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals,
             + score_inverted(inv, q_dims, q_vals))
 
 
+def _pass1_topk_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals, *,
+                      k: int, backend: eng.Backend):
+    """Per-shard pass-1 top-k: fused scan-and-select (DESIGN.md §2.5) on the
+    Pallas backends when k fits the candidate buffer — the per-device
+    (Q, N_local) score matrix never hits HBM — else materialize + top_k.
+    Both routes are bit-identical (shared block partial sums; fp32 add is
+    commutative), so the fan-out merge sees the same candidates either way."""
+    from repro.kernels.ops import MAX_FUSED_CANDIDATES, lut16_adc_topk
+    n_local = codes.shape[0]
+    inv = PaddedInvertedIndex(rows=inv_rows, vals=inv_vals,
+                              num_points=n_local)
+    if (backend in (eng.Backend.PALLAS, eng.Backend.PALLAS_PACKED)
+            and k <= MAX_FUSED_CANDIDATES):
+        bias = score_inverted(inv, q_dims, q_vals)
+        return lut16_adc_topk(
+            codes, lut, k, bias=bias,
+            packed=backend is eng.Backend.PALLAS_PACKED)
+    scores = (eng.adc_scores(codes, lut, backend)
+              + score_inverted(inv, q_dims, q_vals))
+    return jax.lax.top_k(scores, k)
+
+
 def _pass1_local(codes, lut, inv_rows, inv_vals, q_dims, q_vals, row_offset,
                  *, k: int, axis: str, backend: eng.Backend):
-    """Runs on one shard (inside shard_map): engine pass-1 scores for the
-    local rows, local top-k, then all_gather the candidate sets."""
-    scores = _pass1_scores_local(codes, lut, inv_rows, inv_vals,
-                                 q_dims, q_vals, backend)
-    local_s, local_i = jax.lax.top_k(scores, k)
+    """Runs on one shard (inside shard_map): engine pass-1 top-k for the
+    local rows (fused on the Pallas backends), then all_gather the
+    candidate sets."""
+    local_s, local_i = _pass1_topk_local(codes, lut, inv_rows, inv_vals,
+                                         q_dims, q_vals, k=k, backend=backend)
     local_i = local_i + row_offset[0]                  # globalize ids
     all_s = jax.lax.all_gather(local_s, axis, axis=1, tiled=True)  # (Q, S*k)
     all_i = jax.lax.all_gather(local_i, axis, axis=1, tiled=True)
@@ -267,10 +289,9 @@ def _search3_local(codes, lut, inv_rows, inv_vals, res_q, res_scale, res_zero,
     c1 = min(max(alpha * h, h), n_local)
     c2 = min(max(beta * h, h), c1)
 
-    # pass 1: approximate scores over the local rows, overfetch c1
-    approx = _pass1_scores_local(codes, lut, inv_rows, inv_vals,
-                                 q_dims, q_vals, backend)
-    s1, ids1 = jax.lax.top_k(approx, c1)
+    # pass 1: local candidates, overfetch c1 (fused on Pallas backends)
+    s1, ids1 = _pass1_topk_local(codes, lut, inv_rows, inv_vals,
+                                 q_dims, q_vals, k=c1, backend=backend)
 
     # pass 2: + local dense residual rows, keep c2
     sq = ScalarQuant(q=res_q, scale=res_scale, zero=res_zero)

@@ -48,9 +48,9 @@ from .sparse_index import (PaddedInvertedIndex, PaddedSparseRows,
 
 __all__ = [
     "Backend", "IndexArrays", "ScoringEngine", "adc_scores",
-    "scatter_queries_compact", "scatter_head_queries", "pass1_scores",
-    "three_pass_search", "query_fingerprint", "release_index_arrays",
-    "tombstone_mask",
+    "scatter_queries_compact", "scatter_head_queries", "pass1_bias",
+    "pass1_scores", "three_pass_search", "query_fingerprint",
+    "release_index_arrays", "tombstone_mask",
 ]
 
 
@@ -238,6 +238,22 @@ def _head_scores(arrays: IndexArrays, q_head: jax.Array,
     return score_head_ref(arrays.head, q_head)
 
 
+def pass1_bias(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
+               backend: Backend = Backend.REF) -> jax.Array:
+    """The sparse half of pass 1: inverted-index tail + head block.  (Q, N).
+
+    This is the per-(query, row) additive bias the fused scan-and-select
+    kernel (DESIGN.md §2.5) folds into its select step — the dense ADC term
+    and the tombstone mask are NOT included here."""
+    sparse = score_inverted(arrays.inv_index, q_dims, q_vals)
+    if arrays.head is not None:
+        q_head = scatter_head_queries(q_dims, q_vals, arrays.head_pos,
+                                      arrays.head.block.shape[1])
+        head_s = _head_scores(arrays, q_head, backend)
+        sparse = sparse + head_s[:, : arrays.num_points]
+    return sparse
+
+
 def pass1_scores(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
                  lut: jax.Array, backend: Backend = Backend.REF) -> jax.Array:
     """Pass-1 approximate hybrid scores over the full (local) shard:
@@ -246,18 +262,15 @@ def pass1_scores(arrays: IndexArrays, q_dims: jax.Array, q_vals: jax.Array,
     When the arrays carry a ``valid_mask`` (delta shard, DESIGN.md §6) it is
     added here, so tombstoned and empty slots score -inf and can never crowd
     live rows out of ANY pass's top-k — the later passes only add finite
-    residual terms to -inf."""
-    sparse = score_inverted(arrays.inv_index, q_dims, q_vals)
-    if arrays.head is not None:
-        q_head = scatter_head_queries(q_dims, q_vals, arrays.head_pos,
-                                      arrays.head.block.shape[1])
-        head_s = _head_scores(arrays, q_head, backend)
-        sparse = sparse + head_s[:, : arrays.num_points]
-    dense = adc_scores(arrays.codes, lut, backend, packed=arrays.codes_packed)
-    total = sparse + dense
+    residual terms to -inf.  (The mask is folded into the sparse bias BEFORE
+    the dense term; adding 0.0 is exact and -inf absorbs, so the result is
+    bit-identical to masking last — and matches the fused kernel's
+    bias-at-select ordering.)"""
+    bias = pass1_bias(arrays, q_dims, q_vals, backend)
     if arrays.valid_mask is not None:
-        total = total + arrays.valid_mask[None, :]
-    return total
+        bias = bias + arrays.valid_mask[None, :]
+    dense = adc_scores(arrays.codes, lut, backend, packed=arrays.codes_packed)
+    return bias + dense
 
 
 def tombstone_mask(capacity: int, count: int,
@@ -271,18 +284,53 @@ def tombstone_mask(capacity: int, count: int,
     return jnp.asarray(np.where(live, 0.0, -np.inf).astype(np.float32))
 
 
-@partial(jax.jit, static_argnames=("h", "c1", "c2", "backend"))
+def _use_fused_pass1(arrays: IndexArrays, backend: Backend, fused: bool,
+                     k: int) -> bool:
+    """Static routing decision for the fused scan-and-select pass 1.
+
+    Only the Pallas backends have the fused kernel; k must fit the VMEM
+    candidate buffer (MAX_FUSED_CANDIDATES) or the op would fall back to
+    materialize-then-topk anyway — routing through pass1_scores keeps the
+    jaxpr honest about what actually runs."""
+    from repro.kernels.ops import MAX_FUSED_CANDIDATES
+    return (fused and backend in (Backend.PALLAS, Backend.PALLAS_PACKED)
+            and k <= MAX_FUSED_CANDIDATES)
+
+
+def _fused_pass1_topk(arrays: IndexArrays, q_dims: jax.Array,
+                      q_vals: jax.Array, lut: jax.Array, k: int,
+                      backend: Backend):
+    """Pass-1 top-k via the fused scan-and-select kernel (DESIGN.md §2.5):
+    the (Q, N) dense score matrix is never written to HBM — the sparse bias
+    is folded in at the kernel's select step, bit-identical to
+    pass1_scores + top_k."""
+    from repro.kernels.ops import lut16_adc_topk
+    bias = pass1_bias(arrays, q_dims, q_vals, backend)
+    return lut16_adc_topk(arrays.codes, lut, k, bias=bias,
+                          row_mask=arrays.valid_mask,
+                          packed=arrays.codes_packed)
+
+
+@partial(jax.jit, static_argnames=("h", "c1", "c2", "backend", "fused"))
 def three_pass_search(arrays: IndexArrays, q_dims: jax.Array,
                       q_vals: jax.Array, q_dense: jax.Array, *, h: int,
-                      c1: int, c2: int, backend: Backend = Backend.REF):
+                      c1: int, c2: int, backend: Backend = Backend.REF,
+                      fused: bool = True):
     """The paper's full search as ONE jitted function — no host sync between
     passes.  Returns (scores (Q, h), ids (Q, h), pass1 ids (Q, c1)); ids are
-    positions in cache-sorted row order (callers map through pi)."""
+    positions in cache-sorted row order (callers map through pi).
+
+    ``fused`` (default on) routes pass 1 through the fused scan-and-select
+    kernel on the Pallas backends whenever c1 fits the candidate buffer —
+    same (scores, ids) bit-for-bit, minus the (Q, N) HBM round-trip."""
     lut = adc_lut(q_dense, arrays.codebooks)
 
     # pass 1: approximate scores on the full shard, overfetch c1
-    approx = pass1_scores(arrays, q_dims, q_vals, lut, backend)
-    s1, ids1 = res.topk_candidates(approx, c1)
+    if _use_fused_pass1(arrays, backend, fused, c1):
+        s1, ids1 = _fused_pass1_topk(arrays, q_dims, q_vals, lut, c1, backend)
+    else:
+        approx = pass1_scores(arrays, q_dims, q_vals, lut, backend)
+        s1, ids1 = res.topk_candidates(approx, c1)
 
     # pass 2: + dense residual, keep c2
     extra_d = res.dense_residual_scores(arrays.dense_residual, ids1, q_dense)
@@ -305,9 +353,12 @@ class ScoringEngine:
 
     ``search`` resolves the per-pass candidate counts (static ints, so each
     (h, alpha, beta) pair compiles once) and dispatches the single-jit
-    three-pass search."""
+    three-pass search.  ``fused`` (default on) lets the Pallas backends take
+    the fused scan-and-select pass 1 (DESIGN.md §2.5); turn it off to force
+    materialize-then-topk (the A/B baseline benchmarks use)."""
     arrays: IndexArrays
     backend: Backend = Backend.REF
+    fused: bool = True
 
     def __post_init__(self):
         # fail at construction, not at the first search deep inside the
@@ -334,11 +385,15 @@ class ScoringEngine:
         cache-sorted row positions."""
         c1, c2 = self.candidate_counts(h, alpha, beta)
         return three_pass_search(self.arrays, q_dims, q_vals, q_dense,
-                                 h=h, c1=c1, c2=c2, backend=self.backend)
+                                 h=h, c1=c1, c2=c2, backend=self.backend,
+                                 fused=self.fused)
 
     def pass1_topk(self, q_dims: jax.Array, q_vals: jax.Array,
                    lut: jax.Array, k: int):
         """Pass-1-only local top-k (the distributed fan-out building block)."""
+        if _use_fused_pass1(self.arrays, self.backend, self.fused, k):
+            return _fused_pass1_topk(self.arrays, q_dims, q_vals, lut, k,
+                                     self.backend)
         scores = pass1_scores(self.arrays, q_dims, q_vals, lut, self.backend)
         return res.topk_candidates(scores, k)
 

@@ -35,7 +35,8 @@ __all__ = [
     "build_compact_columns", "build_padded_inverted_index",
     "build_tile_sparse_head", "score_inverted", "score_head_ref",
     "sparse_queries_to_padded", "PaddedSparseRows", "build_padded_rows",
-    "score_rows", "DeltaPostings",
+    "score_rows", "DeltaPostings", "ValueForwardStream",
+    "build_value_forward_stream",
 ]
 
 
@@ -334,3 +335,134 @@ def score_rows(rows: PaddedSparseRows, candidates: jax.Array,
         q_dense_cols[:, None, :], cand_cols.astype(jnp.int32), axis=2
     )                                                                 # (Q,C,R)
     return jnp.sum(cand_vals * qv, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Value-forward stream (SINDI-motivated sparse pass-1; DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ValueForwardStream:
+    """Host-planned posting stream for the value-forward Pallas kernel.
+
+    Instead of the (Q, nq, L_max) gather rectangle + (Q, N) scatter-add of
+    ``score_inverted``, the query's postings are flattened into one
+    row-sorted (row, query, contribution) stream per (query-block,
+    row-block) pair — SINDI's value-forward traversal: multiply q_j into the
+    posting values once at plan time, then the kernel only accumulates.
+
+    ``ptr`` is in CHUNK units (not entries): each (query-block, row-block)
+    segment is padded to a multiple of ``chunk`` so Pallas BlockSpec index
+    maps — which address whole blocks — can stream exactly the chunks a
+    tile owns via scalar prefetch.
+    """
+    ptr: jax.Array        # (QB*(NB+1),) int32 chunk offsets, CSR per q-block
+    rows: jax.Array       # (QB, P_pad) int32 block-LOCAL row ids, pad = bn
+    qidx: jax.Array       # (QB, P_pad) int32 query index within block, pad 0
+    contrib: jax.Array    # (QB, P_pad) float32 q_val * posting_val, pad 0
+    num_points: int
+    num_queries: int
+    bq: int
+    bn: int
+    chunk: int
+    max_steps: int
+    num_row_blocks: int
+
+
+def build_value_forward_stream(index: PaddedInvertedIndex, q_dims: np.ndarray,
+                               q_vals: np.ndarray, *, bq: int = 8,
+                               bn: int = 512,
+                               chunk: int = 128) -> ValueForwardStream:
+    """Plan the value-forward stream on the host (numpy; not jittable —
+    stream length depends on the query nonzero pattern, which is exactly why
+    this lives outside the jitted three-pass and is exposed as the
+    standalone ``kernels.ops.score_inverted_vf``)."""
+    rows_idx = np.asarray(index.rows)
+    vals_idx = np.asarray(index.vals)
+    d_active = rows_idx.shape[0]
+    n = index.num_points
+    q_dims = np.asarray(q_dims)
+    q_vals = np.asarray(q_vals)
+    qn = q_dims.shape[0]
+
+    n_pad = max(-(-n // bn) * bn, bn)
+    nb = n_pad // bn
+    qb = max(-(-qn // bq), 1)
+
+    per_block: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    ptr = np.zeros(qb * (nb + 1), np.int32)
+    max_steps = 1
+    for b in range(qb):
+        lo, hi = b * bq, min((b + 1) * bq, qn)
+        ent_r: list[np.ndarray] = []
+        ent_q: list[np.ndarray] = []
+        ent_c: list[np.ndarray] = []
+        for i in range(lo, hi):
+            dims = q_dims[i]
+            keep = dims < d_active
+            dims = dims[keep].astype(np.int64)
+            qv = q_vals[i][keep]
+            if dims.size == 0:
+                continue
+            r = rows_idx[dims]                              # (nq_i, L_max)
+            v = vals_idx[dims]
+            live = r < n                                    # drop pad sentinel
+            ent_r.append(r[live])
+            ent_q.append(np.full(int(live.sum()), i - lo, np.int32))
+            ent_c.append((qv[:, None] * v)[live])
+        if ent_r:
+            r_all = np.concatenate(ent_r)
+            q_all = np.concatenate(ent_q)
+            c_all = np.concatenate(ent_c).astype(np.float32)
+        else:
+            r_all = np.zeros(0, np.int64)
+            q_all = np.zeros(0, np.int32)
+            c_all = np.zeros(0, np.float32)
+        order = np.argsort(r_all, kind="stable")
+        r_all, q_all, c_all = r_all[order], q_all[order], c_all[order]
+
+        seg_r: list[np.ndarray] = []
+        seg_q: list[np.ndarray] = []
+        seg_c: list[np.ndarray] = []
+        bounds = np.searchsorted(r_all, np.arange(nb + 1) * bn)
+        off = 0
+        for j in range(nb):
+            s0, s1 = int(bounds[j]), int(bounds[j + 1])
+            m = s1 - s0
+            m_pad = -(-max(m, 0) // chunk) * chunk
+            ptr[b * (nb + 1) + j] = off
+            if m_pad:
+                lr = np.full(m_pad, bn, np.int32)            # pad: no row match
+                lq = np.zeros(m_pad, np.int32)
+                lc = np.zeros(m_pad, np.float32)
+                lr[:m] = r_all[s0:s1] - j * bn               # block-LOCAL ids
+                lq[:m] = q_all[s0:s1]
+                lc[:m] = c_all[s0:s1]
+                seg_r.append(lr)
+                seg_q.append(lq)
+                seg_c.append(lc)
+            off += m_pad // chunk
+            max_steps = max(max_steps, m_pad // chunk)
+        ptr[b * (nb + 1) + nb] = off
+        if seg_r:
+            per_block.append((np.concatenate(seg_r), np.concatenate(seg_q),
+                              np.concatenate(seg_c)))
+        else:
+            per_block.append((np.full(chunk, bn, np.int32),
+                              np.zeros(chunk, np.int32),
+                              np.zeros(chunk, np.float32)))
+
+    p_pad = max(max(pb[0].size for pb in per_block), chunk)
+    rows_out = np.full((qb, p_pad), bn, np.int32)
+    qidx_out = np.zeros((qb, p_pad), np.int32)
+    contrib_out = np.zeros((qb, p_pad), np.float32)
+    for b, (pr, pq, pc) in enumerate(per_block):
+        rows_out[b, :pr.size] = pr
+        qidx_out[b, :pq.size] = pq
+        contrib_out[b, :pc.size] = pc
+
+    return ValueForwardStream(
+        ptr=jnp.asarray(ptr), rows=jnp.asarray(rows_out),
+        qidx=jnp.asarray(qidx_out), contrib=jnp.asarray(contrib_out),
+        num_points=n, num_queries=qn, bq=bq, bn=bn, chunk=chunk,
+        max_steps=max_steps, num_row_blocks=nb)

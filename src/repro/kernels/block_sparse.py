@@ -32,7 +32,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["block_sparse_matmul_pallas", "dense_to_bcsr"]
+__all__ = ["block_sparse_matmul_pallas", "dense_to_bcsr",
+           "inverted_value_forward_pallas"]
 
 
 def dense_to_bcsr(x: np.ndarray, br: int, bc: int):
@@ -122,3 +123,94 @@ def block_sparse_matmul_pallas(q: jax.Array, tiles: jax.Array,
         out_shape=jax.ShapeDtypeStruct((qn, n), jnp.float32),
         interpret=interpret,
     )(tile_ptr, tile_col, q, tiles)
+
+
+# ---------------------------------------------------------------------------
+# Value-forward inverted-index traversal (SINDI-motivated; DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+
+def _vf_kernel(ptr_ref, rows_ref, qidx_ref, contrib_ref, out_ref, *,
+               bq: int, bn: int, chunk: int, nb1: int):
+    """Consume one chunk of the (row, query, contribution) stream.
+
+    The stream is row-sorted per (query-block, row-block), so each chunk
+    lands entirely in the current (bq, bn) output tile: a query one-hot
+    weighted by the contributions (bq, chunk) contracted against a local-row
+    one-hot (chunk, bn) scatter-adds the whole chunk on the MXU — the
+    value-forward replacement for the (Q, nq, L_max) gather + (Q, N)
+    scatter-add of score_inverted."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    start = ptr_ref[b * nb1 + j]
+    end = ptr_ref[b * nb1 + j + 1]
+
+    @pl.when(start + s < end)
+    def _acc():
+        rows = rows_ref[0]                                     # (chunk,) local
+        qi = qidx_ref[0]                                       # (chunk,)
+        cv = contrib_ref[0]                                    # (chunk,)
+        qsel = (qi[None, :] ==
+                jax.lax.broadcasted_iota(jnp.int32, (bq, chunk), 0)
+                ).astype(jnp.float32) * cv[None, :]            # (bq, chunk)
+        rsel = (rows[:, None] ==
+                jax.lax.broadcasted_iota(jnp.int32, (chunk, bn), 1)
+                ).astype(jnp.float32)                          # (chunk, bn)
+        out_ref[...] += jax.lax.dot_general(
+            qsel, rsel, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bn", "chunk", "num_row_blocks",
+                                    "max_steps", "interpret"))
+def inverted_value_forward_pallas(ptr: jax.Array, rows: jax.Array,
+                                  qidx: jax.Array, contrib: jax.Array, *,
+                                  bq: int, bn: int, chunk: int,
+                                  num_row_blocks: int, max_steps: int,
+                                  interpret: bool = True) -> jax.Array:
+    """Value-forward inverted scoring over a host-planned stream.
+
+    ptr (QB*(NB+1),) int32 chunk offsets per (query-block, row-block) —
+    scalar-prefetched so the BlockSpec index maps stream exactly the chunks
+    each tile owns; rows/qidx/contrib (QB, P_pad): block-LOCAL row ids
+    (pad = bn, matches nothing), query index within the block (pad 0), and
+    q_val*posting_val contributions (pad 0).  Returns
+    (QB*bq, num_row_blocks*bn) f32 scores; callers slice to (Q, N).
+
+    Built by ``core.sparse_index.build_value_forward_stream``; wrapped by
+    ``kernels.ops.score_inverted_vf``."""
+    qb, p_pad = rows.shape
+    assert p_pad % chunk == 0 and p_pad > 0, (p_pad, chunk)
+    total_chunks = p_pad // chunk
+    nb1 = num_row_blocks + 1
+    grid = (qb, num_row_blocks, max(int(max_steps), 1))
+
+    def stream_map(b, j, s, ptr):
+        c = jnp.minimum(ptr[b * nb1 + j] + s, total_chunks - 1)
+        return (b, c)
+
+    def out_map(b, j, s, ptr):
+        return (b, j)
+
+    return pl.pallas_call(
+        functools.partial(_vf_kernel, bq=bq, bn=bn, chunk=chunk, nb1=nb1),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, chunk), stream_map),
+                pl.BlockSpec((1, chunk), stream_map),
+                pl.BlockSpec((1, chunk), stream_map),
+            ],
+            out_specs=pl.BlockSpec((bq, bn), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((qb * bq, num_row_blocks * bn),
+                                       jnp.float32),
+        interpret=interpret,
+    )(ptr, rows, qidx, contrib)

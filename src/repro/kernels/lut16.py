@@ -10,6 +10,16 @@ paper's bias/overflow fix-up is unnecessary).  Codes are kept uint8 in HBM
 (the stream that bounds single-query throughput, §4.1.2) and expanded to
 one-hot only inside VMEM.
 
+Two kernels share one accumulation body (``_block_partial``):
+
+* ``lut16_adc_pallas``      — materialize the full (Q, N) score matrix;
+* ``lut16_adc_topk_pallas`` — fused scan-and-select (DESIGN.md §2.5): the
+  same accumulation, but survivors are selected against a VMEM-resident
+  candidate buffer in the same grid pass, so the (Q, N) matrix never exists
+  in HBM.  Packed nibbles are unpacked in-register (two one-hot dots against
+  the even/odd LUT halves — no interleaved ``jnp.stack`` materialization of
+  the code block).
+
 Contract (matches kernels/ref.py::lut16_adc_ref):
   codes (N, K) uint8 in [0, l)   PQ codes, row-major over datapoints
   lut   (Q, K, l) float32        per-query per-subspace inner products
@@ -27,9 +37,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["lut16_adc_pallas", "pack_codes", "unpack_codes",
-           "default_interpret"]
+__all__ = ["lut16_adc_pallas", "lut16_adc_topk_pallas", "candidate_buffer_width",
+           "pack_codes", "unpack_codes", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -37,6 +48,48 @@ def default_interpret() -> bool:
     on real TPU backends, interpret everywhere else (ops.py imports this
     too, so the rule lives in exactly one place)."""
     return jax.default_backend() != "tpu"
+
+
+def candidate_buffer_width(k: int) -> int:
+    """VMEM candidate-buffer width for a top-``k`` fused select: ``k``
+    rounded up to the 128-lane granularity (DESIGN.md §2.5)."""
+    return max(-(-k // 128) * 128, 128)
+
+
+def _block_partial(codes, lut, *, compute_dtype, packed: bool):
+    """One (bq, bn) partial sum: codes block × LUT block on the MXU.
+
+    packed=True unpacks two 4-bit codes per byte IN-REGISTER: the low and
+    high nibbles each get their own one-hot and their own dot against the
+    even/odd half of the LUT (``lut.reshape(bq, bk, 2, l)``) — the unpacked
+    (bn, 2*bk) code block is never materialized (no ``jnp.stack``/reshape of
+    the code operand), so the VPU work is two masks instead of a cross-lane
+    interleave."""
+    bq, _, l = lut.shape
+    bn_c, bk_c = codes.shape
+    if packed:
+        lut_pair = lut.reshape(bq, bk_c, 2, l)
+        part = None
+        for nib, half in ((codes & 0x0F, lut_pair[:, :, 0, :]),
+                          (codes >> 4, lut_pair[:, :, 1, :])):
+            onehot = (nib[:, :, None] ==
+                      jax.lax.broadcasted_iota(jnp.uint8, (1, 1, l), 2))
+            onehot = onehot.reshape(bn_c, -1).astype(compute_dtype)
+            halff = half.reshape(bq, -1).astype(compute_dtype)
+            p = jax.lax.dot_general(
+                halff, onehot, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            part = p if part is None else part + p
+        return part
+    # one-hot expansion in VMEM: (bn, K, l) — the "shuffle control" operand
+    onehot = (codes[:, :, None] ==
+              jax.lax.broadcasted_iota(jnp.uint8, (1, 1, l), 2))
+    onehot = onehot.reshape(bn_c, -1).astype(compute_dtype)
+    lutf = lut.reshape(bq, -1).astype(compute_dtype)
+    # MXU contraction: (bq, K*l) x (bn, K*l)^T -> (bq, bn)
+    return jax.lax.dot_general(
+        lutf, onehot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 def _kernel(codes_ref, lut_ref, out_ref, *, compute_dtype,
@@ -47,25 +100,8 @@ def _kernel(codes_ref, lut_ref, out_ref, *, compute_dtype,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    codes = codes_ref[...]                                  # (bn, bk) uint8
-    bq, _, l = lut_ref.shape
-    if packed:
-        # two 4-bit codes per byte (paper §6.1.1's actual storage): unpack
-        # with VPU shifts/masks in VMEM — HBM streams half the bytes.
-        bn_c, bk_c = codes.shape
-        lo = codes & 0x0F
-        hi = codes >> 4
-        codes = jnp.stack([lo, hi], axis=2).reshape(bn_c, bk_c * 2)
-    # one-hot expansion in VMEM: (bn, K, l) — the "shuffle control" operand
-    onehot = (codes[:, :, None] ==
-              jax.lax.broadcasted_iota(jnp.uint8, (1, 1, l), 2))
-    onehot = onehot.reshape(codes.shape[0], -1).astype(compute_dtype)
-    lut = lut_ref[...].reshape(bq, -1).astype(compute_dtype)
-    # MXU contraction: (bq, K*l) x (bn, K*l)^T -> (bq, bn)
-    part = jax.lax.dot_general(
-        lut, onehot, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    out_ref[...] += part
+    out_ref[...] += _block_partial(codes_ref[...], lut_ref[...],
+                                   compute_dtype=compute_dtype, packed=packed)
 
 
 @functools.partial(jax.jit,
@@ -90,10 +126,10 @@ def lut16_adc_pallas(codes: jax.Array, lut: jax.Array, *, bq: int = 8,
 
     packed=True: codes hold TWO 4-bit subspace codes per byte (shape
     (N, K/2); the paper's storage format) — HBM streams half the bytes and
-    the kernel unpacks in VMEM.  Requires l == 16 and K even.  Callers
-    should halve ``bk`` (ops.py does): the LUT block spans ``2*bk`` logical
-    subspaces per code-byte block, so halving keeps the LUT VMEM footprint
-    identical to the unpacked kernel's."""
+    the kernel unpacks in-register (see ``_block_partial``).  Requires
+    l == 16 and K even.  Callers should halve ``bk`` (ops.py does): the LUT
+    block spans ``2*bk`` logical subspaces per code-byte block, so halving
+    keeps the LUT VMEM footprint identical to the unpacked kernel's."""
     if interpret is None:
         interpret = default_interpret()
     n, k = codes.shape
@@ -118,6 +154,122 @@ def lut16_adc_pallas(codes: jax.Array, lut: jax.Array, *, bq: int = 8,
         out_shape=jax.ShapeDtypeStruct((q, n), jnp.float32),
         interpret=interpret,
     )(codes, lut)
+
+
+# ---------------------------------------------------------------------------
+# Fused scan-and-select (DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(codes_ref, lut_ref, base_ref, out_s_ref, out_i_ref, acc_ref,
+                  *, compute_dtype, packed: bool, cbuf: int, bn: int, nk: int):
+    """Accumulate one (bq, bn) score block in VMEM scratch, then merge it
+    into the per-query candidate buffer — the (Q, N) matrix never leaves
+    VMEM.
+
+    The buffer (out_s/out_i, shape (bq, cbuf)) is the OUTPUT block; its index
+    map ignores (jn, kk), so Pallas keeps it VMEM-resident across the whole
+    row sweep and writes it back to HBM once per query block.  The running
+    threshold is the buffer's current minimum: a block whose best score
+    cannot STRICTLY beat it is skipped entirely, which is exact under
+    ``lax.top_k``'s lowest-index tie-break (an equal-scoring later row never
+    displaces an earlier buffer entry)."""
+    jn = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when((jn == 0) & (kk == 0))
+    def _init_buffer():
+        out_s_ref[...] = jnp.full_like(out_s_ref, -jnp.inf)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    @pl.when(kk == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _block_partial(codes_ref[...], lut_ref[...],
+                                   compute_dtype=compute_dtype, packed=packed)
+
+    @pl.when(kk == nk - 1)
+    def _select():
+        # bias is added HERE, once per row block, so the fp32 addition order
+        # is exactly ``base + (partial_0 + ... + partial_nk)`` — bit-identical
+        # to the materialize-then-topk path (ops.lut16_adc_topk fallback).
+        total = base_ref[...] + acc_ref[...]                     # (bq, bn)
+        ids = jn * bn + jax.lax.broadcasted_iota(jnp.int32, total.shape, 1)
+        buf_s = out_s_ref[...]
+        thresh = buf_s[:, cbuf - 1:cbuf]                         # (bq, 1)
+
+        @pl.when(jnp.any(total > thresh))
+        def _merge():
+            # Buffer entries come FIRST in the concat: among equal scores
+            # top_k keeps the lower concat index, i.e. the earlier (lower-id)
+            # row — the same tie-break a full-row lax.top_k applies.
+            cat_s = jnp.concatenate([buf_s, total], axis=1)
+            cat_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+            top_s, pos = jax.lax.top_k(cat_s, cbuf)
+            out_s_ref[...] = top_s
+            out_i_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bq", "bn", "bk", "interpret",
+                                    "compute_dtype", "packed"))
+def lut16_adc_topk_pallas(codes: jax.Array, lut: jax.Array, base: jax.Array,
+                          *, k: int, bq: int = 8, bn: int = 512, bk: int = 32,
+                          interpret: bool | None = None,
+                          compute_dtype=jnp.float32, packed: bool = False):
+    """Fused LUT16 scan + top-k select (DESIGN.md §2.5).
+
+    Scores ``base + codes·lut`` and returns the per-query top candidates
+    WITHOUT materializing the (Q, N) score matrix: the only outputs are the
+    (Q, cbuf) candidate score/id buffers, cbuf = ``candidate_buffer_width(k)``.
+    Callers slice ``[:, :k]``.
+
+    base: additive bias, broadcast against the score block — either (Q, N)
+    f32 (sparse+head+tombstones, the engine's pass-1 bias) or (1, N) f32 (a
+    row mask only, e.g. -inf padding).  -inf rows can never enter the buffer
+    ahead of finite ones; never-filled buffer slots stay (-inf, -1).
+
+    Shapes must be divisible by the block sizes (ops.lut16_adc_topk pads);
+    ids are row indices into the PADDED n axis."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, kc = codes.shape
+    q, k2, l = lut.shape
+    if packed:
+        assert l == 16 and k2 == 2 * kc, (codes.shape, lut.shape)
+    else:
+        assert kc == k2, (codes.shape, lut.shape)
+    assert n % bn == 0 and q % bq == 0 and kc % bk == 0, (n, q, kc, bq, bn, bk)
+    assert base.ndim == 2 and base.shape[1] == n and base.shape[0] in (1, q), \
+        (base.shape, q, n)
+    cbuf = candidate_buffer_width(k)
+    assert 0 < k <= n, (k, n)
+
+    lut_bk = 2 * bk if packed else bk
+    base_rows = base.shape[0]
+    nk = kc // bk
+    grid = (q // bq, n // bn, nk)
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_fused_kernel, compute_dtype=compute_dtype,
+                          packed=packed, cbuf=cbuf, bn=bn, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda iq, jn, kk: (jn, kk)),
+            pl.BlockSpec((bq, lut_bk, l), lambda iq, jn, kk: (iq, kk, 0)),
+            pl.BlockSpec((base_rows if base_rows == 1 else bq, bn),
+                         (lambda iq, jn, kk: (0, jn)) if base_rows == 1
+                         else (lambda iq, jn, kk: (iq, jn))),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, cbuf), lambda iq, jn, kk: (iq, 0)),
+            pl.BlockSpec((bq, cbuf), lambda iq, jn, kk: (iq, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((q, cbuf), jnp.float32),
+                   jax.ShapeDtypeStruct((q, cbuf), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32)],
+        interpret=interpret,
+    )(codes, lut, base)
+    return out_s, out_i
 
 
 def pack_codes(codes):

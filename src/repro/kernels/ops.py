@@ -12,14 +12,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .block_sparse import block_sparse_matmul_pallas, dense_to_bcsr
-from .lut16 import (default_interpret as _interpret, lut16_adc_pallas,
-                    pack_codes, unpack_codes)
+from .block_sparse import (block_sparse_matmul_pallas, dense_to_bcsr,
+                           inverted_value_forward_pallas)
+from .lut16 import (candidate_buffer_width, default_interpret as _interpret,
+                    lut16_adc_pallas, lut16_adc_topk_pallas, pack_codes,
+                    unpack_codes)
 from .ref import lut16_adc_ref
 
-__all__ = ["lut16_adc", "lut16_adc_onehot", "block_sparse_matmul",
-           "block_sparse_matmul_bcsr", "bcsr_from_head", "pack_codes",
-           "unpack_codes"]
+__all__ = ["lut16_adc", "lut16_adc_topk", "lut16_adc_onehot",
+           "block_sparse_matmul", "block_sparse_matmul_bcsr",
+           "bcsr_from_head", "pack_codes", "unpack_codes",
+           "score_inverted_vf", "dense_scores_materialized",
+           "MAX_FUSED_CANDIDATES"]
+
+# Fused-select candidate-buffer cap (DESIGN.md §2.5): (bq, cbuf) score+id
+# buffers must stay VMEM-resident next to the (bq, bn) accumulator, and the
+# per-block merge is a top_k over (cbuf + bn) lanes — past ~1k candidates the
+# merge dominates the scan and materialize-then-topk wins anyway, so
+# lut16_adc_topk falls back above this.
+MAX_FUSED_CANDIDATES = 1024
 
 
 def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
@@ -30,6 +41,39 @@ def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value), size
+
+
+def _resolve_lut16_blocks(q: int, n: int, kc: int, bq: int, bn: int,
+                          bk: int | None, packed: bool):
+    """One block-size resolution for BOTH the materialize and the fused LUT16
+    wrappers, so their per-block fp32 partial sums are bit-identical.
+
+    bk=None picks the stored-axis block: 32 bytes unpacked, 16 packed (one
+    packed byte is two subspaces, so this keeps the LUT VMEM block equal).
+    bn clamps against the 128-lane-rounded row count so small inputs aren't
+    padded to a full 512."""
+    if bk is None:
+        bk = 16 if packed else 32
+    bq = min(bq, max(1, q))
+    bk = min(bk, kc)
+    bn = min(bn, max(-(-n // 128) * 128, 128))
+    return bq, bn, bk
+
+
+def _validate_packed(kc: int, k: int, l: int, lut: jax.Array,
+                     packed: bool) -> jax.Array:
+    """Shared packed-storage validation + odd-K phantom-subspace LUT pad."""
+    if packed:
+        if l != 16:
+            raise ValueError(f"packed codes require l == 16, got l={l}")
+        if not 0 <= 2 * kc - k <= 1:
+            raise ValueError(
+                f"packed codes (N, {kc}) cannot hold a {k}-subspace LUT")
+        if k < 2 * kc:                  # odd K: phantom subspace scores zero
+            lut = jnp.pad(lut, ((0, 0), (0, 2 * kc - k), (0, 0)))
+    elif k != kc:
+        raise ValueError(f"codes (N, {kc}) do not match a {k}-subspace LUT")
+    return lut
 
 
 def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
@@ -56,23 +100,8 @@ def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
     lut = jnp.asarray(lut, jnp.float32)
     q, k, l = lut.shape
     n, kc = codes.shape                 # kc: stored (byte) subspace axis
-    if bk is None:
-        bk = 16 if packed else 32
-    if packed:
-        if l != 16:
-            raise ValueError(f"packed codes require l == 16, got l={l}")
-        if not 0 <= 2 * kc - k <= 1:
-            raise ValueError(
-                f"packed codes (N, {kc}) cannot hold a {k}-subspace LUT")
-        if k < 2 * kc:                  # odd K: phantom subspace scores zero
-            lut = jnp.pad(lut, ((0, 0), (0, 2 * kc - k), (0, 0)))
-    elif k != kc:
-        raise ValueError(f"codes (N, {kc}) do not match a {k}-subspace LUT")
-    bq = min(bq, max(1, q))
-    bk = min(bk, kc)
-    # clamp the row block against the actual row count (rounded up to the
-    # 128-lane granularity) so small inputs aren't padded to a full bn=512.
-    bn = min(bn, max(-(-n // 128) * 128, 128))
+    lut = _validate_packed(kc, k, l, lut, packed)
+    bq, bn, bk = _resolve_lut16_blocks(q, n, kc, bq, bn, bk, packed)
     codes_p, n0 = _pad_to(jnp.asarray(codes), 0, bn)
     # pad K consistently on both operands: padded codes point at LUT slot 0 of
     # padded subspaces whose LUT is zero, contributing nothing.  (In packed
@@ -86,6 +115,150 @@ def lut16_adc(codes: jax.Array, lut: jax.Array, *, bq: int = 8, bn: int = 512,
                            packed=packed)
     out = out[:q0, :n0]
     return out[0] if single else out
+
+
+def lut16_adc_topk(codes: jax.Array, lut: jax.Array, k: int, *,
+                   bias: jax.Array | None = None,
+                   row_mask: jax.Array | None = None,
+                   bq: int = 8, bn: int = 512, bk: int | None = None,
+                   compute_dtype=jnp.float32, packed: bool = False,
+                   fused: bool = True):
+    """Pass-1 scan-and-select: top-k of ``bias + row_mask + codes·lut``
+    (DESIGN.md §2.5).
+
+    codes (N, Kc) uint8 (packed two-per-byte when packed=True), lut
+    (Q, K, l) f32, bias optional (Q, N) f32 (the engine's sparse+head term),
+    row_mask optional (N,) f32 additive mask (0 live / -inf tombstoned).
+    Returns ``(scores (Q, k) f32, ids (Q, k) int32)``; entries whose score is
+    non-finite get id -1, in BOTH paths, so tombstoned rows never surface as
+    candidates.
+
+    fused=True routes through the fused Pallas kernel: the (Q, N) score
+    matrix is never materialized — the kernel's only outputs are the
+    (Q, cbuf) candidate buffers.  The fallback (fused=False, or
+    k > MAX_FUSED_CANDIDATES: the candidate buffer would not fit the select)
+    materializes scores with the SAME block sizes and adds the bias in the
+    SAME fp32 order, so the two paths return bit-identical (scores, ids)."""
+    lut = jnp.asarray(lut, jnp.float32)
+    q, kl, l = lut.shape
+    n, kc = codes.shape
+    if not 0 < k <= n:
+        raise ValueError(f"top-k needs 0 < k <= N rows, got k={k}, N={n}")
+    lut = _validate_packed(kc, kl, l, lut, packed)
+    bq, bn, bk = _resolve_lut16_blocks(q, n, kc, bq, bn, bk, packed)
+
+    def _normalize(s, ids):
+        return s, jnp.where(jnp.isfinite(s), ids, -1)
+
+    if not (fused and k <= MAX_FUSED_CANDIDATES):
+        # materialize-then-topk fallback: bias-first addition order matches
+        # the fused kernel's select step bit-for-bit.
+        dense = lut16_adc(codes, lut[:, :kl], bq=bq, bn=bn, bk=bk,
+                          compute_dtype=compute_dtype, packed=packed)
+        base = bias
+        if row_mask is not None:
+            rm = jnp.asarray(row_mask, jnp.float32)[None, :]
+            base = rm if base is None else base + rm
+        total = dense if base is None else base + dense
+        s, ids = jax.lax.top_k(total, k)
+        return _normalize(s, ids)
+
+    codes_p, _ = _pad_to(jnp.asarray(codes), 0, bn)
+    codes_p, _ = _pad_to(codes_p, 1, bk)
+    lut_p, _ = _pad_to(lut, 1, 2 * bk if packed else bk)
+    lut_p, _ = _pad_to(lut_p, 0, bq)
+    n_pad = codes_p.shape[0]
+    neg_inf = jnp.float32(-jnp.inf)
+    if bias is not None:
+        base = jnp.asarray(bias, jnp.float32)
+        if row_mask is not None:
+            base = base + jnp.asarray(row_mask, jnp.float32)[None, :]
+        # padded query rows get -inf too: their buffers stay (-inf, -1) and
+        # are sliced off below.
+        base = jnp.pad(base, ((0, lut_p.shape[0] - q), (0, n_pad - n)),
+                       constant_values=neg_inf)
+    else:
+        # no per-query bias: a (1, N) row mask is enough — the fused jaxpr
+        # then contains NO (Q, N)-shaped value at all (the structural claim
+        # dense_scores_materialized checks).
+        rm = (jnp.asarray(row_mask, jnp.float32) if row_mask is not None
+              else jnp.zeros((n,), jnp.float32))
+        base = jnp.pad(rm[None, :], ((0, 0), (0, n_pad - n)),
+                       constant_values=neg_inf)
+    s, ids = lut16_adc_topk_pallas(codes_p, lut_p, base, k=k, bq=bq, bn=bn,
+                                   bk=bk, interpret=_interpret(),
+                                   compute_dtype=compute_dtype, packed=packed)
+    return _normalize(s[:q, :k], ids[:q, :k])
+
+
+def _jaxpr_types():
+    try:                               # newer jax
+        from jax.extend import core as xcore
+        return xcore.Jaxpr, xcore.ClosedJaxpr
+    except (ImportError, AttributeError):
+        from jax import core as jcore
+        return jcore.Jaxpr, jcore.ClosedJaxpr
+
+
+def _walk_jaxpr_eqns(jaxpr):
+    Jaxpr, ClosedJaxpr = _jaxpr_types()
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            # a pallas_call's body jaxpr manipulates VMEM *blocks*; only its
+            # outvars (checked above) land in HBM.  Descending would flag
+            # per-block temporaries — e.g. the fused select's (bq, cbuf+bn)
+            # concat — that never exist at HBM scale.
+            continue
+        for v in eqn.params.values():
+            for sub in jax.tree.leaves(
+                    v, is_leaf=lambda x: isinstance(x, (Jaxpr, ClosedJaxpr))):
+                if isinstance(sub, ClosedJaxpr):
+                    yield from _walk_jaxpr_eqns(sub.jaxpr)
+                elif isinstance(sub, Jaxpr):
+                    yield from _walk_jaxpr_eqns(sub)
+
+
+def dense_scores_materialized(fn, *args) -> bool:
+    """Structural check for the fused-select claim (DESIGN.md §2.5): trace
+    ``fn(*args)`` and report whether any equation in the jaxpr (recursively
+    through pjit sub-jaxprs; pallas_call bodies are VMEM block scale and
+    skipped, their HBM outvars are checked) PRODUCES a float32 value of shape
+    (Q > 1, >= N) — i.e. a full per-query score matrix.  N is taken from the
+    first argument's leading dim (the codes row count).  A (1, N) row mask is
+    allowed: it is O(N) storage, not the O(Q·N) matrix the fused path
+    eliminates.  True for materialize-then-topk, False for the fused path."""
+    n = args[0].shape[0]
+    closed = jax.make_jaxpr(fn)(*args)
+    for eqn in _walk_jaxpr_eqns(closed.jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if (aval is not None and getattr(aval, "ndim", 0) == 2
+                    and aval.dtype == jnp.float32
+                    and aval.shape[0] > 1 and aval.shape[1] >= n):
+                return True
+    return False
+
+
+def score_inverted_vf(index, q_dims, q_vals, *, bq: int = 8, bn: int = 512,
+                      chunk: int = 128) -> jax.Array:
+    """Value-forward inverted-index scoring (SINDI-style; DESIGN.md §2.5):
+    host-plans a row-sorted (row, query, contribution) stream per
+    (query-block, row-block) and consumes it with MXU one-hot dots — no
+    (Q, nq, L_max) gather rectangle and no (Q, N) scatter-add.
+
+    Matches ``core.sparse_index.score_inverted`` on the same
+    ``PaddedInvertedIndex``.  The stream layout depends on the query batch's
+    nonzeros, so this op is HOST-PLANNED: it cannot sit inside the jitted
+    three-pass search and serves the benchmarks/offline scans instead."""
+    from repro.core.sparse_index import build_value_forward_stream
+    st = build_value_forward_stream(index, q_dims, q_vals, bq=bq, bn=bn,
+                                    chunk=chunk)
+    out = inverted_value_forward_pallas(
+        st.ptr, st.rows, st.qidx, st.contrib, bq=st.bq, bn=st.bn,
+        chunk=st.chunk, num_row_blocks=st.num_row_blocks,
+        max_steps=st.max_steps, interpret=_interpret())
+    return out[:st.num_queries, :st.num_points]
 
 
 @jax.jit

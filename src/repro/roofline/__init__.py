@@ -1,2 +1,3 @@
 from .analysis import (RooflineTerms, collective_bytes_from_hlo,  # noqa: F401
                        roofline_from_compiled, model_flops, V5E)
+from .pass1 import measured_bytes, predicted_pass1_bytes  # noqa: F401

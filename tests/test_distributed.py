@@ -276,6 +276,45 @@ def test_sharded_search_packed_adc_matches_gather():
     assert "PACKED SHARDED OK" in out
 
 
+def test_sharded_fused_pass1_matches_materialize():
+    """The per-shard fused scan-and-select (DESIGN.md §2.5) must be
+    bit-identical to the materialize-then-topk shard path, on both Pallas
+    backends, through the full fan-out merge."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro.core.distributed import make_sharded_search_fn
+        from repro.core.pq import pack_codes
+        import repro.kernels.ops as ops
+
+        mesh = make_test_mesh((4,), ("data",))
+        rng = np.random.default_rng(17)
+        n, kpq, l, q, nq, d_act, lm = 512, 8, 16, 4, 8, 32, 8
+        shards = 4
+        codes = rng.integers(0, l, (n, kpq)).astype(np.uint8)
+        packed = jnp.asarray(pack_codes(codes))
+        rest = (
+            jnp.asarray(rng.normal(size=(q, kpq, l)), jnp.float32),
+            jnp.asarray(rng.integers(0, n // shards,
+                                     (shards * d_act, lm)), jnp.int32),
+            jnp.asarray(rng.normal(size=(shards * d_act, lm)), jnp.float32),
+            jnp.asarray(rng.integers(0, d_act, (q, nq)), jnp.int32),
+            jnp.asarray(rng.normal(size=(q, nq)), jnp.float32),
+            jnp.arange(shards, dtype=jnp.int32) * (n // shards),
+        )
+        for adc, c in (("pallas", jnp.asarray(codes)), ("pallas-packed",
+                                                        packed)):
+            vf, idf = make_sharded_search_fn(mesh, k=10, adc=adc)(c, *rest)
+            ops.MAX_FUSED_CANDIDATES = 0      # force the materialize route
+            vm, idm = make_sharded_search_fn(mesh, k=10, adc=adc)(c, *rest)
+            ops.MAX_FUSED_CANDIDATES = 1024
+            assert (np.asarray(idf) == np.asarray(idm)).all(), adc
+            np.testing.assert_array_equal(np.asarray(vf), np.asarray(vm))
+        print("FUSED SHARDED OK")
+    """)
+    assert "FUSED SHARDED OK" in out
+
+
 def test_moe_shardmap_combine_matches_pjit():
     """§Perf pair-1 optimization: explicit shard_map combine == pjit path."""
     out = _run("""

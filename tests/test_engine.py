@@ -222,3 +222,133 @@ def test_engine_is_single_dispatch(built):
         jnp.asarray(ds.q_dense))
     text = str(closed)
     assert text.count("top_k") >= 3          # all three passes traced together
+
+
+# ---------------------------------------------------------------------------
+# fused scan-and-select pass 1 (DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+
+def _padded_queries(ds, idx):
+    q_dims_np, q_vals_np = sparse_queries_to_padded(
+        ds.q_sparse, idx.cols, nq_max=idx.params.nq_max)
+    return (jnp.asarray(q_dims_np), jnp.asarray(q_vals_np),
+            jnp.asarray(ds.q_dense))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas-packed"])
+def test_fused_search_bit_identical_to_materialize(built, packed_built,
+                                                   backend):
+    """fused=True vs fused=False through the FULL three-pass search must be
+    bit-identical on both Pallas backends: the fused kernel shares the
+    per-block partial sums and select ordering with the materialize path."""
+    ds, idx = built
+    _, pidx = packed_built
+    arrays = (pidx if backend == "pallas-packed" else idx).engine.arrays
+    args = _padded_queries(ds, idx)
+    b = Backend.from_name(backend)
+    fused = ScoringEngine(arrays=arrays, backend=b, fused=True).search(
+        *args, h=20, alpha=20, beta=5)
+    mat = ScoringEngine(arrays=arrays, backend=b, fused=False).search(
+        *args, h=20, alpha=20, beta=5)
+    for got, want in zip(fused, mat):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_pass1_topk_bit_identical(built):
+    """pass1_topk (the fan-out building block) takes the same fused route
+    and must agree with the materialize path bit for bit."""
+    from repro.core.pq import adc_lut
+    ds, idx = built
+    q_dims, q_vals, q_dense = _padded_queries(ds, idx)
+    lut = adc_lut(q_dense, idx.engine.arrays.codebooks)
+    f = ScoringEngine(arrays=idx.engine.arrays, backend=Backend.PALLAS,
+                      fused=True).pass1_topk(q_dims, q_vals, lut, 100)
+    m = ScoringEngine(arrays=idx.engine.arrays, backend=Backend.PALLAS,
+                      fused=False).pass1_topk(q_dims, q_vals, lut, 100)
+    np.testing.assert_array_equal(np.asarray(f[1]), np.asarray(m[1]))
+    np.testing.assert_array_equal(np.asarray(f[0]), np.asarray(m[0]))
+
+
+def test_fused_search_respects_tombstones(packed_built):
+    """valid_mask tombstones must never surface from the fused pass 1, and
+    the masked fused search stays bit-identical to the masked materialize
+    search (c1 well under the live-row count, so no -inf filler slots)."""
+    import dataclasses
+    from repro.core.engine import tombstone_mask
+    ds, pidx = packed_built
+    n = pidx.engine.arrays.num_points
+    rng = np.random.default_rng(11)
+    dead = np.zeros(n, bool)
+    dead[rng.choice(n, 150, replace=False)] = True
+    arrays = dataclasses.replace(pidx.engine.arrays,
+                                 valid_mask=tombstone_mask(n, n, dead=dead))
+    args = _padded_queries(ds, pidx)
+    fused = ScoringEngine(arrays=arrays, backend=Backend.PALLAS_PACKED,
+                          fused=True).search(*args, h=20, alpha=20, beta=5)
+    mat = ScoringEngine(arrays=arrays, backend=Backend.PALLAS_PACKED,
+                        fused=False).search(*args, h=20, alpha=20, beta=5)
+    for got, want in zip(fused, mat):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    s, ids = np.asarray(fused[0]), np.asarray(fused[1])
+    dead_ids = set(np.flatnonzero(dead).tolist())
+    assert np.isfinite(s).all()
+    assert not (set(ids.ravel().tolist()) & dead_ids)
+    # pass-1 candidates too, not just the final h
+    ids1 = np.asarray(fused[2])
+    assert not (set(ids1.ravel().tolist()) & dead_ids)
+
+
+def test_fused_overflow_candidates_fall_back_in_engine(built):
+    """c1 above MAX_FUSED_CANDIDATES must take the materialize route inside
+    three_pass_search (static decision) and still return correct results."""
+    import repro.kernels.ops as ops
+    ds, idx = built
+    args = _padded_queries(ds, idx)
+    # alpha=100, h=20 -> c1 = 2000 > 1024: routed to materialize
+    assert 100 * 20 > ops.MAX_FUSED_CANDIDATES
+    big = ScoringEngine(arrays=idx.engine.arrays, backend=Backend.PALLAS,
+                        fused=True).search(*args, h=20, alpha=100, beta=5)
+    mat = ScoringEngine(arrays=idx.engine.arrays, backend=Backend.PALLAS,
+                        fused=False).search(*args, h=20, alpha=100, beta=5)
+    for got, want in zip(big, mat):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _uint8_pallas_calls(closed):
+    """(max output width) of every pallas_call consuming a uint8 operand in
+    the traced computation — i.e. the LUT16 code-scan kernels."""
+    from repro.kernels.ops import _walk_jaxpr_eqns
+    widths = []
+    for eqn in _walk_jaxpr_eqns(closed.jaxpr):
+        if eqn.primitive.name != "pallas_call":
+            continue
+        if not any(getattr(getattr(v, "aval", None), "dtype", None)
+                   == jnp.uint8 for v in eqn.invars):
+            continue
+        widths.append(max(v.aval.shape[-1] for v in eqn.outvars))
+    return widths
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_engine_jaxpr_code_scan_output_width(built, fused):
+    """Structural acceptance (ISSUE 6): in the fused engine the code-scan
+    pallas_call emits only candidate-buffer-width outputs — the (Q, N) score
+    matrix never crosses the kernel boundary to HBM.  The materialize engine
+    trips the same detector with a full-N output, proving it detects."""
+    import jax
+    from repro.core.engine import three_pass_search
+    from repro.kernels.lut16 import candidate_buffer_width
+    ds, idx = built
+    q_dims, q_vals, q_dense = _padded_queries(ds, idx)
+    c1 = 200
+    closed = jax.make_jaxpr(
+        lambda a, d, v, q: three_pass_search(
+            a, d, v, q, h=10, c1=c1, c2=40, backend=Backend.PALLAS,
+            fused=fused))(idx.engine.arrays, q_dims, q_vals, q_dense)
+    widths = _uint8_pallas_calls(closed)
+    assert widths, "no code-scan pallas_call found in the engine jaxpr"
+    n = idx.engine.arrays.num_points
+    if fused:
+        assert max(widths) <= candidate_buffer_width(c1) < n
+    else:
+        assert max(widths) >= n
