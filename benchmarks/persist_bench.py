@@ -8,14 +8,24 @@ Emits CSV rows like the other benchmark modules AND writes
     snapshot     {bytes, write_s, write_mb_s, load_s, load_mb_s}:
                  leaf-blob volume and the verified write/load bandwidth of
                  one committed generation
-    wal          {records, append_us, bytes_per_record}: mean fsync'd
-                 append latency of single-row insert records (a throwaway
-                 log — measured pure, off the real store)
+    wal          {records, append_us, bytes_per_record,
+                 acked_mutations_per_s, group_commit}: mean fsync'd append
+                 latency of single-row insert records (a throwaway log —
+                 measured pure, off the real store); ``group_commit``
+                 {batch, per_record_fsync_us, acked_mutations_per_s,
+                 speedup_vs_per_record} compares one-ack-one-fsync against
+                 ``append_many`` batches sharing a single fsync
+                 (DESIGN.md §7.6)
     recovery     {replayed_records, replayed_rows, recover_s,
                  replay_rows_per_s, rebuild_s, speedup_vs_rebuild}: full
                  restart (snapshot load + WAL tail replay) vs re-running
                  the batch build from raw rows — the reason the subsystem
                  exists
+    delta_snapshot
+                 {checkpoint_s, recovery_seconds, replayed_records}: a
+                 live-delta checkpoint (rotate + delta-state snapshot +
+                 WAL truncation) followed by a timed restart that replays
+                 only the short post-checkpoint tail
     smoke        true when run with --smoke (CI scale)
 
 All scratch stores live in a temp directory that is removed even when a
@@ -37,6 +47,7 @@ import numpy as np
 
 from repro import persist
 from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.persist.wal import RECORD_DELETE
 from repro.data import make_hybrid_dataset
 from repro.serve import QueryService
 
@@ -99,6 +110,33 @@ def main(smoke: bool = False):
         emit("persist_wal_append", append_s * 1e6,
              f"bytes_per_record={wal_bytes // wal_probes}")
 
+        # -- group commit: shared fsync vs one-ack-one-fsync --------------
+        # tiny delete records so the fsync, not payload serialization,
+        # dominates both sides — the protocol cost being amortized
+        gc_batch = 128
+        gc_probes = wal_probes * 16
+        wal2 = persist.MutationWAL(os.path.join(tmp, "wal-group"))
+        for i in range(gc_batch):               # warm both paths
+            wal2.append_delete([i])
+        t0 = time.perf_counter()
+        for i in range(gc_probes):
+            wal2.append_delete([i])             # ack = a private fsync
+        per_record_s = (time.perf_counter() - t0) / gc_probes
+        # identical single-id records on both sides — only the ack protocol
+        # differs
+        batch_entries = [(RECORD_DELETE, {"ids": np.asarray([i], np.int64)})
+                         for i in range(gc_batch)]
+        t0 = time.perf_counter()
+        for _ in range(gc_probes // gc_batch):
+            wal2.append_many(batch_entries)
+        group_s = (time.perf_counter() - t0) / gc_probes
+        wal2.close()
+        acked_per_s = 1.0 / group_s
+        gc_speedup = per_record_s / group_s
+        emit("persist_wal_group_commit", group_s * 1e6,
+             f"batch={gc_batch};acked_per_s={acked_per_s:.0f};"
+             f"speedup_vs_per_record={gc_speedup:.1f}x")
+
         # -- stream mutations into the real store, then recover -----------
         svc = QueryService(restore_from=root, h=H, cache_size=0,
                            auto_compact=False)
@@ -125,6 +163,25 @@ def main(smoke: bool = False):
         emit("persist_rebuild_baseline", rebuild_s * 1e6,
              f"recover_speedup={rebuild_s / recover_s:.2f}x")
 
+        # -- delta-state checkpoint: restart = snapshot + short tail ------
+        svc = QueryService(restore_from=root, h=H, cache_size=0,
+                           auto_compact=False)
+        t0 = time.perf_counter()
+        svc.checkpoint()                        # delta-state snapshot cut
+        ckpt_s = time.perf_counter() - t0
+        tail = 4
+        for i in range(tail):                   # short post-checkpoint tail
+            svc.insert(ds.x_sparse[n + i], ds.x_dense[n + i][None])
+        svc.close()
+        t0 = time.perf_counter()
+        rec2 = persist.recover(root)
+        ckpt_recover_s = time.perf_counter() - t0
+        rec2.durability.close()
+        assert rec2.replayed == tail, (
+            f"checkpoint did not truncate the tail: replayed {rec2.replayed}")
+        emit("persist_delta_snapshot_recover", ckpt_recover_s * 1e6,
+             f"checkpoint_s={ckpt_s:.3f};replayed={rec2.replayed}")
+
         out = {
             "workload": {"num_points": n, "d_sparse": d_s, "d_dense": 64,
                          "streamed_rows": n_delta, "h": H},
@@ -132,13 +189,22 @@ def main(smoke: bool = False):
                          "write_mb_s": mb / write_s, "load_s": load_s,
                          "load_mb_s": mb / load_s},
             "wal": {"records": wal_probes, "append_us": append_s * 1e6,
-                    "bytes_per_record": wal_bytes // wal_probes},
+                    "bytes_per_record": wal_bytes // wal_probes,
+                    "acked_mutations_per_s": acked_per_s,
+                    "group_commit": {
+                        "batch": gc_batch,
+                        "per_record_fsync_us": per_record_s * 1e6,
+                        "acked_mutations_per_s": acked_per_s,
+                        "speedup_vs_per_record": gc_speedup}},
             "recovery": {"replayed_records": int(rec.replayed),
                          "replayed_rows": int(n_delta),
                          "recover_s": recover_s,
                          "replay_rows_per_s": replay_rate,
                          "rebuild_s": rebuild_s,
                          "speedup_vs_rebuild": rebuild_s / recover_s},
+            "delta_snapshot": {"checkpoint_s": ckpt_s,
+                               "recovery_seconds": ckpt_recover_s,
+                               "replayed_records": int(rec2.replayed)},
             "smoke": smoke,
         }
         with open(OUT_JSON, "w") as f:

@@ -40,16 +40,24 @@ and writes ``BENCH_stream.json``:
                              speedup, incremental_bytes_per_row,
                              rebuild_bytes_per_row, upload_reduction}:
                              fused dynamic_update_slice appends vs
-                             per-insert full re-materialization; off-TPU
-                             the rates are a structural proxy and the
-                             bytes columns (structural host->device upload
-                             per inserted row) carry the hardware claim
+                             per-insert full re-materialization, the two
+                             modes ALTERNATED batch-by-batch over the same
+                             fill window so both see the same delta sizes;
+                             off-TPU the rates are a structural proxy and
+                             the bytes columns (structural host->device
+                             upload per inserted row) carry the hardware
+                             claim
     sustained                {qps, insert_rate, rounds}: interleaved
                              insert-batch + query-stream rounds on one wall
                              clock — the serving-while-mutating claim
-    compaction               {seconds, rows_folded}: the fold-down rebuild
-                             + refresh() swap
-    post_compact_qps         stream QPS on the compacted generation
+    compaction               {seconds, rows_folded}: the full REBUILD fold
+                             (retrain=True: k-means + column space redone),
+                             measured on a discarded clone
+    merge_compaction         {seconds, rows_folded, speedup_vs_rebuild}:
+                             the frozen-artifact MERGE fold
+                             (retrain=False, DESIGN.md §6.2) driving the
+                             real refresh() swap
+    post_compact_qps         stream QPS on the merged generation
     smoke                    true when run with --smoke (CI scale)
 
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--stream]
@@ -271,21 +279,35 @@ def stream_main(smoke: bool = False):
     # hardware claim is the bytes column) ---------------------------------
     delta = idx.mutable_state.delta
 
-    def _fill(lo, hi, incremental):
+    def _insert_batch(s, incremental):
         delta.incremental = incremental
         b0 = delta.upload_bytes
         t0 = time.perf_counter()
-        for s in range(lo, hi, 16):
-            svc.insert(ds.x_sparse[n + s: n + s + 16],
-                       ds.x_dense[n + s: n + s + 16])
-        return ((hi - lo) / (time.perf_counter() - t0),
-                (delta.upload_bytes - b0) / (hi - lo))
+        svc.insert(ds.x_sparse[n + s: n + s + 16],
+                   ds.x_dense[n + s: n + s + 16])
+        return time.perf_counter() - t0, delta.upload_bytes - b0
 
-    q = n_delta // 4
-    _fill(0, q, False)                      # warm the rebuild path
-    rebuild_rate, rebuild_bytes = _fill(q, 2 * q, False)
-    _fill(2 * q, 3 * q, True)               # warm the incremental path
-    insert_rate, incr_bytes = _fill(3 * q, n_delta, True)
+    # warm BOTH paths over the first half, then ALTERNATE mode batch-by-
+    # batch over the second half so each path is timed at the same delta
+    # sizes — timing them in disjoint windows flatters whichever runs
+    # while the delta is smaller (the old rebuild-first ordering reported
+    # incremental appends SLOWER than re-materialization)
+    half = n_delta // 2
+    for i, s in enumerate(range(0, half, 16)):
+        _insert_batch(s, incremental=i % 2 == 0)
+    elapsed = {True: 0.0, False: 0.0}
+    volume = {True: 0.0, False: 0.0}
+    rows = {True: 0, False: 0}
+    for i, s in enumerate(range(half, n_delta, 16)):
+        mode = i % 2 == 0
+        dt, db = _insert_batch(s, mode)
+        elapsed[mode] += dt
+        volume[mode] += db
+        rows[mode] += 16
+    insert_rate = rows[True] / elapsed[True]
+    rebuild_rate = rows[False] / elapsed[False]
+    incr_bytes = volume[True] / rows[True]
+    rebuild_bytes = volume[False] / rows[False]
     emit("stream_insert_incremental", 1e6 / insert_rate,
          f"rows_per_s={insert_rate:.1f};rebuild_rows_per_s="
          f"{rebuild_rate:.1f};speedup={insert_rate / rebuild_rate:.2f}x;"
@@ -318,14 +340,22 @@ def stream_main(smoke: bool = False):
     emit("stream_sustained", 1e6 / sustained_qps,
          f"qps={sustained_qps:.1f};inserts_per_s={sustained_ins:.1f}")
 
-    # -- compaction: fold everything down through refresh() ---------------
+    # -- compaction: rebuild vs merge fold-down ---------------------------
     folded = svc.stats()["delta_rows"]
+    # rebuild cost on a DISCARDED result, so the serving index keeps its
+    # delta and the merge below folds the identical state
     t0 = time.perf_counter()
-    svc.compact()
-    compact_s = time.perf_counter() - t0
+    svc._index.mutable_state.compact(retrain=True)
+    rebuild_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.compact(retrain=False)              # the real refresh() swap
+    merge_s = time.perf_counter() - t0
     qps_post = _sparse_stream_qps(svc, qs, qd, chunk, repeat)
-    emit("stream_compaction", compact_s * 1e6,
+    emit("stream_compaction", rebuild_s * 1e6,
          f"rows_folded={folded};post_compact_qps={qps_post:.1f}")
+    emit("stream_merge_compaction", merge_s * 1e6,
+         f"rows_folded={folded};"
+         f"speedup_vs_rebuild={rebuild_s / merge_s:.2f}x")
 
     out = {
         "workload": {"num_points": n, "num_queries": 32, "d_dense": 64,
@@ -335,11 +365,11 @@ def stream_main(smoke: bool = False):
         "delta_ratio": ratio,
         "delta_rows": int(delta_rows),
         "insert_rate_rows_per_s": insert_rate,
-        # fused incremental appends vs per-insert re-materialization.  The
-        # rebuild window runs earlier in the fill (smaller delta), so its
-        # rate is flattered and the speedup is a conservative floor; the
-        # bytes columns carry the hardware claim (host->device structural
-        # upload per inserted row) independent of interpret-mode wall clock
+        # fused incremental appends vs per-insert re-materialization,
+        # alternated batch-by-batch over one fill window (same delta sizes
+        # for both modes); the bytes columns carry the hardware claim
+        # (host->device structural upload per inserted row) independent of
+        # interpret-mode wall clock
         "insert": {"incremental_rows_per_s": insert_rate,
                    "rebuild_rows_per_s": rebuild_rate,
                    "speedup": insert_rate / rebuild_rate,
@@ -348,7 +378,9 @@ def stream_main(smoke: bool = False):
                    "upload_reduction": rebuild_bytes / max(incr_bytes, 1.0)},
         "sustained": {"qps": sustained_qps, "insert_rate": sustained_ins,
                       "rounds": rounds},
-        "compaction": {"seconds": compact_s, "rows_folded": int(folded)},
+        "compaction": {"seconds": rebuild_s, "rows_folded": int(folded)},
+        "merge_compaction": {"seconds": merge_s, "rows_folded": int(folded),
+                             "speedup_vs_rebuild": rebuild_s / merge_s},
         "post_compact_qps": qps_post,
         "smoke": smoke,
     }

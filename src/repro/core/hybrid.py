@@ -225,11 +225,15 @@ class HybridIndex:
         """Tombstone rows by external id; returns how many were live."""
         return self._mutable().delete(ids)
 
-    def compact(self) -> "HybridIndex":
-        """Fold the delta + tombstones into a fresh batch build of the
-        surviving rows; returns the NEW mutable index (this one is
-        untouched — swap at the call site, e.g. QueryService.refresh)."""
-        return self._mutable().compact()
+    def compact(self, retrain: bool | None = None) -> "HybridIndex":
+        """Fold the delta + tombstones down; returns the NEW mutable index
+        (this one is untouched — swap at the call site, e.g.
+        QueryService.refresh).  ``retrain=True`` re-runs the full batch
+        build (new codebooks / column space / cache-sort); ``retrain=False``
+        merge-compacts into the frozen artifacts; ``None`` (default) merges
+        unless out-of-column-space sparse entries force a retrain
+        (core/streaming.py, DESIGN.md §6.2)."""
+        return self._mutable().compact(retrain=retrain)
 
     @property
     def delta_version(self) -> int:

@@ -24,10 +24,16 @@ order.  Mutation therefore splits into two tiers:
   (initial build rows + appended rows), per-row alive flags, the delta
   shard, and the set of *main tombstones* (external ids deleted or
   superseded while resident in the main generation; the search merge drops
-  them host-side).  ``compact()`` folds everything down by re-running the
-  deterministic batch build on the surviving rows in corpus order — which
-  is exactly what makes the incremental-vs-rebuild equivalence property
-  testable bit-for-bit (tests/test_streaming.py).
+  them host-side).  ``compact()`` folds everything down.  Two policies
+  (DESIGN.md §6.2): ``retrain=True`` re-runs the deterministic batch build
+  on the surviving rows in corpus order — bit-identical to a scratch build,
+  which is what the incremental-vs-rebuild equivalence property pins
+  (tests/test_streaming.py) — while the default *merge* path
+  (``merge_compact``) keeps every frozen artifact (codebooks, quant grid,
+  column space, head-dim set) and only re-derives the row-parallel
+  structures, trading a k-means retrain for an O(n) re-encode; its scores
+  drift from a scratch build only by the dense encoding error, pinned by
+  the relaxed-equivalence property suite.
 
 ``HybridIndex.build(..., mutable=True)`` attaches a ``MutableState``;
 ``HybridIndex.insert/delete/compact`` are thin wrappers over this module,
@@ -364,6 +370,14 @@ class MutableState:
         # ids_built are both frozen for this generation, and the search
         # hot path must not re-gather an O(N) map per call
         self.id_map = self.ids_built[index.pi]
+        # frozen head-dim set (compact ids, pad -1): merge_compact rebuilds
+        # the head block over the SAME dims instead of re-ranking activity,
+        # so its tile layout stays comparable across merge generations
+        self.head_dims0 = np.asarray(index.head_dim_ids)
+        # sparse entries silently outside the frozen column space in the
+        # merged MAIN structures (merge_compact carries + grows this);
+        # nonzero means only a retrain can make them searchable
+        self.main_dropped_nnz = 0
         self.extra_sparse: list[sp.csr_matrix] = []
         self.extra_dense: list[np.ndarray] = []
         self.extra_ids: list[int] = []
@@ -475,17 +489,110 @@ class MutableState:
             else xs_parts[0]
         return xs, np.concatenate(xd_parts, axis=0), np.concatenate(ids)
 
-    def compact(self):
-        """Fold delta + tombstones into a fresh batch build of the surviving
-        rows (new codebooks, new compact column space, new cache-sort).
-        Returns a NEW mutable ``HybridIndex``; the caller swaps it in (the
-        service does this through its double-buffered ``refresh()``)."""
+    _EMPTY_COMPACT_MSG = (
+        "cannot compact an empty corpus: the batch build (k-means, "
+        "column space) needs at least one surviving row; keep the "
+        "delta serving or insert before compacting")
+
+    def merge_compact(self):
+        """Fold delta + tombstones into the FROZEN build artifacts
+        (DESIGN.md §6.2): keep the codebooks, residual-quant grid, compact
+        column space and head-dim set, and re-derive only the row-parallel
+        structures over the surviving rows — new cache-sort, re-pruned
+        posting lists, PQ codes via ``encode_rows`` against the existing
+        codebooks, int8 residuals on the existing grid.  O(n) encode
+        instead of a k-means retrain; rows already resident in the main
+        generation re-encode to IDENTICAL codes (deterministic argmin over
+        unchanged codebooks), so merged scores drift from a scratch rebuild
+        only by the delta rows' frozen-vs-retrained dense encoding error —
+        the tolerance the relaxed-equivalence suite (tests/test_streaming.py)
+        pins.  Sparse entries outside the frozen column space stay buffered
+        in the retained corpus (counted in ``main_dropped_nnz``) until a
+        ``compact(retrain=True)``.  Returns a NEW mutable ``HybridIndex``;
+        the caller swaps it in."""
+        from .cache_sort import cache_sort
+        from .engine import Backend
+        from .hybrid import HybridIndex, _remap
+        from .pq import pq_decode
+        from .pruning import prune_split
+        from .sparse_index import (build_padded_inverted_index,
+                                   build_padded_rows, build_tile_sparse_head)
+        if self.live_rows == 0:
+            raise ValueError(self._EMPTY_COMPACT_MSG)
+        params, delta = self.params, self.delta
+        cols, codebooks = delta.cols, delta.codebooks
+        xs, xd, ids = self.survivors()
+        n = xs.shape[0]
+        pi = cache_sort(xs)
+        xs_s, xd_s = xs[pi], np.asarray(xd, np.float32)[pi]
+        split = prune_split(xs_s, keep_top=params.keep_top)
+        idx_compact = _remap(split.index, cols)     # frozen column space
+        res_compact = _remap(split.residual, cols)
+        dropped = int(xs_s.nnz) - int(idx_compact.nnz) - int(res_compact.nnz)
+        head = None
+        head_dim_ids = np.empty(0, np.int32)
+        tail_index = idx_compact
+        hd = self.head_dims0[self.head_dims0 >= 0].astype(np.int32)
+        if hd.size and cols.num_active > 0:
+            # same FROZEN head dims, not a re-ranked activity top-n: the
+            # query-side head/tail split must match the index layout
+            head = build_tile_sparse_head(idx_compact, hd,
+                                          block_rows=params.block_rows,
+                                          block_cols=params.block_cols)
+            head_dim_ids = np.asarray(head.head_dims)
+            tail_index = idx_compact.tolil()
+            tail_index[:, hd] = 0
+            tail_index = tail_index.tocsr()
+            tail_index.eliminate_zeros()
+        inv_index = build_padded_inverted_index(tail_index)
+        sparse_residual = build_padded_rows(res_compact)
+        codes_u = encode_rows(xd_s, codebooks, pack=False)
+        recon = np.asarray(pq_decode(jnp.asarray(codes_u), codebooks))
+        resq = scalar_quantize_rows(xd_s - recon, delta._scale, delta._zero)
+        dres = ScalarQuant(q=jnp.asarray(resq), scale=delta._scale_j,
+                           zero=delta._zero_j)
+        backend = params.resolve_backend()
+        arrays = IndexArrays.build(
+            codebooks=codebooks, codes=jnp.asarray(codes_u),
+            inv_index=inv_index, head=head, dense_residual=dres,
+            sparse_residual=sparse_residual, num_points=n,
+            d_active=cols.num_active,
+            with_bcsr=backend in (Backend.PALLAS, Backend.PALLAS_PACKED),
+            pack=params.resolve_pack())
+        engine = ScoringEngine(arrays=arrays, backend=backend)
+        new = HybridIndex(params=params, num_points=n, pi=pi, cols=cols,
+                          inv_index=inv_index, head=head,
+                          head_dim_ids=head_dim_ids,
+                          sparse_residual=sparse_residual,
+                          codebooks=codebooks, codes=arrays.codes,
+                          dense_residual=dres, d_dense=xd.shape[1],
+                          engine=engine)
+        new.mutable_state = MutableState(new, xs, xd, ext_ids=ids,
+                                         delta_capacity=delta.capacity)
+        new.mutable_state.next_id = max(new.mutable_state.next_id,
+                                        self.next_id)
+        new.mutable_state.main_dropped_nnz = self.main_dropped_nnz + dropped
+        return new
+
+    def compact(self, retrain: bool | None = None):
+        """Fold delta + tombstones down; returns a NEW mutable
+        ``HybridIndex`` (this state is untouched; the caller swaps, e.g.
+        through QueryService's double-buffered ``refresh()``).
+
+        ``retrain=True`` re-runs the full batch build on the surviving rows
+        (new codebooks, new compact column space, new cache-sort) —
+        bit-identical to building from scratch.  ``retrain=False`` merges
+        into the frozen artifacts (``merge_compact``).  The default
+        ``None`` auto-routes: merge, unless sparse entries have been
+        dropped outside the frozen column space (delta buffering or a
+        previous merge) — those only become searchable under a retrain."""
         from .hybrid import HybridIndex
         if self.live_rows == 0:
-            raise ValueError(
-                "cannot compact an empty corpus: the batch build (k-means, "
-                "column space) needs at least one surviving row; keep the "
-                "delta serving or insert before compacting")
+            raise ValueError(self._EMPTY_COMPACT_MSG)
+        if retrain is None:
+            retrain = (self.delta.dropped_nnz + self.main_dropped_nnz) > 0
+        if not retrain:
+            return self.merge_compact()
         xs, xd, ids = self.survivors()
         new = HybridIndex.build(xs, xd, self.params, mutable=True,
                                 ext_ids=ids)

@@ -95,24 +95,40 @@ class Durability:
 
     # -- mutation logging -------------------------------------------------
 
-    def log_insert(self, x_sparse, x_dense, ids) -> int:
-        """Durably log one applied insert batch; returns its WAL seq.
+    def log_insert(self, x_sparse, x_dense, ids, *,
+                   sync: bool | None = None) -> int:
+        """Log one applied insert batch; returns its WAL seq.  With the
+        default ``sync=None`` the record is fsync'd per the WAL's policy
+        before returning; ``sync=False`` defers the disk sync to a later
+        ``sync(seq)`` — the group-commit ack path (DESIGN.md §7.6).
         An append failure poisons the handle (``ensure_ok``)."""
         try:
             return self.wal.append_insert(sp.csr_matrix(x_sparse),
                                           np.atleast_2d(
                                               np.asarray(x_dense,
                                                          np.float32)),
-                                          ids)
+                                          ids, sync=sync)
         except BaseException:
             self.failed = True
             raise
 
-    def log_delete(self, ids) -> int:
-        """Durably log one applied delete; returns its WAL seq.
-        An append failure poisons the handle (``ensure_ok``)."""
+    def log_delete(self, ids, *, sync: bool | None = None) -> int:
+        """Log one applied delete; returns its WAL seq (``sync`` as in
+        ``log_insert``).  An append failure poisons the handle
+        (``ensure_ok``)."""
         try:
-            return self.wal.append_delete(ids)
+            return self.wal.append_delete(ids, sync=sync)
+        except BaseException:
+            self.failed = True
+            raise
+
+    def sync(self, seq: int) -> None:
+        """Make the record at ``seq`` durable (group commit: a no-op when a
+        shared fsync already covered it — see ``MutationWAL.sync_to``).
+        The mutation is acked only after this returns; a failed fsync
+        poisons the handle like a failed append."""
+        try:
+            self.wal.sync_to(seq)
         except BaseException:
             self.failed = True
             raise
@@ -130,6 +146,22 @@ class Durability:
         path = write_snapshot(self.root, index,
                               replay_from_seq=replay_from,
                               keep_last=keep_last)
+        self.wal.truncate_before(replay_from)
+        return path
+
+    def delta_checkpoint(self, index, *, keep_last: int = 2) -> str:
+        """Cut a DELTA-STATE snapshot of a LIVE mutable index — delta rows,
+        alive flags and tombstones included (DESIGN.md §7.6) — so recovery
+        under sustained ingest is snapshot-load + a short WAL tail instead
+        of replaying every mutation since the last compaction.  Same
+        rotate/commit/truncate protocol as ``checkpoint`` (and the same
+        §7.4 crash windows); the rotation fsyncs the sealed segment, so
+        every record the snapshot folds in is already durable.  Returns
+        the snapshot directory."""
+        replay_from = self.wal.rotate()
+        path = write_snapshot(self.root, index,
+                              replay_from_seq=replay_from,
+                              keep_last=keep_last, delta_state=True)
         self.wal.truncate_before(replay_from)
         return path
 

@@ -8,10 +8,15 @@ half the bytes on disk too), codebooks, the frozen residual grid, padded
 posting lists, the tile head — plus the host-side artifacts search needs
 (``pi``, the compact column space) and the retained corpus that makes the
 generation MUTABLE again after a restart (``MutableState``'s initial rows
-+ external ids + the auto-id counter).  Mutations are deliberately NOT part
++ external ids + the auto-id counter).  By default mutations are NOT part
 of a snapshot; they live in the WAL and are replayed through the normal
-streaming machinery on recovery, so a snapshot is only ever taken at a
-build/compaction point where the delta is empty (``version == 0``).
+streaming machinery on recovery, so a plain snapshot is only taken at a
+build/compaction point where the delta is empty (``version == 0``).  A
+DELTA-STATE snapshot (``delta_state=True``; DESIGN.md §7.6) additionally
+serializes the appended rows in insertion order plus the alive flags, and
+load replays them through the same insert/delete machinery — recovery
+under sustained ingest becomes snapshot + short WAL tail without waiting
+for a compaction.
 
 On-disk layout (all under one store root)::
 
@@ -111,25 +116,54 @@ def _index_leaves(index) -> dict[str, np.ndarray]:
     return leaves
 
 
+def _delta_leaves(st) -> dict[str, np.ndarray]:
+    """Extra leaves of a DELTA-STATE snapshot (DESIGN.md §7.6): every
+    appended row in INSERTION order (CSR parts + dense + external ids) plus
+    the alive flags of both tiers.  Load replays the rows one by one
+    through the normal ``MutableState.insert`` machinery — upsert kill
+    chains included — then applies the flags as deletes, so the rebuilt
+    delta shard / tombstone set is bit-identical to the one serialized."""
+    if st.extra_sparse:
+        xse = sp.vstack(st.extra_sparse, format="csr")
+        xde = np.stack(st.extra_dense).astype(np.float32)
+    else:
+        xse = sp.csr_matrix((0, st.x_sparse0.shape[1]), dtype=np.float32)
+        xde = np.zeros((0, st.x_dense0.shape[1]), np.float32)
+    return {
+        "extra_data": xse.data,
+        "extra_indices": xse.indices,
+        "extra_indptr": xse.indptr,
+        "extra_dense": xde,
+        "extra_ids": np.asarray(st.extra_ids, np.int64),
+        "extra_alive": np.asarray(st.extra_alive, np.uint8),
+        "alive0": st.alive0.astype(np.uint8),
+    }
+
+
 def write_snapshot(root: str, index, *, replay_from_seq: int,
-                   keep_last: int = 2) -> str:
-    """Serialize a pristine mutable generation; atomic commit; returns the
-    committed snapshot directory.
+                   keep_last: int = 2, delta_state: bool = False) -> str:
+    """Serialize a mutable generation; atomic commit; returns the committed
+    snapshot directory.
 
     ``replay_from_seq`` is the WAL sequence number recovery resumes from —
     every mutation below it is already folded into this snapshot's rows.
     ``keep_last`` older snapshots are garbage-collected after the commit.
-    Raises ``ValueError`` on a non-pristine index (pending delta rows or
-    tombstones — compact first; a snapshot is a compaction output)."""
+    By default raises ``ValueError`` on a non-pristine index (pending delta
+    rows or tombstones — compact first; a plain snapshot is a compaction
+    output).  ``delta_state=True`` lifts that: the pending delta rows and
+    alive flags are serialized too (DESIGN.md §7.6) and load replays them,
+    so a LIVE index under ingest can checkpoint without compacting."""
     st = index.mutable_state
     if st is None:
         raise ValueError("snapshots need a mutable index "
                          "(HybridIndex.build(..., mutable=True))")
-    if st.version != 0 or st.delta.count or st.main_tombstones:
+    if not delta_state and (st.version != 0 or st.delta.count
+                            or st.main_tombstones):
         raise ValueError(
             "snapshot requires a pristine generation (no pending delta rows "
             "or tombstones): compact() first — a snapshot is by definition "
-            "a build/compaction output, mutations belong to the WAL")
+            "a build/compaction output, mutations belong to the WAL "
+            "(or pass delta_state=True to checkpoint the live state)")
     os.makedirs(root, exist_ok=True)
     _sweep_tmp(root)
     # max+1, not count+1: GC shrinks the list, and a recycled name would
@@ -141,8 +175,11 @@ def write_snapshot(root: str, index, *, replay_from_seq: int,
     final = os.path.join(root, name)
     os.makedirs(tmp)
     try:
+        leaves = _index_leaves(index)
+        if delta_state:
+            leaves.update(_delta_leaves(st))
         table = {k: write_array_blob(os.path.join(tmp, f"{k}.bin"), v)
-                 for k, v in _index_leaves(index).items()}
+                 for k, v in leaves.items()}
         manifest = {
             "format": FORMAT_VERSION,
             "replay_from_seq": int(replay_from_seq),
@@ -155,6 +192,7 @@ def write_snapshot(root: str, index, *, replay_from_seq: int,
                 "backend": index.engine.backend.value,
                 "next_id": int(st.next_id),
                 "delta_capacity": int(st.delta.capacity),
+                "delta_state": bool(delta_state),
                 "corpus_shape": list(st.x_sparse0.shape),
                 "head": (None if index.head is None else
                          {"block_rows": index.head.block_rows,
@@ -268,11 +306,31 @@ def load_snapshot(root: str, *, snapshot: str | None = None,
     xs0 = sp.csr_matrix(
         (leaf("corpus_data"), leaf("corpus_indices"), leaf("corpus_indptr")),
         shape=tuple(sc["corpus_shape"]))
-    idx.mutable_state = MutableState(
+    ms = MutableState(
         idx, xs0, leaf("corpus_dense"), ext_ids=leaf("ids_built"),
         # restore the pre-sized delta capacity: replaying a long WAL tail
         # into the default would re-pay every growth re-materialization
         delta_capacity=int(sc.get("delta_capacity", 64)))
-    idx.mutable_state.next_id = max(idx.mutable_state.next_id,
-                                    int(sc["next_id"]))
+    idx.mutable_state = ms
+    if sc.get("delta_state"):
+        # DELTA-STATE snapshot (DESIGN.md §7.6): replay the serialized
+        # appended rows one by one through the NORMAL insert path — same
+        # order, same ids, so every upsert kill chain, capacity doubling
+        # and posting append happens exactly as it did live — then apply
+        # the stored alive flags as deletes.  Bit-identical final state.
+        eids = leaf("extra_ids")
+        ealive = leaf("extra_alive").astype(bool)
+        alive0 = leaf("alive0").astype(bool)
+        xse = sp.csr_matrix(
+            (leaf("extra_data"), leaf("extra_indices"),
+             leaf("extra_indptr")),
+            shape=(len(eids), int(sc["corpus_shape"][1])))
+        xde = leaf("extra_dense")
+        for j in range(len(eids)):
+            ms.insert(xse[j], xde[j:j + 1], ids=eids[j:j + 1])
+        dead = [e for e, (kind, i) in ms._loc.items()
+                if not (alive0[i] if kind == "init" else ealive[i])]
+        if dead:
+            ms.delete(sorted(dead))
+    ms.next_id = max(ms.next_id, int(sc["next_id"]))
     return idx, manifest

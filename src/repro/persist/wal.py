@@ -42,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import threading
 import zlib
 
 import numpy as np
@@ -136,13 +137,26 @@ class MutationWAL:
     Opening an existing directory scans the ACTIVE (last) segment — the
     only one a crash can tear — truncates any torn tail, and resumes the
     sequence counter after its last complete record, so
-    append-after-recovery continues the same log.  All appends go through
-    one file handle; callers serialize (the service holds its mutation
-    lock)."""
+    append-after-recovery continues the same log.
+
+    Durability is GROUP COMMIT (DESIGN.md §7.6): ``append`` frames and
+    flushes the record under the internal append lock and returns its
+    sequence number; the ack is ``sync_to(seq)``, which fsyncs AT MOST
+    once for every batch of writes that raced in before it — one disk
+    sync covers (and acks) all of them.  ``append(..., sync=True)`` /
+    the default ``sync=None`` with ``self.sync`` keep the old
+    one-call-one-ack behavior on top of the shared machinery, and
+    ``append_many`` amortizes framing + flush + fsync over a whole batch
+    explicitly."""
 
     def __init__(self, wal_dir: str, *, sync: bool = True):
         self.wal_dir = wal_dir
         self.sync = sync
+        # _append_lock orders frame bytes + next_seq; _sync_lock serializes
+        # fsyncs and guards _synced_seq.  Lock order: _sync_lock BEFORE
+        # _append_lock (sync_to, rotate); append takes only _append_lock.
+        self._append_lock = threading.Lock()
+        self._sync_lock = threading.Lock()
         os.makedirs(wal_dir, exist_ok=True)
         self._segments = sorted(
             s for s in (_segment_first_seq(n) for n in os.listdir(wal_dir))
@@ -168,49 +182,108 @@ class MutationWAL:
             self.next_seq = (records[-1].seq + 1 if records
                              else self._segments[-1])
             self._file = open(active, "ab")
+        # nothing is pending at open: everything on disk counts as synced
+        self._synced_seq = self.next_seq - 1
 
     # -- append -----------------------------------------------------------
 
-    def append(self, kind: int, arrays: dict) -> int:
-        """Frame + append one record; durable (flushed, fsync'd when
-        ``sync``) before returning.  Returns the record's sequence number."""
+    def _write_frame(self, kind: int, arrays: dict) -> int:
+        """Frame + buffer one record (caller holds ``_append_lock``);
+        returns its sequence number.  No flush — the caller batches."""
         seq = self.next_seq
         payload = pack_arrays(arrays)
         frame = _HEADER.pack(_MAGIC, kind, seq, len(payload),
                              _frame_crc(kind, seq, payload)) + payload
         self._file.write(frame)
-        self._file.flush()
-        if self.sync:
-            os.fsync(self._file.fileno())
         self.next_seq = seq + 1
         return seq
 
-    def append_insert(self, x_sparse, x_dense, ids) -> int:
+    def append(self, kind: int, arrays: dict, *, sync: bool | None = None) -> int:
+        """Frame + append one record (flushed to the OS before returning)
+        and return its sequence number.  ``sync=None`` (default) fsyncs per
+        ``self.sync`` — the one-call-one-ack form; ``sync=False`` defers
+        the disk sync to a later ``sync_to`` (group commit: the caller
+        acks only after some fsync covers this sequence number)."""
+        with self._append_lock:
+            seq = self._write_frame(kind, arrays)
+            self._file.flush()
+        if self.sync if sync is None else sync:
+            self.sync_to(seq)
+        return seq
+
+    def append_many(self, entries: list[tuple[int, dict]]) -> list[int]:
+        """Append a batch of ``(kind, arrays)`` records under ONE lock hold,
+        one flush, and (when ``self.sync``) one shared fsync — the explicit
+        group-commit form benchmarks use to measure the amortization.
+        Returns the assigned sequence numbers."""
+        if not entries:
+            return []
+        with self._append_lock:
+            seqs = [self._write_frame(kind, arrays)
+                    for kind, arrays in entries]
+            self._file.flush()
+        self.sync_to(seqs[-1])
+        return seqs
+
+    def sync_to(self, seq: int) -> None:
+        """Make every record up to (at least) ``seq`` durable: no-op if a
+        previous group fsync already covered it, otherwise ONE fsync that
+        covers every record flushed so far — concurrent callers piggyback
+        on it instead of queueing their own (DESIGN.md §7.6).  No-op when
+        the log was opened with ``sync=False``."""
+        if not self.sync:
+            return
+        with self._sync_lock:
+            if self._synced_seq >= seq:
+                return                   # a shared fsync already covered it
+            with self._append_lock:
+                # everything flushed so far lands in this fsync; holding
+                # _sync_lock keeps rotate() from closing the handle under us
+                target = self.next_seq - 1
+                fileno = self._file.fileno()
+            os.fsync(fileno)
+            self._synced_seq = max(self._synced_seq, target)
+
+    def append_insert(self, x_sparse, x_dense, ids, *,
+                      sync: bool | None = None) -> int:
         """Log one normalized insert batch (CSR parts + dense + ids)."""
         xs = x_sparse.tocsr()
         return self.append(RECORD_INSERT, {
             "data": xs.data, "indices": xs.indices, "indptr": xs.indptr,
             "shape": np.asarray(xs.shape, np.int64),
             "dense": np.asarray(x_dense, np.float32),
-            "ids": np.asarray(ids, np.int64)})
+            "ids": np.asarray(ids, np.int64)}, sync=sync)
 
-    def append_delete(self, ids) -> int:
+    def append_delete(self, ids, *, sync: bool | None = None) -> int:
         """Log one delete (the requested external ids, live or not —
         replaying a no-op delete is itself a no-op)."""
         return self.append(RECORD_DELETE,
-                           {"ids": np.atleast_1d(np.asarray(ids, np.int64))})
+                           {"ids": np.atleast_1d(np.asarray(ids, np.int64))},
+                           sync=sync)
 
     # -- segmentation -----------------------------------------------------
 
     def rotate(self) -> int:
         """Close the active segment and start a new one at ``next_seq`` —
         the snapshot/compaction cut point.  Returns the new segment's first
-        sequence number (the snapshot's ``replay_from_seq``)."""
-        self._file.close()
-        first = self.next_seq
-        self._segments.append(first)
-        self._file = open(_segment_path(self.wal_dir, first), "ab")
-        fsync_dir(self.wal_dir)
+        sequence number (the snapshot's ``replay_from_seq``).
+
+        Takes BOTH locks (sync before append, the global order): the old
+        segment is fsync'd before it is sealed — a flushed-but-unsynced
+        group-commit record must not end up in a closed file no
+        ``sync_to`` can reach — and an in-flight ``sync_to`` can never see
+        the handle close under its fsync."""
+        with self._sync_lock:
+            with self._append_lock:
+                self._file.flush()
+                if self.sync:
+                    os.fsync(self._file.fileno())
+                self._file.close()
+                first = self.next_seq
+                self._segments.append(first)
+                self._file = open(_segment_path(self.wal_dir, first), "ab")
+                self._synced_seq = first - 1
+            fsync_dir(self.wal_dir)
         return first
 
     def truncate_before(self, seq: int) -> int:
@@ -251,7 +324,12 @@ class MutationWAL:
         return [_segment_path(self.wal_dir, s) for s in self._segments]
 
     def close(self) -> None:
-        """Flush and close the append handle (idempotent)."""
-        if not self._file.closed:
-            self._file.flush()
-            self._file.close()
+        """Flush (and, in sync mode, fsync — deferred group-commit records
+        must not die with the handle) then close the append handle
+        (idempotent)."""
+        with self._sync_lock, self._append_lock:
+            if not self._file.closed:
+                self._file.flush()
+                if self.sync:
+                    os.fsync(self._file.fileno())
+                self._file.close()

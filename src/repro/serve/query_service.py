@@ -210,7 +210,24 @@ class QueryService:
     persist_sync:
         fsync each WAL append before acking (the default).  ``False`` trades
         the power-loss guarantee for append latency (process-crash safety
-        is retained — the bytes are flushed to the OS).
+        is retained — the bytes are flushed to the OS).  Acks use GROUP
+        COMMIT (DESIGN.md §7.6): records are framed + flushed under the
+        mutation lock, but the fsync happens outside it and is shared —
+        a mutation returns as soon as SOME fsync covers its sequence
+        number, so concurrent writers amortize one disk sync.
+    compact_retrain:
+        Compaction policy for this service's ``compact()`` calls (explicit
+        and background): ``False`` forces merge-compaction into the frozen
+        build artifacts, ``True`` forces the full batch rebuild, ``None``
+        (default) auto-routes per ``MutableState.compact`` (merge unless
+        out-of-column-space entries require a retrain).  A per-call
+        ``compact(retrain=…)`` overrides it.
+    delta_snapshot_records:
+        Cut a DELTA-STATE snapshot (DESIGN.md §7.6) + truncate the WAL
+        after every this-many logged mutations, bounding replay length
+        under sustained ingest without waiting for a compaction.  ``None``
+        (default) disables automatic checkpoints; ``checkpoint()`` is the
+        explicit form.
     """
 
     def __init__(self, engine: ScoringEngine | None = None, *,
@@ -225,7 +242,9 @@ class QueryService:
                  compact_ratio: float = 0.25,
                  persist_dir: str | None = None,
                  restore_from: str | None = None,
-                 persist_sync: bool = True):
+                 persist_sync: bool = True,
+                 compact_retrain: bool | None = None,
+                 delta_snapshot_records: int | None = None):
         self._durability = None
         self._recovery = None
         if restore_from is not None:
@@ -284,6 +303,9 @@ class QueryService:
         self._auto_compact = auto_compact
         self._compact_min_rows = compact_min_rows
         self._compact_ratio = compact_ratio
+        self._compact_retrain = compact_retrain
+        self._delta_snapshot_records = delta_snapshot_records
+        self._records_since_checkpoint = 0
         self._compactions = 0
         self._last_compaction_s: float | None = None
         self._compact_thread: threading.Thread | None = None
@@ -443,23 +465,32 @@ class QueryService:
         """Insert (or upsert) rows into the delta shard; they are searchable
         as soon as this returns (encoded against the frozen main-index
         artifacts — see core/streaming.py).  Returns the external ids.
-        On a durable service the batch is WAL-logged (fsync'd) before this
-        returns — apply-then-log, so a crash mid-call loses at most this
-        not-yet-acked batch (DESIGN.md §7.4).  If the append itself FAILS
-        (disk full), the exception propagates (the batch was never acked,
-        though it may stay visible until restart) and the durability handle
-        is poisoned: further mutations are refused so recoverable and
-        served state cannot silently diverge.
+        On a durable service the batch is WAL-logged and fsync-covered
+        before this returns — apply-then-log, so a crash mid-call loses at
+        most this not-yet-acked batch (DESIGN.md §7.4).  The fsync itself
+        is a GROUP COMMIT (§7.6): the record is framed + flushed under the
+        mutation lock, the sync happens outside it, and one disk sync acks
+        every record it covers — concurrent mutators share fsyncs instead
+        of queueing one each.  If the append itself FAILS (disk full), the
+        exception propagates (the batch was never acked, though it may
+        stay visible until restart) and the durability handle is poisoned:
+        further mutations are refused so recoverable and served state
+        cannot silently diverge.
         May trigger background compaction per the service's policy."""
         self._require_index()
+        seq = None
         with self._mut_lock:
             if self._durability is not None:
                 self._durability.ensure_ok()
             assigned = self._index.insert(x_sparse, x_dense, ids=ids)
             if self._durability is not None and len(assigned):
-                self._durability.log_insert(x_sparse, x_dense, assigned)
+                seq = self._durability.log_insert(x_sparse, x_dense,
+                                                  assigned, sync=False)
+                self._auto_checkpoint()
             self._install_view()
             due = self._auto_compact and self._compact_due()
+        if seq is not None:
+            self._durability.sync(seq)       # ack after the (shared) fsync
         if due:
             self._spawn_compaction()
         return assigned
@@ -468,24 +499,56 @@ class QueryService:
         """Tombstone rows by external id: delta slots die on device (-inf
         mask), main-generation rows at the host merge.  Searches dispatched
         after this returns never report the ids.  On a durable service the
-        delete is WAL-logged before this returns (no-op deletes are not
-        logged — nothing changed); a failed append poisons the durability
-        handle exactly like ``insert``.  Returns #rows killed."""
+        delete is WAL-logged and fsync-covered (group commit, §7.6) before
+        this returns (no-op deletes are not logged — nothing changed); a
+        failed append poisons the durability handle exactly like
+        ``insert``.  Returns #rows killed."""
         self._require_index()
+        seq = None
         with self._mut_lock:
             if self._durability is not None:
                 self._durability.ensure_ok()
             killed = self._index.delete(ids)
             if killed:
                 if self._durability is not None:
-                    self._durability.log_delete(ids)
+                    seq = self._durability.log_delete(ids, sync=False)
+                    self._auto_checkpoint()
                 self._install_view()
                 due = self._auto_compact and self._compact_due()
             else:
                 due = False
+        if seq is not None:
+            self._durability.sync(seq)       # ack after the (shared) fsync
         if due:
             self._spawn_compaction()
         return killed
+
+    def _auto_checkpoint(self) -> None:
+        """Count one logged mutation toward ``delta_snapshot_records`` and
+        cut a delta-state checkpoint when the threshold is hit (caller
+        holds ``_mut_lock``; the just-logged record is flushed, and the
+        checkpoint's rotation fsyncs it before sealing the segment)."""
+        self._records_since_checkpoint += 1
+        if (self._delta_snapshot_records is not None
+                and self._records_since_checkpoint
+                >= self._delta_snapshot_records):
+            self._durability.delta_checkpoint(self._index)
+            self._records_since_checkpoint = 0
+
+    def checkpoint(self) -> None:
+        """Cut a DELTA-STATE snapshot of the live mutable index (delta rows
+        and tombstones included, no compaction) and truncate the WAL behind
+        it (DESIGN.md §7.6): recovery becomes snapshot-load + small tail
+        replay even under sustained ingest.  ``delta_snapshot_records``
+        does this automatically every N mutations."""
+        self._require_index()
+        with self._mut_lock:
+            if self._durability is None:
+                raise ValueError("checkpoint() needs a durable service "
+                                 "(persist_dir= or restore_from=)")
+            self._durability.ensure_ok()
+            self._durability.delta_checkpoint(self._index)
+            self._records_since_checkpoint = 0
 
     def _compact_due(self) -> bool:
         st = self._index.mutable_state
@@ -521,24 +584,29 @@ class QueryService:
             import traceback
             traceback.print_exc()
 
-    def compact(self) -> int:
-        """Fold the delta + tombstones into a fresh batch build of the
-        surviving rows and swap it through the double-buffered refresh
-        (DESIGN.md §6.3).  Mutations are serialized with the rebuild
-        (they'd be lost otherwise); searches keep serving the old
-        generation + delta throughout and flip atomically at the swap, so
-        no result ever mixes the old delta with the new main.  On a durable
-        service the compacted generation is snapshotted and the WAL
-        truncated right after the swap (DESIGN.md §7.4 covers the crash
-        window between the two).  Returns the installed generation's
-        version."""
+    def compact(self, retrain: bool | None = None) -> int:
+        """Fold the delta + tombstones into a compacted index and swap it
+        through the double-buffered refresh (DESIGN.md §6.3).  The fold is
+        either a merge into the frozen build artifacts or a full batch
+        rebuild — ``retrain`` overrides the service's ``compact_retrain``
+        policy for this call (see ``MutableState.compact``).  Mutations are
+        serialized with the fold (they'd be lost otherwise); searches keep
+        serving the old generation + delta throughout and flip atomically
+        at the swap, so no result ever mixes the old delta with the new
+        main.  On a durable service the compacted generation is snapshotted
+        and the WAL truncated right after the swap (DESIGN.md §7.4 covers
+        the crash window between the two).  Returns the installed
+        generation's version."""
         self._require_index()
         t0 = time.perf_counter()
+        if retrain is None:
+            retrain = self._compact_retrain
         with self._mut_lock:
             st = self._index.mutable_state
             if st.delta.count == 0 and not st.main_tombstones:
                 return self.version              # nothing to fold
-            new_idx = self._index.compact()          # heavy; off serving lock
+            # heavy; off serving lock
+            new_idx = self._index.compact(retrain=retrain)
             new_state = new_idx.mutable_state
             engine = new_idx.engine
             with self._lock:
@@ -562,6 +630,7 @@ class QueryService:
                 # the mutation lock so no WAL record lands between the swap
                 # and the log rotation it anchors
                 self._durability.checkpoint(new_idx)
+                self._records_since_checkpoint = 0
             return out
 
     def search_sparse(self, q_sparse, q_dense, *, h: int | None = None,

@@ -3,6 +3,19 @@ import pytest
 import scipy.sparse as sp
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _reclaim_jit_maps():
+    """XLA:CPU keeps every compiled executable mmap'd for the life of the
+    process; one full-suite run accumulates enough of them (hundreds of
+    pallas-interpret compilations) to exhaust ``vm.max_map_count``, after
+    which the NEXT backend_compile segfaults.  Dropping the jit caches at
+    every module boundary unmaps retired executables and keeps the map
+    count bounded; cross-module recompiles are cheap next to the suite."""
+    yield
+    import jax
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def small_hybrid():
     """Shared small hybrid dataset with planted neighbors."""

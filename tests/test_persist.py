@@ -13,6 +13,12 @@ checksummed WAL (torn tails, crc corruption, rotation/truncation, reopen-
 after-crash) and the snapshot store (bit-exact leaf round trip, checksum
 verification, pristine-only rule, atomic commit leaving no litter on
 failure).
+
+Group commit + delta-state snapshots (DESIGN.md §7.6) extend the matrix:
+one shared fsync acks a whole batch of framed records (crash between batch
+fsyncs loses only unacked mutations, property-tested at arbitrary WAL
+byte-truncation points), and ``checkpoint()`` folds the LIVE delta into a
+snapshot so recovery under sustained ingest replays only a short tail.
 """
 
 import os
@@ -198,6 +204,107 @@ def test_wal_rotate_and_truncate_segments(tmp_path):
     wal.close()
 
 
+# -- WAL group commit (DESIGN.md §7.6) ----------------------------------------
+
+def test_wal_group_commit_defers_and_batches_fsync(tmp_path, monkeypatch):
+    """sync=False appends defer the disk sync; one ``sync_to`` then fsyncs
+    ONCE for the whole raced-in batch, later calls below the watermark are
+    no-ops, and ``append_many`` amortizes framing + flush + fsync the same
+    way — the shared-fsync ack path."""
+    import repro.persist.wal as wal_mod
+    calls = {"n": 0}
+    real_fsync = os.fsync
+
+    def counting_fsync(fd):
+        calls["n"] += 1
+        return real_fsync(fd)
+
+    monkeypatch.setattr(wal_mod.os, "fsync", counting_fsync)
+    wal = persist.MutationWAL(str(tmp_path / "wal"))
+    seqs = [wal.append_delete([i], sync=False) for i in range(5)]
+    assert seqs == [1, 2, 3, 4, 5]
+    assert calls["n"] == 0 and wal._synced_seq == 0    # nothing acked yet
+    wal.sync_to(seqs[-1])
+    assert calls["n"] == 1 and wal._synced_seq == 5    # one fsync, all acked
+    for s in seqs:
+        wal.sync_to(s)                                 # already covered
+    assert calls["n"] == 1
+    wal.sync_to(wal.append_delete([9], sync=False))
+    assert calls["n"] == 2 and wal._synced_seq == 6
+    got = wal.append_many([
+        (persist.RECORD_DELETE, {"ids": np.asarray([j], np.int64)})
+        for j in range(4)])
+    assert got == [7, 8, 9, 10]
+    assert calls["n"] == 3 and wal._synced_seq == 10
+    assert [r.seq for r in wal.records()] == list(range(1, 11))
+    wal.close()
+
+
+def test_wal_group_commit_rotate_seals_durably(tmp_path):
+    """A deferred (sync=False) record followed by ``rotate()`` lands
+    fsync'd INSIDE the sealed segment — sealing must never strand a
+    flushed-but-unsynced group-commit record in a file no later
+    ``sync_to`` can reach — and the sync watermark resets to the new
+    segment's base."""
+    wal = persist.MutationWAL(str(tmp_path / "wal"))
+    a = wal.append_delete([1], sync=False)
+    assert wal._synced_seq == 0
+    first = wal.rotate()
+    assert first == 2 and wal._synced_seq == 1         # sealed ⇒ durable
+    b = wal.append_delete([2], sync=False)
+    assert wal._synced_seq == 1
+    wal.sync_to(b)
+    assert wal._synced_seq == 2
+    assert [r.seq for r in wal.records()] == [a, b] == [1, 2]
+    wal.close()
+    reopened = persist.MutationWAL(str(tmp_path / "wal"))
+    assert reopened.next_seq == 3
+    assert [r.seq for r in reopened.records()] == [1, 2]
+    reopened.close()
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 9999))
+def test_group_commit_crash_matrix_truncation(seed):
+    """Group-commit batches, then a crash at ARBITRARY WAL byte offsets:
+    the surviving log is always a clean in-order record prefix, and every
+    batch whose shared fsync returned before the cut point — i.e. the
+    flushed size at ack time is below the cut — survives in full.  Acked
+    mutations are never lost; only records past the last covering fsync
+    can fall off."""
+    rng = np.random.default_rng(seed)
+    root = tempfile.mkdtemp(prefix="persist-gc-")
+    try:
+        wal = persist.MutationWAL(os.path.join(root, "wal"))
+        seg = wal.segment_paths[-1]
+        acked = []                  # (flushed bytes at ack, last acked seq)
+        for b in range(5):
+            entries = [(persist.RECORD_DELETE,
+                        {"ids": np.asarray([10 * b + j], np.int64)})
+                       for j in range(int(rng.integers(1, 5)))]
+            seqs = wal.append_many(entries)        # one shared fsync = ack
+            acked.append((os.path.getsize(seg), seqs[-1]))
+        wal.close()
+        full = open(seg, "rb").read()
+        assert acked[-1][0] == len(full)
+        cuts = sorted({0, len(full)}
+                      | {int(c) for c in rng.integers(0, len(full) + 1,
+                                                      size=12)}
+                      | {s for s, _ in acked})
+        for cut in cuts:
+            with open(seg, "wb") as f:
+                f.write(full[:cut])
+            got, valid, _ = _scan_segment(seg)
+            assert [g.seq for g in got] == list(range(1, len(got) + 1))
+            assert valid <= cut
+            for size_at_ack, last_seq in acked:
+                if cut >= size_at_ack:      # crash struck after this ack
+                    assert last_seq <= len(got), \
+                        f"acked seq {last_seq} lost at cut {cut}"
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 # -- snapshot store -----------------------------------------------------------
 
 @pytest.mark.parametrize("backend,k", [("ref", 4), ("pallas-packed", 3)])
@@ -321,18 +428,145 @@ def test_bootstrap_rejection_leaves_no_litter(tmp_path):
     assert persist.recover(root).replayed == 0
 
 
+# -- delta-state snapshots (DESIGN.md §7.6) -----------------------------------
+
+@pytest.mark.parametrize("backend,k", [("ref", 4), ("pallas-packed", 3)])
+def test_delta_snapshot_roundtrip_bit_identical(tmp_path, backend, k):
+    """A LIVE index — delta rows, an upsert, tombstones pending — round-
+    trips through a delta-state snapshot bit for bit (ids AND scores, delta
+    internals included), and the loaded index keeps serving mutations."""
+    ds = _cached_dataset(12)
+    idx = _build_mutable(ds, _params(backend, k))
+    new = idx.insert(ds.x_sparse[N0:N0 + 9], ds.x_dense[N0:N0 + 9])
+    idx.insert(ds.x_sparse[N0 + 9], ds.x_dense[N0 + 9],
+               ids=[int(new[2])])                       # upsert a delta row
+    assert idx.delete([3, int(new[0])]) == 2            # main + delta kill
+    root = str(tmp_path)
+    persist.write_snapshot(root, idx, replay_from_seq=1, delta_state=True)
+    loaded, manifest = persist.load_snapshot(root)
+    assert manifest["scalars"]["delta_state"]
+    st0, st1 = idx.mutable_state, loaded.mutable_state
+    assert st1.next_id == st0.next_id
+    assert st1.main_tombstones == st0.main_tombstones
+    assert list(st1.extra_ids) == list(st0.extra_ids)
+    assert list(st1.extra_alive) == list(st0.extra_alive)
+    assert st1.delta.count == st0.delta.count
+    assert st1.delta.dropped_nnz == st0.delta.dropped_nnz
+    ids0, s0 = _search(idx, ds)
+    ids1, s1 = _search(loaded, ds)
+    np.testing.assert_array_equal(ids1, ids0)
+    np.testing.assert_array_equal(s1, s0)
+    got = loaded.insert(ds.q_sparse[0] * 1e3, ds.q_dense[0])
+    assert loaded.search(ds.q_sparse, ds.q_dense, h=4).ids[0, 0] == got[0]
+
+
+def test_pristine_snapshot_still_refuses_live_state(tmp_path):
+    """The default (non-delta) write path keeps the pristine-only rule:
+    live deltas belong to checkpoint(), not compaction snapshots."""
+    ds = _cached_dataset(8)
+    idx = _build_mutable(ds, _params("ref", 4))
+    idx.insert(ds.q_sparse[0], ds.q_dense[0])
+    with pytest.raises(ValueError, match="delta_state=True"):
+        persist.write_snapshot(str(tmp_path), idx, replay_from_seq=1)
+
+
+def test_service_checkpoint_restores_with_short_tail(tmp_path):
+    """svc.checkpoint() cuts a delta-state snapshot mid-stream: a restore
+    replays ONLY the post-checkpoint WAL tail and is bit-identical to the
+    live pre-close state."""
+    ds = _cached_dataset(8)
+    idx = _build_mutable(ds, _params("ref", 4))
+    root = str(tmp_path / "store")
+    svc = QueryService(index=idx, h=8, cache_size=0, auto_compact=False,
+                       persist_dir=root)
+    svc.insert(ds.x_sparse[N0:N0 + 10], ds.x_dense[N0:N0 + 10])
+    svc.delete([1, 4])
+    svc.checkpoint()
+    assert persist.read_current(root)["snapshot"] == "snap-000002"
+    svc.insert(ds.x_sparse[N0 + 10:N0 + 13], ds.x_dense[N0 + 10:N0 + 13])
+    svc.delete([7])
+    s_live, i_live = svc.search_sparse(ds.q_sparse, ds.q_dense)
+    live_stats = svc.stats()
+    svc.close()
+
+    svc2 = QueryService(restore_from=root, h=8, cache_size=0,
+                        auto_compact=False)
+    stats = svc2.stats()
+    assert stats["recovered_replayed"] == 2             # only the tail
+    assert stats["delta_rows"] == live_stats["delta_rows"]
+    assert stats["deleted_pending"] == live_stats["deleted_pending"]
+    s_rec, i_rec = svc2.search_sparse(ds.q_sparse, ds.q_dense)
+    np.testing.assert_array_equal(i_rec, i_live)
+    np.testing.assert_array_equal(s_rec, s_live)
+    svc2.close()
+
+
+def test_service_checkpoint_requires_durability(tmp_path):
+    ds = _cached_dataset(8)
+    svc = QueryService(index=_build_mutable(ds, _params("ref", 4)), h=8,
+                       cache_size=0, auto_compact=False)
+    with pytest.raises(ValueError, match="durable service"):
+        svc.checkpoint()
+    svc.close()
+
+
+def test_service_auto_delta_checkpoint(tmp_path):
+    """delta_snapshot_records=3 cuts a checkpoint every third logged
+    mutation: after 7 mutations two auto-checkpoints exist and a restore
+    replays only the 1-record tail."""
+    ds = _cached_dataset(8)
+    idx = _build_mutable(ds, _params("ref", 4))
+    root = str(tmp_path / "store")
+    svc = QueryService(index=idx, h=8, cache_size=0, auto_compact=False,
+                       persist_dir=root, delta_snapshot_records=3)
+    for j in range(7):
+        svc.insert(ds.x_sparse[N0 + j], ds.x_dense[N0 + j])
+    assert persist.read_current(root)["snapshot"] == "snap-000003"
+    s_live, i_live = svc.search_sparse(ds.q_sparse, ds.q_dense)
+    svc.close()
+    svc2 = QueryService(restore_from=root, h=8, cache_size=0,
+                        auto_compact=False)
+    assert svc2.stats()["recovered_replayed"] == 1
+    s_rec, i_rec = svc2.search_sparse(ds.q_sparse, ds.q_dense)
+    np.testing.assert_array_equal(i_rec, i_live)
+    np.testing.assert_array_equal(s_rec, s_live)
+    svc2.close()
+
+
+def test_service_acks_only_after_shared_fsync(tmp_path):
+    """Every service mutation returns with its WAL record fsync-covered:
+    the sync watermark tracks the last assigned seq after each ack (the
+    group-commit ack-after-shared-fsync contract)."""
+    ds = _cached_dataset(8)
+    idx = _build_mutable(ds, _params("ref", 4))
+    svc = QueryService(index=idx, h=8, cache_size=0, auto_compact=False,
+                       persist_dir=str(tmp_path / "store"))
+    wal = svc._durability.wal
+    for j in range(3):
+        svc.insert(ds.x_sparse[N0 + j], ds.x_dense[N0 + j])
+        assert wal._synced_seq == wal.next_seq - 1
+    svc.delete([0])
+    assert wal._synced_seq == wal.next_seq - 1
+    svc.close()
+
+
 # -- crash-recovery property (the acceptance criterion) ----------------------
 
-def _run_durable_ops(svc, ds, rng, n_ops, compact_at=None):
+def _run_durable_ops(svc, ds, rng, n_ops, compact_at=None,
+                     checkpoint_at=None):
     """Random insert/upsert/delete interleaving through a durable service;
     returns the per-op records needed to rebuild any prefix by hand.
-    Ops AFTER the last compaction are returned separately (the WAL tail)."""
+    Ops AFTER the last compaction/checkpoint cut are returned separately
+    (the WAL tail)."""
     tail_ops = []
     live = list(svc._index.mutable_state.ids_built)
     pool = list(range(N0, N_POOL))
     for t in range(n_ops):
         if compact_at is not None and t == compact_at:
             svc.compact()
+            tail_ops = []
+        if checkpoint_at is not None and t == checkpoint_at:
+            svc.checkpoint()
             tail_ops = []
         if rng.random() < 0.62 or len(live) < 4:
             src = pool.pop(0)
@@ -358,7 +592,8 @@ def _apply_ops(index, ops):
             index.mutable_state.delete(op[1])
 
 
-def _check_crash_recovery(backend, k, d_dense, seed, compact_mid=False):
+def _check_crash_recovery(backend, k, d_dense, seed, compact_mid=False,
+                          checkpoint_mid=False):
     """Kill-and-recover at arbitrary WAL byte offsets == an index that
     applied exactly the complete records' mutations, bit for bit."""
     ds = _cached_dataset(d_dense)
@@ -370,8 +605,10 @@ def _check_crash_recovery(backend, k, d_dense, seed, compact_mid=False):
         svc = QueryService(index=idx, h=8, cache_size=0, auto_compact=False,
                            persist_dir=root)
         n_ops = 10
-        tail_ops = _run_durable_ops(svc, ds, rng, n_ops,
-                                    compact_at=5 if compact_mid else None)
+        tail_ops = _run_durable_ops(
+            svc, ds, rng, n_ops,
+            compact_at=5 if compact_mid else None,
+            checkpoint_at=5 if checkpoint_mid else None)
         ids_live, s_live = _search(svc._index, ds)
         svc.close()
 
@@ -464,6 +701,16 @@ def test_crash_recovery_with_mid_stream_compaction(seed):
     """Compaction mid-interleaving cuts a snapshot + truncates the WAL;
     crash recovery over the post-compaction tail stays bit-identical."""
     _check_crash_recovery("ref", 4, 8, seed, compact_mid=True)
+
+
+@settings(max_examples=1, deadline=None)
+@given(st.integers(0, 9999))
+def test_crash_recovery_with_delta_checkpoint(seed):
+    """A delta-state checkpoint mid-interleaving (live delta + tombstones
+    folded into the snapshot): crashes at arbitrary byte offsets in the
+    post-checkpoint tail recover bit-identically from the delta snapshot
+    plus the surviving records."""
+    _check_crash_recovery("ref", 4, 8, seed, checkpoint_mid=True)
 
 
 # -- durable service integration ----------------------------------------------

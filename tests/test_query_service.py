@@ -401,6 +401,99 @@ def test_mutation_under_load(mut_served):
     assert svc.stats()["compactions"] >= 1
 
 
+def test_service_merge_compact_preserves_results_and_resets_delta(mut_served):
+    """compact(retrain=False) folds the delta via MERGE compaction through
+    the same refresh() swap: dominant inserts stay served, deletes stay
+    gone, counters reset, the frozen codebooks carry over unchanged, and
+    the retired generation's own buffers are donated while the leaves the
+    merged generation shares (codebooks, scalar grid) survive."""
+    ds, idx = mut_served
+    svc = QueryService(index=idx, h=5, cache_size=16, auto_compact=False)
+    new = svc.insert(ds.q_sparse[:2] * 1e3, ds.q_dense[:2])
+    svc.delete([5, 6])
+    old_arrays = idx.engine.arrays
+    old_codebooks = idx.codebooks
+    v = svc.compact(retrain=False)
+    assert v == svc.version > 0
+    st = svc.stats()
+    assert st["compactions"] == 1
+    assert st["delta_rows"] == 0 and st["deleted_pending"] == 0
+    assert svc._index.codebooks is old_codebooks   # frozen artifacts kept
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense)
+    assert ids[0, 0] == new[0] and ids[1, 0] == new[1]
+    assert 5 not in ids and 6 not in ids
+    assert old_arrays.codes.is_deleted()           # retired gen donated...
+    assert not old_arrays.codebooks.centers.is_deleted()   # ...shared kept
+    svc.close()
+
+
+def test_mutation_under_load_with_merge_compaction(mut_served):
+    """Stress (mirrors test_mutation_under_load, merge policy): threaded
+    searches racing insert()/delete()/background MERGE compaction
+    (compact_retrain=False) must never observe a tombstoned id (deleted
+    before the search started), a duplicate id within one result row, or a
+    non-monotone score row (the mixed-generation smell) — and the folds
+    that happened must really have taken the merge path (frozen codebooks
+    identical across every generation swap)."""
+    ds, idx = mut_served
+    codebooks0 = idx.codebooks
+    svc = QueryService(index=idx, h=10, cache_size=0, auto_compact=True,
+                       compact_min_rows=20, compact_ratio=0.0,
+                       compact_retrain=False)
+    deleted_log: set[int] = set()
+    log_lock = threading.Lock()
+    stop = threading.Event()
+    failures: list[str] = []
+
+    def searcher():
+        qi = 0
+        while not stop.is_set():
+            with log_lock:
+                dead_before = set(deleted_log)
+            s, ids = svc.search_sparse(ds.q_sparse[qi % 8: qi % 8 + 1],
+                                       ds.q_dense[qi % 8: qi % 8 + 1])
+            qi += 1
+            row = ids[0]
+            real = row[row >= 0]
+            if len(set(real)) != len(real):
+                failures.append(f"duplicate ids: {row}")
+            if set(int(e) for e in real) & dead_before:
+                failures.append(f"tombstoned id served: {row}")
+            srow = s[0][np.isfinite(s[0])]
+            if np.any(np.diff(srow) > 1e-4):
+                failures.append(f"non-monotone scores: {s[0]}")
+
+    threads = [threading.Thread(target=searcher) for _ in range(3)]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(7)
+    known = list(range(800))
+    try:
+        for i in range(30):
+            src = int(rng.integers(0, 800))
+            new = svc.insert(ds.x_sparse[src], ds.x_dense[src])
+            known.append(int(new[0]))
+            if i % 4 == 3 and known:
+                victim = known.pop(int(rng.integers(0, len(known))))
+                if svc.delete([victim]):
+                    with log_lock:
+                        deleted_log.add(victim)
+            time.sleep(0.01)
+        svc.compact()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        svc.close()
+    assert not failures, failures[:5]
+    # post-quiesce: tombstones stay gone, folds happened, and every one of
+    # them was a merge — the original codebooks object is still serving
+    s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense, h=20)
+    assert not (set(np.asarray(ids).ravel()) & deleted_log)
+    assert svc.stats()["compactions"] >= 1
+    assert svc._index.codebooks is codebooks0
+
+
 def test_refresh_version_invalidates_cache(small_hybrid):
     """Cache keys include the generation: a warm query re-executes (miss)
     after refresh instead of serving the old index's result."""

@@ -16,6 +16,7 @@ resurrected tombstones would show up here even if bit-level parity tests
 were ever loosened.
 """
 
+import dataclasses
 import shutil
 
 import numpy as np
@@ -71,11 +72,11 @@ def test_delta_present_recall_floor(streamed, exact_topk):
 
 
 def test_post_compaction_recall_floor(streamed, exact_topk):
-    """Compaction folds the delta into a fresh batch build; recall returns
-    to (at least) the fresh-build floor."""
+    """Rebuild compaction folds the delta into a fresh batch build; recall
+    returns to (at least) the fresh-build floor."""
     ds, idx = streamed
     _, exact_ids = exact_topk
-    idx2 = idx.compact()
+    idx2 = idx.compact(retrain=True)
     assert idx2.mutable_state.delta.live_count == 0
     r = idx2.search(ds.q_sparse, ds.q_dense, h=H)
     assert _recall(r.ids, exact_ids) >= FLOOR_POST_COMPACTION
@@ -120,12 +121,43 @@ def test_recovered_post_compaction_recall_floor(durable_streamed, exact_topk,
     shutil.copytree(root, copy)
     svc = QueryService(restore_from=copy, h=H, cache_size=0,
                        auto_compact=False)
-    svc.compact()
+    svc.compact(retrain=True)
     svc.close()
     idx = HybridIndex.load(copy)
     assert idx.mutable_state.delta.live_count == 0
     r = idx.search(ds.q_sparse, ds.q_dense, h=H)
     assert _recall(r.ids, exact_ids) >= FLOOR_POST_COMPACTION
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas-packed"])
+def test_merge_compaction_recall_drift(small_hybrid, exact_topk, backend):
+    """Recall@20 must hold the delta-present floor after ≥5 CONSECUTIVE
+    merge-compaction cycles with NO codebook retraining (DESIGN.md §6.2):
+    each cycle deletes a slice of rows, re-inserts the same content under
+    the same ids (so the logical corpus — and the cached exact top-20 —
+    never changes), and folds with compact(retrain=False).  By the last
+    cycle every streamed row has been re-encoded against the original
+    frozen codebooks, the worst-case drift the merge policy allows."""
+    ds = small_hybrid
+    _, exact_ids = exact_topk
+    params = dataclasses.replace(PARAMS, backend=backend)
+    idx = HybridIndex.build(ds.x_sparse, ds.x_dense, params, mutable=True)
+    codebooks0 = idx.codebooks
+    cycles = 5
+    per = N_STREAM // cycles
+    n0 = ds.num_points - N_STREAM
+    for c in range(cycles):
+        lo = n0 + c * per
+        churn = list(range(lo, lo + per))
+        assert idx.delete(churn) == per
+        idx.insert(ds.x_sparse[lo:lo + per], ds.x_dense[lo:lo + per],
+                   ids=churn)
+        idx = idx.compact(retrain=False)
+        assert idx.codebooks is codebooks0        # really the merge path
+        assert idx.mutable_state.delta.live_count == 0
+        r = idx.search(ds.q_sparse, ds.q_dense, h=H)
+        rec = _recall(r.ids, exact_ids)
+        assert rec >= FLOOR_DELTA, f"cycle {c}: recall {rec}"
 
 
 def test_packed_delta_recall_floor(small_hybrid, exact_topk):
