@@ -1,0 +1,163 @@
+"""Cluster serving benchmark (DESIGN.md §8): router fan-out QPS vs the
+in-process service, the per-hop latency breakdown, and replica catch-up
+rate over WAL shipping.
+
+Spawns a REAL local cluster (subprocess shard servers on loopback — the
+same harness the fault tests use), then measures:
+
+* router QPS at batch sizes Q ∈ {1, 8, 32} against the in-process
+  ``QueryService`` on the same built index (the cost of crossing a
+  socket, paid per batch);
+* the router's per-hop breakdown {serialize, wire, score, merge} from its
+  ``hop_s`` counters, normalized per query;
+* replica catch-up: shipping paused, a burst of mutations logged at the
+  primary, shipping resumed — applied records per second until the
+  replica reaches the primary's exact seq.
+
+Emits CSV rows like the other benchmark modules AND writes
+``BENCH_cluster.json`` (README "Cluster" schema):
+
+    workload              points/dims/scorers of the spawned cluster
+    qps                   per Q: {router_qps, inproc_qps, rpc_overhead_x}
+    hops                  {serialize_us, wire_us, score_us, merge_us} per
+                          query, plus the raw totals
+    replication           {burst_records, catchup_s, catchup_records_per_s}
+    equivalence_checked   true — one bitwise ids+scores parity assertion
+                          between router and in-process results ran inside
+                          the bench (a benchmark of the WRONG answer is
+                          worthless)
+    smoke                 true when run with --smoke (CI scale)
+
+Run:  PYTHONPATH=src python -m benchmarks.cluster_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.data import make_hybrid_dataset
+from repro.serve import QueryService
+from repro.serve.cluster import LocalCluster, ShardClient, wait_ready
+
+from .common import emit
+
+OUT_JSON = "BENCH_cluster.json"
+H = 10
+BATCHES = (1, 8, 32)
+
+
+def _sub(ds, q):
+    """First ``q`` queries of the dataset (router and service both
+    bucket-pad, so parity holds at any batch size)."""
+    return ds.q_sparse[:q], ds.q_dense[:q]
+
+
+def main(smoke: bool = False):
+    """Run the cluster benches; prints CSV rows, writes BENCH_cluster.json,
+    and tears the subprocess cluster + temp stores down on ANY exit."""
+    n, d_s, nnz, burst = ((384, 960, 12, 48) if smoke
+                          else (4000, 6000, 24, 200))
+    iters = 4 if smoke else 16
+    ds = make_hybrid_dataset(num_points=n + burst, num_queries=max(BATCHES),
+                             d_sparse=d_s, d_dense=32, nnz_per_row=nnz,
+                             seed=7)
+    params = HybridIndexParams(keep_top=24, head_dims=16, kmeans_iters=2)
+    tmp = tempfile.mkdtemp(prefix="cluster-bench-")
+    out: dict = {"workload": {"num_points": n, "d_sparse": d_s,
+                              "d_dense": 32, "num_scorers": 2, "h": H},
+                 "qps": {}, "smoke": smoke}
+    try:
+        idx = HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n], params,
+                                mutable=True)
+        comp = QueryService(
+            index=HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n],
+                                    params, mutable=True),
+            h=H, cache_size=0, auto_compact=False)
+        with LocalCluster.launch(idx, tmp, num_scorers=2,
+                                 num_replicas=1) as cluster:
+            router = cluster.router(h=H)
+
+            # -- equivalence gate: a fast wrong answer is no answer -------
+            qs, qd = _sub(ds, max(BATCHES))
+            s_r, i_r = router.search_sparse(qs, qd)
+            s_c, i_c = comp.search_sparse(qs, qd)
+            np.testing.assert_array_equal(i_r, i_c)
+            np.testing.assert_array_equal(s_r, s_c)
+            out["equivalence_checked"] = True
+
+            # -- QPS: router fan-out vs in-process, per batch size --------
+            for q in BATCHES:
+                qs, qd = _sub(ds, q)
+                router.search_sparse(qs, qd)        # warm both paths
+                comp.search_sparse(qs, qd)
+                for k in router.hop_s:              # hops: measured runs
+                    router.hop_s[k] = 0.0
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    router.search_sparse(qs, qd)
+                router_s = (time.perf_counter() - t0) / iters
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    comp.search_sparse(qs, qd)
+                inproc_s = (time.perf_counter() - t0) / iters
+                router_qps = q / router_s
+                inproc_qps = q / inproc_s
+                out["qps"][str(q)] = {
+                    "router_qps": router_qps, "inproc_qps": inproc_qps,
+                    "rpc_overhead_x": router_s / inproc_s}
+                emit(f"cluster_router_q{q}", router_s * 1e6,
+                     f"router_qps={router_qps:.1f};"
+                     f"inproc_qps={inproc_qps:.1f};"
+                     f"overhead={router_s / inproc_s:.2f}x")
+
+            # per-hop breakdown of the LAST batch-size loop, per query
+            nq = max(BATCHES) * iters
+            out["hops"] = {
+                **{f"{k}_us": v / nq * 1e6 for k, v in router.hop_s.items()},
+                "totals_s": dict(router.hop_s)}
+            emit("cluster_hops", sum(router.hop_s.values()) / nq * 1e6,
+                 ";".join(f"{k}={v / nq * 1e6:.0f}us"
+                          for k, v in router.hop_s.items()))
+
+            # -- replica catch-up rate over WAL shipping ------------------
+            repl = ShardClient("127.0.0.1", cluster.replicas[0].port)
+            repl.call("fault", {"mode": "pause_shipping"})
+            for j in range(burst):
+                router.insert(ds.x_sparse[n + j], ds.x_dense[n + j])
+            repl.call("fault", {"mode": "resume_shipping"})
+            t0 = time.perf_counter()
+            while True:
+                st = wait_ready(repl)
+                if st["applied_seq"] >= router._last_seq:
+                    break
+                time.sleep(0.01)
+            catchup_s = time.perf_counter() - t0
+            repl.close()
+            rate = burst / catchup_s
+            out["replication"] = {"burst_records": burst,
+                                  "catchup_s": catchup_s,
+                                  "catchup_records_per_s": rate}
+            emit("cluster_replica_catchup", catchup_s * 1e6,
+                 f"records={burst};records_per_s={rate:.1f}")
+            router.close()
+        comp.close()
+        with open(OUT_JSON, "w") as f:
+            json.dump(out, f, indent=2)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: small corpus, fewer iterations")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

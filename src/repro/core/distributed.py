@@ -55,9 +55,10 @@ def ceil16(n: int) -> int:
     return -(-n // 16) * 16
 
 
-def merge_topk_host(parts, h: int, *, drop_ids=None):
+def merge_topk_host(parts, h: int, *, drop_ids=None, dedup_upserts=False):
     """Host-side top-h merge over per-engine candidate sets, the streaming
-    generalization of the serving fan-out merge (DESIGN.md §5.4, §6.2).
+    generalization of the serving fan-out merge (DESIGN.md §5.4, §6.2) and
+    the router-side merge of the cluster tier (DESIGN.md §8.2).
 
     parts: iterable of ``(scores (Q, k_i), ids (Q, k_i), filtered)`` — the
     per-engine top-k, already mapped to a COMMON (external) id space; the
@@ -65,6 +66,18 @@ def merge_topk_host(parts, h: int, *, drop_ids=None):
     ``filtered=True`` parts drop candidates whose id is in ``drop_ids``
     (main-generation tombstones); the delta part passes False so an
     upserted row's new copy survives while its superseded main copy dies.
+    ``filtered`` may also be an explicit array of ids to drop from THAT
+    part only — the per-shard tombstone view the cluster router needs:
+    ``drop_ids`` alone assumes every part shares one tombstone view, which
+    a lagging replica does not (its own view is stale, so the MERGE must
+    apply the caller's authoritative set, per part, DESIGN.md §8.4).
+
+    ``dedup_upserts=True`` additionally drops, from every filtered part,
+    any id that appears with a finite score in an unfiltered (delta) part:
+    a live delta copy proves every main copy of that id is tombstoned
+    (upsert kills before it appends), so the rule is exact — it only
+    matters across a transport, where the main and delta parts cannot pin
+    one atomic view the way the in-process fan-out does.
 
     Stable descending sort over parts concatenated in caller order, so ties
     break exactly like ``lax.top_k`` on the unsharded array when parts are
@@ -74,12 +87,25 @@ def merge_topk_host(parts, h: int, *, drop_ids=None):
     """
     drop = np.asarray(sorted(drop_ids), np.int64) \
         if drop_ids else np.empty(0, np.int64)
+    parts = [(np.asarray(s, np.float32), np.asarray(ids, np.int64), f)
+             for s, ids, f in parts]
+    delta_live = np.empty(0, np.int64)
+    if dedup_upserts:
+        live = [ids[np.isfinite(s)] for s, ids, f in parts
+                if isinstance(f, bool) and not f]
+        if live:
+            delta_live = np.unique(np.concatenate([v.ravel() for v in live]))
     ss, ii = [], []
     for s, ids, filtered in parts:
-        s = np.asarray(s, np.float32)
-        ids = np.asarray(ids, np.int64)
-        if filtered and drop.size:
-            s = np.where(np.isin(ids, drop), -np.inf, s)
+        if isinstance(filtered, bool):
+            part_drop = drop if filtered else np.empty(0, np.int64)
+        else:                      # explicit per-part tombstone view
+            part_drop = np.asarray(sorted(filtered), np.int64)
+            filtered = True
+        if filtered and delta_live.size:
+            part_drop = np.union1d(part_drop, delta_live)
+        if part_drop.size:
+            s = np.where(np.isin(ids, part_drop), -np.inf, s)
         ss.append(s)
         ii.append(ids)
     ss = np.concatenate(ss, axis=1)
@@ -94,7 +120,8 @@ def merge_topk_host(parts, h: int, *, drop_ids=None):
     return s_out, np.where(np.isfinite(s_out), i_out, -1)
 
 
-def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
+def split_index_arrays(arrays: eng.IndexArrays, num_shards: int, *,
+                       ragged: bool = False
                        ) -> tuple[list[eng.IndexArrays], np.ndarray]:
     """Row-slice one ``IndexArrays`` into per-shard copies + row offsets.
 
@@ -112,15 +139,26 @@ def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
     ``head_pos``) are shared with the parent, not copied.
 
     Returns ``(shards, row_offsets)`` with ``row_offsets[s]`` the global row
-    id of shard ``s``'s first row.  Requires ``num_points % num_shards == 0``
-    (the same equal-rows contract as ``sharded_pass1_topk``).
+    id of shard ``s``'s first row.  By default requires
+    ``num_points % num_shards == 0`` (the same equal-rows contract as
+    ``sharded_pass1_topk``); ``ragged=True`` instead ceil-splits — the first
+    ``n % S`` shards get one extra row — which the cluster tier (DESIGN.md
+    §8.2) needs because a compacted corpus has an arbitrary survivor count.
+    Either way the shards are contiguous row slices in row order, so the
+    stable ``merge_topk_host`` over them is bit-identical to the unsharded
+    search.
     """
     n = arrays.num_points
-    if num_shards < 1 or n % num_shards:
+    if num_shards < 1 or (n % num_shards and not ragged) or num_shards > n:
         raise ValueError(
-            f"cannot split {n} rows into {num_shards} equal shards")
-    n_local = n // num_shards
-    offsets = np.arange(num_shards, dtype=np.int32) * n_local
+            f"cannot split {n} rows into {num_shards} equal shards"
+            + (" (pass ragged=True for a ceil-split)"
+               if ragged is False and num_shards <= n else ""))
+    base, rem = divmod(n, num_shards)
+    sizes = np.full(num_shards, base, np.int64)
+    sizes[:rem] += 1
+    bounds = np.concatenate([[0], np.cumsum(sizes)])
+    offsets = bounds[:-1].astype(np.int32)
 
     inv_rows = np.asarray(arrays.inv_index.rows)
     inv_vals = np.asarray(arrays.inv_index.vals)
@@ -135,7 +173,8 @@ def split_index_arrays(arrays: eng.IndexArrays, num_shards: int
 
     shards: list[eng.IndexArrays] = []
     for s in range(num_shards):
-        lo, hi = s * n_local, (s + 1) * n_local
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        n_local = hi - lo
         inside = (inv_rows >= lo) & (inv_rows < hi)
         inv_s = PaddedInvertedIndex(
             rows=jnp.asarray(

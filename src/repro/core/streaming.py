@@ -617,7 +617,8 @@ def plan_overfetch(engines, h: int, deleted) -> list[int]:
 
 def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
                   delta_ids, deleted, qd, qv, qe, *, h: int, alpha: int,
-                  beta: int, qn: int | None = None):
+                  beta: int, qn: int | None = None, executor=None,
+                  dedup_upserts: bool = False):
     """THE fan-out merge (DESIGN.md §6.2): dispatch every main engine plus
     the delta engine back-to-back (JAX async dispatch overlaps them — the
     in-process form of the paper's §7.2 RPC fan-out), assemble the per-
@@ -633,16 +634,39 @@ def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
     maps global row positions to external ids (None = identity);
     ``delta_engine`` fetches its whole capacity so tombstone-masked slots
     can never crowd out live ones, with ``delta_ids`` mapping slots to
-    external ids; ``qn`` trims bucket padding before the merge.  Returns
-    ``(scores, ids) (qn, h)`` numpy arrays.
+    external ids (``delta_ids=None`` when the delta engine already returns
+    EXTERNAL ids — the RPC delta part of the cluster tier); ``qn`` trims
+    bucket padding before the merge.  Engines are any ``ShardSearcher``
+    duck-type — ``.search(qd, qv, qe, h=, alpha=, beta=) -> (scores, ids)``
+    plus ``.num_points`` — so in-process ``ScoringEngine`` and the cluster
+    tier's RPC shard handles dispatch through the same code (DESIGN.md
+    §8.2).  ``executor`` (a ``concurrent.futures`` executor) runs the
+    dispatches concurrently — required for BLOCKING remote engines, where
+    back-to-back calls would serialize the network round-trips; the
+    in-process path leaves it None because JAX async dispatch already
+    overlaps device work.  ``dedup_upserts`` forwards to
+    ``merge_topk_host`` (see its docstring for the cross-transport upsert
+    race it closes).  Returns ``(scores, ids) (qn, h)`` numpy arrays.
     """
-    outs = [e.search(qd, qv, qe, h=hf, alpha=alpha, beta=beta)
-            for e, hf in zip(engines, h_fetch)]
-    delta_out = None
-    if delta_engine is not None:
-        delta_out = delta_engine.search(qd, qv, qe,
-                                        h=delta_engine.num_points,
-                                        alpha=alpha, beta=beta)
+    if executor is not None:
+        futs = [executor.submit(e.search, qd, qv, qe, h=hf,
+                                alpha=alpha, beta=beta)
+                for e, hf in zip(engines, h_fetch)]
+        dfut = None
+        if delta_engine is not None:
+            dfut = executor.submit(delta_engine.search, qd, qv, qe,
+                                   h=delta_engine.num_points,
+                                   alpha=alpha, beta=beta)
+        outs = [f.result() for f in futs]
+        delta_out = dfut.result() if dfut is not None else None
+    else:
+        outs = [e.search(qd, qv, qe, h=hf, alpha=alpha, beta=beta)
+                for e, hf in zip(engines, h_fetch)]
+        delta_out = None
+        if delta_engine is not None:
+            delta_out = delta_engine.search(qd, qv, qe,
+                                            h=delta_engine.num_points,
+                                            alpha=alpha, beta=beta)
     # assemble per-engine candidate parts in a COMMON id space.  Shards
     # stay in row order so stable-sort tie-breaking matches lax.top_k on
     # the unsharded array.
@@ -661,8 +685,10 @@ def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
         pos = np.asarray(delta_out[1]).astype(np.int64)
         if qn is not None:
             s, pos = s[:qn], pos[:qn]
-        parts.append((s, delta_ids[pos], False))
-    return merge_topk_host(parts, h, drop_ids=deleted)
+        parts.append((s, pos if delta_ids is None else delta_ids[pos],
+                      False))
+    return merge_topk_host(parts, h, drop_ids=deleted,
+                           dedup_upserts=dedup_upserts)
 
 
 def search_mutable(index, q_sparse, q_dense, h: int = 20,

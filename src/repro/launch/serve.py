@@ -23,6 +23,19 @@ crash/restart (snapshot load + WAL replay) and serves the recovered index.
         --persist-dir /tmp/hybrid-store          # first run
     PYTHONPATH=src python -m repro.launch.serve --retrieval \
         --restore /tmp/hybrid-store              # after a restart
+
+Cluster mode (DESIGN.md §8): ``--role shard`` runs ONE shard-server
+process (primary / scorer / replica — the building block real deployments
+lay out across hosts; delegates to ``repro.serve.cluster.shard_server``),
+while ``--role router`` demos the whole tier locally: spawn a primary +
+scorers (+ replicas) as subprocesses, route a query stream through the
+fan-out with mutations interleaved, and report QPS + per-hop latency +
+replication stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --role router \
+        --points 2000 --cluster-scorers 2 --replicas 1
+    PYTHONPATH=src python -m repro.launch.serve --role shard \
+        --shard-role primary --store /tmp/hybrid-store --port 7001
 """
 
 from __future__ import annotations
@@ -153,11 +166,66 @@ def run_retrieval(args) -> None:
     svc.close()
 
 
+def run_router(args) -> None:
+    """Local cluster demo (DESIGN.md §8): spawn the shard-server topology,
+    drive mutations + searches through a ``ClusterRouter``, report stats."""
+    import tempfile
+
+    from repro.core.hybrid import HybridIndex, HybridIndexParams
+    from repro.data import make_hybrid_dataset
+    from repro.serve.cluster import LocalCluster
+
+    n0 = args.points - 64
+    ds = make_hybrid_dataset(num_points=args.points, num_queries=args.queries,
+                             d_sparse=args.points, d_dense=64,
+                             nnz_per_row=48, seed=args.seed)
+    params = HybridIndexParams(keep_top=96, head_dims=64, kmeans_iters=6)
+    idx = HybridIndex.build(ds.x_sparse[:n0], ds.x_dense[:n0], params,
+                            mutable=True)
+    root = tempfile.mkdtemp(prefix="cluster-demo-")
+    print(f"spawning cluster: primary + {args.cluster_scorers} scorer(s) + "
+          f"{args.replicas} replica(s) under {root}")
+    with LocalCluster.launch(idx, root, num_scorers=args.cluster_scorers,
+                             num_replicas=args.replicas) as cluster:
+        router = cluster.router(h=args.h,
+                                replica_max_lag=args.replica_max_lag)
+        new = router.insert(ds.x_sparse[n0:], ds.x_dense[n0:])
+        router.delete(new[:8].tolist())
+        t0 = time.perf_counter()
+        s, ids = router.search_sparse(ds.q_sparse, ds.q_dense)
+        dt = time.perf_counter() - t0
+        print(f"served {ids.shape[0]} queries in {dt:.2f}s "
+              f"(top ids {ids[0, :5].tolist()})")
+        print("router status:", router.status())
+        router.close()
+
+
 def main():
-    """Parse args and dispatch to the LM or retrieval launcher."""
+    """Parse args and dispatch to the LM, retrieval, or cluster launcher.
+
+    ``--role shard`` short-circuits BEFORE the full parser: the remaining
+    flags (with ``--shard-role`` mapped to the server's ``--role``) are
+    handed verbatim to ``repro.serve.cluster.shard_server.main``, so one
+    entry point launches any node of a hand-laid-out deployment."""
+    import sys
+    argv = sys.argv[1:]
+    if "--role" in argv and argv[argv.index("--role") + 1] == "shard":
+        from repro.serve.cluster import shard_server
+        i = argv.index("--role")
+        rest = argv[:i] + argv[i + 2:]
+        rest = ["--role" if a == "--shard-role" else a for a in rest]
+        return shard_server.main(rest)
     ap = argparse.ArgumentParser()
     ap.add_argument("--retrieval", action="store_true",
                     help="serve a hybrid retrieval index instead of an LM")
+    # cluster mode (DESIGN.md §8)
+    ap.add_argument("--role", choices=["router", "shard"],
+                    help="cluster mode: 'shard' runs one shard-server "
+                         "process; 'router' spawns and drives a local "
+                         "cluster")
+    ap.add_argument("--cluster-scorers", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=0)
+    ap.add_argument("--replica-max-lag", type=int, default=0)
     # LM mode
     ap.add_argument("--arch")
     ap.add_argument("--tokens", type=int, default=32)
@@ -179,7 +247,9 @@ def main():
                     help="recover the index from this store (snapshot + "
                          "WAL replay) and serve it")
     args = ap.parse_args()
-    if args.retrieval:
+    if args.role == "router":
+        run_router(args)
+    elif args.retrieval:
         run_retrieval(args)
     else:
         if not args.arch:

@@ -13,7 +13,8 @@
 """
 
 from .snapshot import (FORMAT_VERSION, list_snapshots,  # noqa: F401
-                       load_snapshot, read_current, write_snapshot)
+                       load_snapshot, read_current, store_files,
+                       write_snapshot)
 from .wal import (RECORD_DELETE, RECORD_INSERT, MutationWAL,  # noqa: F401
                   WalRecord)
 from .recovery import (Durability, RecoveryResult, apply_record,  # noqa: F401

@@ -56,7 +56,7 @@ from repro.checkpoint.leaves import (fsync_dir, read_array_blob,
                                      write_array_blob)
 
 __all__ = ["FORMAT_VERSION", "write_snapshot", "load_snapshot",
-           "read_current", "list_snapshots"]
+           "read_current", "list_snapshots", "store_files"]
 
 FORMAT_VERSION = 1
 _CURRENT = "CURRENT"
@@ -78,6 +78,24 @@ def list_snapshots(root: str) -> list[str]:
     if not os.path.isdir(root):
         return []
     return sorted(d for d in os.listdir(root) if d.startswith(_SNAP_PREFIX))
+
+
+def store_files(root: str) -> list[str]:
+    """Root-relative paths of the files a fresh follower needs to copy to
+    bootstrap from this store — the snapshot-distribution manifest of the
+    cluster tier (DESIGN.md §8.3): the CURRENT pointer plus every file of
+    the snapshot it names, CURRENT LAST so a reader copying in order never
+    commits a pointer before its target exists.  WAL segments are excluded
+    on purpose — the tail ships separately (``MutationWAL.read_frames``)
+    and keeps shipping after bootstrap."""
+    cur = read_current(root)
+    if cur is None:
+        raise FileNotFoundError(
+            f"{root!r} has no committed snapshot store (CURRENT missing)")
+    snap = cur["snapshot"]
+    snap_dir = os.path.join(root, snap)
+    names = sorted(os.listdir(snap_dir))
+    return [f"{snap}/{n}" for n in names] + [_CURRENT]
 
 
 def _sweep_tmp(root: str) -> None:

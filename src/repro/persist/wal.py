@@ -298,6 +298,93 @@ class MutationWAL:
             fsync_dir(self.wal_dir)
         return removed
 
+    # -- replication shipping (DESIGN.md §8.3) ----------------------------
+
+    def read_frames(self, from_seq: int, *, limit: int = 256,
+                    max_bytes: int = 1 << 24) -> tuple[bytes, list[int]]:
+        """Raw framed records with ``seq >= from_seq``, oldest first, capped
+        at ``limit`` records / ``max_bytes`` payload — the WAL-shipping read
+        a primary serves to its replicas.  Whole segments strictly below
+        ``from_seq`` are skipped without being read (the segment-streaming
+        point of the ``wal-<first_seq>`` naming), so a caught-up replica's
+        poll costs one scan of the active tail, not the full log.
+
+        Ships the frames BYTE-IDENTICAL (header + crc + payload): the
+        replica re-validates each crc and appends the same bytes to its own
+        log (``append_frames``), so primary and replica logs are the same
+        file content record-for-record.  Returns ``(buf, seqs)``.
+        """
+        out, seqs = [], []
+        with self._append_lock:
+            self._file.flush()       # ship through the OS-visible tail
+            segments = list(self._segments)
+        for i, first in enumerate(segments):
+            nxt = segments[i + 1] if i + 1 < len(segments) else None
+            if nxt is not None and nxt <= from_seq:
+                continue             # fully below the ship horizon: skip
+            with open(_segment_path(self.wal_dir, first), "rb") as f:
+                buf = f.read()
+            off = 0
+            while len(seqs) < limit and sum(map(len, out)) < max_bytes:
+                header = buf[off:off + _HEADER.size]
+                if len(header) < _HEADER.size:
+                    break
+                magic, kind, seq, length, crc = _HEADER.unpack(header)
+                payload = buf[off + _HEADER.size:off + _HEADER.size + length]
+                if (magic != _MAGIC or len(payload) < length
+                        or _frame_crc(kind, seq, payload) != crc):
+                    break            # torn/unflushed tail: stop shipping
+                if seq >= from_seq:
+                    out.append(buf[off:off + _HEADER.size + length])
+                    seqs.append(seq)
+                off += _HEADER.size + length
+            if len(seqs) >= limit or sum(map(len, out)) >= max_bytes:
+                break
+        return b"".join(out), seqs
+
+    def append_frames(self, buf: bytes) -> list[WalRecord]:
+        """Validate and append SHIPPED frames, preserving their sequence
+        numbers — the replica-side half of WAL shipping.  Each frame's crc
+        is re-checked and its seq must continue this log exactly at
+        ``next_seq`` (shipping is resumable but never leaves a gap: a
+        restarted replica recovers to its exact applied seq and re-requests
+        from there).  Frames the log already holds (seq < next_seq) are
+        skipped, so an overlapping re-ship is idempotent.  Durability
+        follows the log's sync policy.  Returns the decoded records that
+        were appended, in order, for the caller to apply."""
+        appended: list[WalRecord] = []
+        with self._append_lock:
+            off = 0
+            while off < len(buf):
+                header = buf[off:off + _HEADER.size]
+                if len(header) < _HEADER.size:
+                    raise ValueError("shipped WAL buffer ends mid-header")
+                magic, kind, seq, length, crc = _HEADER.unpack(header)
+                payload = buf[off + _HEADER.size:off + _HEADER.size + length]
+                if (magic != _MAGIC or len(payload) < length
+                        or _frame_crc(kind, seq, payload) != crc):
+                    raise ValueError(
+                        f"shipped WAL frame at offset {off} failed its "
+                        "checksum — refusing to persist garbage")
+                frame_end = off + _HEADER.size + length
+                if seq < self.next_seq:
+                    off = frame_end          # already have it: idempotent
+                    continue
+                if seq != self.next_seq:
+                    raise ValueError(
+                        f"shipped WAL frame seq {seq} does not continue "
+                        f"this log (expected {self.next_seq}) — a gap "
+                        "would silently lose mutations")
+                self._file.write(buf[off:frame_end])
+                appended.append(WalRecord(seq=seq, kind=kind,
+                                          arrays=unpack_arrays(payload)))
+                self.next_seq = seq + 1
+                off = frame_end
+            self._file.flush()
+        if appended:
+            self.sync_to(appended[-1].seq)
+        return appended
+
     # -- replay -----------------------------------------------------------
 
     def records(self, from_seq: int = 0) -> list[WalRecord]:

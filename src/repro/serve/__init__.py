@@ -1,5 +1,7 @@
-"""Serving layer (DESIGN.md §5): the batched QueryService request path,
-the PQ-approximated LM head, and the decode loop that consumes it."""
+"""Serving layer (DESIGN.md §5, §8): the batched QueryService request
+path, the PQ-approximated LM head, the decode loop that consumes it, and
+the cross-host cluster tier (``repro.serve.cluster``: RPC shard fan-out +
+snapshot/WAL replication)."""
 from .hybrid_head import HybridLMHead, HybridHeadParams          # noqa: F401
 from .query_service import (QueryService, CacheInfo,             # noqa: F401
                             JitCacheInfo)

@@ -1,0 +1,30 @@
+"""Cross-host serving tier (DESIGN.md §8): RPC shard fan-out + snapshot/WAL
+replication — the paper's §7.2 many-server deployment, made concrete.
+
+* ``protocol`` — length-prefixed, crc-checksummed frames carrying a JSON
+  meta line + bit-exact packed tensors (§8.1);
+* ``shard_server`` — one process per role: ``primary`` (mutations + delta
+  + persist store), ``scorer`` (one ragged row slice of the ONE build),
+  ``replica`` (full follower via snapshot distribution + WAL shipping,
+  §8.3);
+* ``client`` — reconnecting ``ShardClient`` + the remote ``ShardSearcher``
+  handles ``fanout_search`` dispatches like in-process engines;
+* ``router`` — bucketed fan-out, authoritative per-generation tombstone
+  overlay at the merge, read-your-writes watermarks, explicit
+  ``DegradedResultError`` instead of silently truncated top-k (§8.2,
+  §8.4);
+* ``local`` — subprocess launcher for tests/benchmarks/demos.
+
+The contract the test harness (tests/test_cluster.py) pins: RPC results
+are bit-identical — ids AND scores — to the in-process ``QueryService``
+fan-out on the same state, across backends, odd/even K, and every
+mutation interleaving.
+"""
+
+from .client import (RemoteDeltaEngine, RemoteMainEngine,  # noqa: F401
+                     ShardClient, ShardUnavailableError, wait_ready)
+from .local import LocalCluster, NodeHandle                # noqa: F401
+from .protocol import RemoteError, TornFrameError          # noqa: F401
+from .router import (ClusterRouter, DegradedResultError,   # noqa: F401
+                     Session)
+from .shard_server import ShardServer, StaleGenerationError  # noqa: F401

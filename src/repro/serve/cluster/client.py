@@ -1,0 +1,200 @@
+"""Cluster client: one socket per shard server, transparent reconnect, and
+the remote engine handles the router plugs into ``fanout_search``
+(DESIGN.md §8.2).
+
+``ShardClient`` is the transport half: request/response over the framed
+protocol, with torn frames and dropped connections healed by ONE
+reconnect-and-retry (the protocol is one-reply-per-request, so a retried
+idempotent read is safe; mutations are only retried by the caller, which
+knows their semantics).  ``RemoteMainEngine`` / ``RemoteDeltaEngine`` are
+the duck-typed ``ShardSearcher`` handles: they expose exactly the
+``.search(...)/.num_points`` surface an in-process ``ScoringEngine`` does,
+which is what lets the router reuse ``core/streaming.py::fanout_search``
+unchanged — the transport is swappable, the merge contract is not.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+import numpy as np
+
+from .protocol import (MSG_ERROR, RemoteError, TornFrameError, recv_msg,
+                       send_msg)
+
+__all__ = ["ShardClient", "RemoteMainEngine", "RemoteDeltaEngine",
+           "ShardUnavailableError", "wait_ready"]
+
+
+class ShardUnavailableError(ConnectionError):
+    """The shard could not be reached even after a reconnect attempt — the
+    router's signal to fail over to a replica or raise an explicit
+    degraded-result error (never to merge a silently truncated top-k)."""
+
+
+class ShardClient:
+    """Blocking request/response client for one shard server.
+
+    Thread-safe (one lock around the socket — the router's executor may
+    fan a batch's shards out concurrently, but each shard sees one request
+    at a time).  A ``TornFrameError`` or dropped connection triggers one
+    transparent reconnect + resend; the second failure surfaces as
+    ``ShardUnavailableError``.  ``reconnects`` counts the healed failures
+    (the torn-frame tests pin it)."""
+
+    def __init__(self, host: str, port: int, *, timeout: float = 30.0):
+        self.host, self.port = host, port
+        self.timeout = timeout
+        self.reconnects = 0
+        self.bytes_sent = 0
+        self.bytes_recv = 0
+        # per-call timing of the LAST request (the router's per-hop
+        # latency breakdown reads these right after each fan-out)
+        self.last_send_s = 0.0
+        self.last_wall_s = 0.0
+        self._sock: socket.socket | None = None
+        self._lock = threading.Lock()
+
+    @property
+    def addr(self) -> str:
+        """``host:port`` of the peer (log/error labels)."""
+        return f"{self.host}:{self.port}"
+
+    def _connect(self) -> socket.socket:
+        s = socket.create_connection((self.host, self.port),
+                                     timeout=self.timeout)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return s
+
+    def call(self, cmd: str, meta: dict | None = None,
+             arrays: dict | None = None, *, retry: bool = True
+             ) -> tuple[dict, dict]:
+        """Send one request, read its reply; returns ``(meta, arrays)``.
+        Transport failures (torn frame, dead socket) are healed by one
+        reconnect + resend when ``retry`` (callers disable it for
+        non-idempotent mutations and re-drive at their own layer);
+        ``MSG_ERROR`` replies raise ``RemoteError``."""
+        with self._lock:
+            attempts = 2 if retry else 1
+            for attempt in range(attempts):
+                try:
+                    if self._sock is None:
+                        self._sock = self._connect()
+                    t0 = time.perf_counter()
+                    self.bytes_sent += send_msg(self._sock, cmd, meta,
+                                                arrays)
+                    t1 = time.perf_counter()
+                    op, rmeta, rarrays = recv_msg(self._sock)
+                    self.last_send_s = t1 - t0
+                    self.last_wall_s = time.perf_counter() - t0
+                    break
+                except (OSError, ConnectionError) as e:
+                    # TornFrameError is a ConnectionError: framing is lost
+                    # either way, so drop the socket and (maybe) retry
+                    if self._sock is not None:
+                        try:
+                            self._sock.close()
+                        finally:
+                            self._sock = None
+                    if attempt + 1 >= attempts:
+                        raise ShardUnavailableError(
+                            f"shard {self.addr} unreachable for "
+                            f"{cmd!r}: {e}") from e
+                    self.reconnects += 1
+        rmeta.pop("cmd", None)
+        if op == MSG_ERROR:
+            raise RemoteError(
+                f"shard {self.addr} failed {cmd!r}: {rmeta.get('error')}")
+        return rmeta, rarrays
+
+    def fetch_store(self, dst_root: str) -> list[str]:
+        """Copy the peer's committed snapshot store into ``dst_root`` —
+        snapshot distribution (DESIGN.md §8.3).  The server lists files
+        via ``persist.store_files`` with CURRENT last, and this writes
+        them in that order, so an interrupted fetch never leaves a
+        committed-looking store.  Returns the copied relative paths."""
+        import os
+        meta, _ = self.call("store_manifest")
+        for rel in meta["files"]:
+            fmeta, farr = self.call("store_file", {"path": rel})
+            path = os.path.join(dst_root, rel)
+            os.makedirs(os.path.dirname(path) or dst_root, exist_ok=True)
+            with open(path, "wb") as f:
+                f.write(farr["data"].tobytes())
+        return list(meta["files"])
+
+    def close(self) -> None:
+        """Close the socket (idempotent); the next call reconnects."""
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.close()
+                finally:
+                    self._sock = None
+
+
+class _RemoteEngineBase:
+    """Shared half of the remote ``ShardSearcher`` duck-type: ships the
+    padded query batch, returns ``(scores, ids)`` with ids ALREADY in the
+    external id space (the server maps through its row slice / delta
+    slots), and surfaces the response's replication tags to the router."""
+
+    def __init__(self, client: ShardClient, *, generation: int,
+                 num_points: int, part: str):
+        self.client = client
+        self.generation = generation
+        self.num_points = num_points
+        self.part = part
+        self.last_meta: dict = {}
+
+    def search(self, qd, qv, qe, *, h: int, alpha: int, beta: int):
+        meta, arrays = self.client.call(
+            "search", {"part": self.part, "gen": self.generation,
+                       "h": int(h), "alpha": int(alpha), "beta": int(beta)},
+            {"q_dims": np.asarray(qd, np.int32),
+             "q_vals": np.asarray(qv, np.float32),
+             "q_dense": np.asarray(qe, np.float32)})
+        self.last_meta = meta
+        return arrays["scores"], arrays["ids"]
+
+
+class RemoteMainEngine(_RemoteEngineBase):
+    """RPC handle for one scoring shard's main row slice: ``num_points``
+    is the slice size (so ``plan_overfetch`` budgets exactly like the
+    in-process shard engine) and ``search`` returns the slice's top-k in
+    external ids."""
+
+    def __init__(self, client: ShardClient, *, generation: int,
+                 num_points: int):
+        super().__init__(client, generation=generation,
+                         num_points=num_points, part="main")
+
+
+class RemoteDeltaEngine(_RemoteEngineBase):
+    """RPC handle for the primary's delta shard: like the in-process delta
+    engine it fetches its WHOLE capacity (the server pins a snapshot and
+    uses its capacity; ``num_points`` here is advisory), and tombstoned
+    slots come back -inf so the merge semantics match bit for bit."""
+
+    def __init__(self, client: ShardClient, *, generation: int,
+                 num_points: int):
+        super().__init__(client, generation=generation,
+                         num_points=num_points, part="delta")
+
+
+def wait_ready(client: ShardClient, *, timeout: float = 30.0,
+               poll: float = 0.05) -> dict:
+    """Poll ``status`` until the server answers (subprocess startup races);
+    returns the first status meta.  Raises ``ShardUnavailableError`` after
+    ``timeout`` seconds."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            meta, _ = client.call("status")
+            return meta
+        except (ShardUnavailableError, ConnectionError):
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(poll)

@@ -1,0 +1,117 @@
+"""Cluster wire protocol: length-prefixed, checksummed frames (DESIGN.md
+§8.1).
+
+One message = one frame::
+
+    magic   2s   b"HC"
+    op      u8   message class: 1 = request, 2 = response, 3 = error
+    length  u32  payload byte count
+    crc32   u32  zlib.crc32 of magic+op+length THEN the payload — header
+                 fields are covered too (the WAL's framing discipline,
+                 persist/wal.py), so a flipped bit anywhere in the frame is
+                 a detected ``TornFrameError``, never a silently wrong
+                 tensor
+    payload      one JSON meta line (command name + scalar fields), b"\\n",
+                 then ``checkpoint.leaves.pack_arrays`` of the named
+                 tensors — the same deterministic bit-exact encoding the
+                 WAL and snapshot store use, so a tensor that round-trips
+                 the wire is the tensor that round-trips disk
+
+The framing is deliberately the smallest thing that can carry named numpy
+arrays with end-to-end integrity; request/response matching is one-per-
+connection (a client sends a request and reads exactly one reply), which
+keeps failure handling trivial: any anomaly kills the connection and the
+client re-establishes it (``client.ShardClient``).
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import zlib
+
+from repro.checkpoint.leaves import pack_arrays, unpack_arrays
+
+__all__ = ["TornFrameError", "RemoteError", "send_msg", "recv_msg",
+           "MSG_REQUEST", "MSG_RESPONSE", "MSG_ERROR"]
+
+MSG_REQUEST = 1
+MSG_RESPONSE = 2
+MSG_ERROR = 3
+
+_MAGIC = b"HC"
+_HEADER = struct.Struct("<2sBII")       # magic, op, length, crc32
+_PREFIX = struct.Struct("<2sBI")        # the crc-covered header fields
+
+
+class TornFrameError(ConnectionError):
+    """A frame failed its integrity check — short read, bad magic, or crc
+    mismatch.  The connection is unusable (framing is lost): the only safe
+    recovery is to drop it and reconnect, which ``client.ShardClient``
+    does transparently."""
+
+
+class RemoteError(RuntimeError):
+    """The peer executed the request and reported an application-level
+    failure (its message is the remote traceback summary).  Distinct from
+    ``TornFrameError``: the wire worked, the command did not — retrying on
+    a fresh connection will not help."""
+
+
+def _frame_crc(op: int, payload: bytes) -> int:
+    return zlib.crc32(payload,
+                      zlib.crc32(_PREFIX.pack(_MAGIC, op, len(payload))))
+
+
+def send_msg(sock: socket.socket, cmd: str, meta: dict | None = None,
+             arrays: dict | None = None, *, op: int = MSG_REQUEST,
+             corrupt: bool = False) -> int:
+    """Frame and send one message; returns the bytes written.  ``cmd`` and
+    the JSON-scalar ``meta`` fields form the header line, ``arrays`` are
+    named numpy tensors (bit-exact via ``pack_arrays``).  ``corrupt=True``
+    flips a payload bit AFTER the crc is computed — the server-side fault
+    hook the torn-frame tests drive; a real sender never sets it."""
+    head = dict(meta or {})
+    head["cmd"] = cmd
+    payload = json.dumps(head).encode() + b"\n" + pack_arrays(arrays or {})
+    frame = bytearray(_HEADER.pack(_MAGIC, op, len(payload),
+                                   _frame_crc(op, payload)) + payload)
+    if corrupt:
+        frame[-1] ^= 0x40
+    sock.sendall(frame)
+    return len(frame)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly n bytes or raise: ``ConnectionError`` on a clean EOF at
+    a frame boundary (peer went away), ``TornFrameError`` mid-frame."""
+    chunks, got = [], 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                raise ConnectionError("peer closed the connection")
+            raise TornFrameError(
+                f"connection closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_msg(sock: socket.socket) -> tuple[int, dict, dict]:
+    """Receive one frame; returns ``(op, meta, arrays)``.  Integrity
+    failures raise ``TornFrameError``; an ``op == MSG_ERROR`` frame is
+    returned like any other (the client raises ``RemoteError`` from it —
+    the transport layer only vouches for the bytes)."""
+    header = _recv_exact(sock, _HEADER.size)
+    magic, op, length, crc = _HEADER.unpack(header)
+    if magic != _MAGIC:
+        raise TornFrameError(f"bad frame magic {magic!r}")
+    payload = _recv_exact(sock, length)
+    if _frame_crc(op, payload) != crc:
+        raise TornFrameError("frame checksum mismatch")
+    nl = payload.index(b"\n")
+    meta = json.loads(payload[:nl].decode())
+    arrays = unpack_arrays(payload[nl + 1:])
+    return op, meta, arrays

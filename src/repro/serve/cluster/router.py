@@ -1,0 +1,446 @@
+"""Cluster router: bucketed fan-out over RPC shards + authoritative
+host-side merge (DESIGN.md §8.2, §8.4) — the cross-host form of
+``QueryService``'s in-process fan-out, sharing its actual machinery:
+``bucket_for``/``pad_rows`` for micro-batching, ``plan_overfetch`` for
+tombstone slack, ``fanout_search``/``merge_topk_host`` for the merge.
+
+Topology: N ``scorer`` servers each hold one contiguous row slice of the
+ONE build (bit-identity depends on that — frozen artifacts are global,
+rows are sliced); the ``primary`` owns mutations and serves the delta
+part; ``replica`` followers serve whole-query parts for follower reads
+and failover.  The merge order is ``[scorer 0 … scorer S-1, delta]`` —
+exactly the in-process ``[main shards…, delta]`` — so stable-sort
+tie-breaking, and therefore every bit of every result, matches the
+single-process service.
+
+Tombstones are filtered HERE, from the router's authoritative per-
+generation view (accumulated from mutation acks), never from a shard's
+possibly-stale view — the ``merge_topk_host`` per-part drop fix this PR
+pins: a lagging replica cannot resurrect a deleted id because the router
+overlays ``fully_deleted`` on the replica's parts at merge time
+(DESIGN.md §8.4).
+
+Read-your-writes: every mutation ack carries its WAL seq; a ``Session``
+records the max as its watermark, and follower reads are only served by a
+replica whose ``applied_seq`` covers it — otherwise the router falls back
+to the primary path.  A replica behind ``last acked seq - replica_max_lag``
+is excluded from routing entirely until it catches up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.distributed import ceil16, merge_topk_host
+from repro.core.sparse_index import (CompactColumns,
+                                     sparse_queries_to_padded)
+from repro.core.streaming import fanout_search, plan_overfetch
+from repro.serve.query_service import DEFAULT_BUCKETS, bucket_for, pad_rows
+
+from .client import (RemoteDeltaEngine, RemoteMainEngine, ShardClient,
+                     ShardUnavailableError)
+from .protocol import RemoteError
+
+__all__ = ["ClusterRouter", "Session", "DegradedResultError"]
+
+
+class DegradedResultError(RuntimeError):
+    """A shard needed for a full-fidelity answer is unreachable and no
+    caught-up replica can stand in.  Raised INSTEAD of merging whatever
+    parts survived: a silently truncated top-k is a wrong answer that
+    looks right, which the fault-injection suite forbids."""
+
+
+@dataclasses.dataclass
+class Session:
+    """Read-your-writes handle: ``watermark`` is the WAL seq of this
+    session's last acked write; reads made with the session are only
+    served by state that has applied at least that seq."""
+    watermark: int = 0
+
+    def observe(self, seq: int) -> None:
+        """Fold an acked write's seq into the watermark."""
+        self.watermark = max(self.watermark, int(seq))
+
+
+def _addr(spec: str) -> tuple[str, int]:
+    host, port = spec.rsplit(":", 1)
+    return host, int(port)
+
+
+class ClusterRouter:
+    """Client-side coordinator for one shard cluster.
+
+    ``primary``/``scorers``/``replicas`` are ``host:port`` endpoints (see
+    ``local.LocalCluster`` for a one-call launcher).  Searches take raw
+    scipy sparse queries (``search_sparse``) or pre-padded compact-space
+    batches (``search``); mutations go to the primary and their acks feed
+    the router's authoritative tombstone/watermark state; ``compact()``
+    orchestrates the cluster-wide generation flip."""
+
+    def __init__(self, primary: str, scorers: list[str],
+                 replicas: list[str] = (), *, h: int = 10,
+                 alpha: int | None = None, beta: int | None = None,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 prefer_replica: bool = False, replica_max_lag: int = 0,
+                 timeout: float = 60.0):
+        self.primary = ShardClient(*_addr(primary), timeout=timeout)
+        self.scorers = [ShardClient(*_addr(a), timeout=timeout)
+                        for a in scorers]
+        self.replicas = [ShardClient(*_addr(a), timeout=timeout)
+                         for a in replicas]
+        self.buckets = buckets
+        self.prefer_replica = prefer_replica
+        self.replica_max_lag = replica_max_lag
+        self._lock = threading.RLock()
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(2, len(self.scorers) + 1),
+            thread_name_prefix="router-fanout")
+        info, arrays = self.primary.call("info")
+        self.gen = int(info["gen"])
+        self.h = h
+        self.alpha = int(info["alpha"] if alpha is None else alpha)
+        self.beta = int(info["beta"] if beta is None else beta)
+        self._num_points = int(info["num_points"])
+        self._d_active = int(info["d_active"])
+        self._nq_max = int(info["nq_max"])
+        self._cols = CompactColumns(global_ids=arrays["cols_global_ids"])
+        self._main_dead = {self.gen: set(arrays["main_tombstones"].tolist())}
+        self._fully_deleted = {self.gen: set()}
+        self._delta_live = {self.gen: int(info["delta_live"])}
+        self._last_seq = int(info["applied_seq"])
+        self._replica_seq = [(-1) for _ in self.replicas]
+        self.stats = {"primary_reads": 0, "replica_reads": 0,
+                      "failovers": 0, "degraded": 0, "stale_retries": 0,
+                      "excluded_stale": 0, "queries": 0}
+        self.hop_s = {"serialize": 0.0, "wire": 0.0, "score": 0.0,
+                      "merge": 0.0}
+
+    # -- sessions ---------------------------------------------------------
+
+    def session(self) -> Session:
+        """A fresh read-your-writes session (watermark 0 = any state)."""
+        return Session()
+
+    # -- mutations (primary only) -----------------------------------------
+
+    def _ack(self, meta: dict, *, main_killed, resurrected=(),
+             fully_killed=(), session: Session | None) -> None:
+        """Fold one mutation ack into the authoritative per-generation
+        tombstone view + watermark state.  Acks are generation-tagged by
+        the primary, so one racing a compaction lands in the right
+        epoch's sets (the flip preserves already-accumulated entries)."""
+        with self._lock:
+            g = int(meta["gen"])
+            self._main_dead.setdefault(g, set()).update(
+                int(e) for e in main_killed)
+            fd = self._fully_deleted.setdefault(g, set())
+            fd.update(int(e) for e in fully_killed)
+            fd.difference_update(int(e) for e in resurrected)
+            self._delta_live[g] = int(meta["delta_live"])
+            self._last_seq = max(self._last_seq, int(meta["seq"]))
+        if session is not None and meta["seq"]:
+            session.observe(meta["seq"])
+
+    def insert(self, x_sparse, x_dense, ids=None,
+               session: Session | None = None) -> np.ndarray:
+        """Insert (or upsert) rows via the primary; returns the assigned
+        external ids.  Acked only after the primary's WAL covers the batch
+        (its group-commit discipline); the ack's ``main_killed`` ids feed
+        the router's tombstone view and its seq the session watermark."""
+        import scipy.sparse as sp
+        xs = sp.csr_matrix(x_sparse)
+        arrays = {"data": xs.data, "indices": xs.indices,
+                  "indptr": xs.indptr,
+                  "shape": np.asarray(xs.shape, np.int64),
+                  "dense": np.atleast_2d(np.asarray(x_dense, np.float32))}
+        if ids is not None:
+            arrays["ids"] = np.atleast_1d(np.asarray(ids, np.int64))
+        meta, arr = self.primary.call("insert", arrays=arrays, retry=False)
+        assigned = arr["ids"]
+        self._ack(meta, main_killed=arr["main_killed"],
+                  resurrected=assigned.tolist(), session=session)
+        return assigned
+
+    def delete(self, ids, session: Session | None = None) -> int:
+        """Tombstone rows by external id via the primary; returns #killed.
+        The ack's killed ids join BOTH router sets: ``main_dead`` (drop
+        from scorer parts) and ``fully_deleted`` (the overlay that stops a
+        lagging replica resurrecting them, DESIGN.md §8.4)."""
+        meta, arr = self.primary.call(
+            "delete", arrays={"ids": np.atleast_1d(np.asarray(ids,
+                                                              np.int64))},
+            retry=False)
+        self._ack(meta, main_killed=arr["main_killed"],
+                  fully_killed=arr["killed_ids"].tolist(), session=session)
+        return int(meta["killed"])
+
+    # -- compaction (cluster-wide generation flip) ------------------------
+
+    def compact(self, retrain: bool | None = None) -> int:
+        """Orchestrate a cluster compaction: pause replica shipping, fold
+        delta + tombstones at the primary (cut as a durable checkpoint),
+        have every scorer/replica reload the new store, then atomically
+        flip the router's generation + reset its tombstone epoch.  Old-
+        generation searches keep working mid-flip (servers hold the last
+        two generations); new-generation state starts clean.  Returns the
+        new generation number."""
+        for r in self.replicas:
+            r.call("fault", {"mode": "pause_shipping"})
+        meta, arrays = self.primary.call("compact", {"retrain": retrain},
+                                         retry=False)
+        gen = int(meta["gen"])
+        for s in self.scorers:
+            s.call("reload", {"gen": gen})
+        for r in self.replicas:
+            r.call("reload", {"gen": gen})
+        with self._lock:
+            self.gen = gen
+            self._num_points = int(meta["num_points"])
+            self._d_active = int(meta["d_active"])
+            self._cols = CompactColumns(
+                global_ids=arrays["cols_global_ids"])
+            # keep entries acks already accumulated FOR this generation
+            # (a mutation can race the flip), drop every older epoch
+            self._main_dead = {gen: self._main_dead.get(gen, set())}
+            self._fully_deleted = {gen: self._fully_deleted.get(gen, set())}
+            self._delta_live = {gen: self._delta_live.get(gen, 0)}
+        return gen
+
+    # -- search -----------------------------------------------------------
+
+    def _slice_sizes(self, n: int) -> list[int]:
+        """Row counts per scorer under the ragged ceil-split — must mirror
+        ``split_index_arrays(..., ragged=True)`` exactly, since
+        ``plan_overfetch`` budgets per-slice fetch depths from them."""
+        s = len(self.scorers)
+        base, rem = divmod(n, s)
+        return [base + 1 if i < rem else base for i in range(s)]
+
+    def _pin(self):
+        """One consistent router-state snapshot (the cross-host analogue
+        of ``QueryService._acquire_view``): generation, corpus size,
+        column space, tombstone sets, delta liveness, last acked seq."""
+        with self._lock:
+            g = self.gen
+            return (g, self._num_points, self._d_active, self._cols,
+                    frozenset(self._main_dead.get(g, ())),
+                    frozenset(self._fully_deleted.get(g, ())),
+                    self._delta_live.get(g, 0), self._last_seq)
+
+    def search_sparse(self, q_sparse, q_dense, *, h: int | None = None,
+                      alpha: int | None = None, beta: int | None = None,
+                      session: Session | None = None):
+        """Serve RAW scipy sparse queries: encode against the pinned
+        generation's compact column space (generation-bound, like
+        ``QueryService.search_sparse``), then fan out.  Returns
+        ``(scores (Q, h), ids (Q, h))`` in external ids."""
+        gen_state = self._pin()
+        cols, nq_max = gen_state[3], self._nq_max
+        q_dims, q_vals = sparse_queries_to_padded(q_sparse, cols,
+                                                  nq_max=nq_max)
+        return self._search_pinned(gen_state,
+                                   np.atleast_2d(np.asarray(q_dims,
+                                                            np.int32)),
+                                   np.atleast_2d(np.asarray(q_vals,
+                                                            np.float32)),
+                                   np.atleast_2d(np.asarray(q_dense,
+                                                            np.float32)),
+                                   h, alpha, beta, session)
+
+    def search(self, q_dims, q_vals, q_dense, *, h: int | None = None,
+               alpha: int | None = None, beta: int | None = None,
+               session: Session | None = None):
+        """Serve pre-padded compact-space query batches (generation-bound
+        — streaming clients should prefer ``search_sparse``).  Returns
+        ``(scores (Q, h), ids (Q, h))`` numpy arrays, bit-identical to the
+        in-process ``QueryService`` fan-out on the same state."""
+        return self._search_pinned(
+            self._pin(),
+            np.atleast_2d(np.asarray(q_dims, np.int32)),
+            np.atleast_2d(np.asarray(q_vals, np.float32)),
+            np.atleast_2d(np.asarray(q_dense, np.float32)),
+            h, alpha, beta, session)
+
+    def _search_pinned(self, gen_state, q_dims, q_vals, q_dense,
+                       h, alpha, beta, session, _retries: int = 8):
+        h = self.h if h is None else h
+        alpha = self.alpha if alpha is None else alpha
+        beta = self.beta if beta is None else beta
+        qn_total = q_dims.shape[0]
+        out_s = np.empty((qn_total, h), np.float32)
+        out_i = np.empty((qn_total, h), np.int64)
+        max_bucket = self.buckets[-1]
+        for lo in range(0, qn_total, max_bucket):
+            hi = min(lo + max_bucket, qn_total)
+            for attempt in range(_retries):
+                try:
+                    s, ids = self._run_chunk(gen_state, q_dims[lo:hi],
+                                             q_vals[lo:hi], q_dense[lo:hi],
+                                             h, alpha, beta, session)
+                    break
+                except RemoteError as e:
+                    if "StaleGeneration" not in str(e) \
+                            or attempt + 1 >= _retries:
+                        raise
+                    # a compaction flipped generations mid-flight:
+                    # re-pin and retry against the new epoch
+                    with self._lock:
+                        self.stats["stale_retries"] += 1
+                    time.sleep(0.05)
+                    gen_state = self._pin()
+            out_s[lo:hi], out_i[lo:hi] = s, ids
+        with self._lock:
+            self.stats["queries"] += qn_total
+        return out_s, out_i
+
+    def _run_chunk(self, gen_state, q_dims, q_vals, q_dense, h, alpha,
+                   beta, session):
+        (gen, n, d_active, _cols, main_dead, fully_deleted, delta_live,
+         last_seq) = gen_state
+        qn = q_dims.shape[0]
+        bucket = bucket_for(qn, self.buckets)
+        qd = pad_rows(q_dims, bucket, fill=d_active)
+        qv = pad_rows(q_vals, bucket)
+        qe = pad_rows(q_dense, bucket)
+        required = session.watermark if session is not None else 0
+        floor = max(required, last_seq - self.replica_max_lag)
+
+        if self.prefer_replica and self.replicas:
+            res = self._try_replicas(gen, qd, qv, qe, qn, h, alpha, beta,
+                                     main_dead, fully_deleted, floor)
+            if res is not None:
+                return res
+        try:
+            return self._primary_fanout(gen, qd, qv, qe, qn, h, alpha,
+                                        beta, main_dead, delta_live)
+        except (ShardUnavailableError, ConnectionError):
+            with self._lock:
+                self.stats["failovers"] += 1
+            res = self._try_replicas(gen, qd, qv, qe, qn, h, alpha, beta,
+                                     main_dead, fully_deleted, floor)
+            if res is not None:
+                return res
+            with self._lock:
+                self.stats["degraded"] += 1
+            raise DegradedResultError(
+                "a scoring shard is unreachable and no replica has "
+                f"applied seq >= {floor}; refusing to return a silently "
+                "truncated top-k") from None
+
+    def _primary_fanout(self, gen, qd, qv, qe, qn, h, alpha, beta,
+                        main_dead, delta_live):
+        """The S-scorer + primary-delta path: the literal in-process merge
+        (``plan_overfetch`` + ``fanout_search``) over remote engines."""
+        t0 = time.perf_counter()
+        engines = [RemoteMainEngine(c, generation=gen, num_points=sz)
+                   for c, sz in zip(self.scorers,
+                                    self._slice_sizes(self._pin_n(gen)))]
+        h_fetch = plan_overfetch(engines, h, main_dead)
+        delta = (RemoteDeltaEngine(self.primary, generation=gen,
+                                   num_points=delta_live)
+                 if delta_live > 0 else None)
+        s, ids = fanout_search(
+            engines, h_fetch, np.zeros(len(engines), np.int64), None,
+            delta, None, main_dead, qd, qv, qe, h=h, alpha=alpha,
+            beta=beta, qn=qn, executor=self._pool, dedup_upserts=True)
+        self._account_hops([e for e in engines + ([delta] if delta else [])],
+                           time.perf_counter() - t0, qn)
+        with self._lock:
+            self.stats["primary_reads"] += qn
+        return s, ids
+
+    def _pin_n(self, gen: int) -> int:
+        with self._lock:
+            return self._num_points
+
+    def _try_replicas(self, gen, qd, qv, qe, qn, h, alpha, beta,
+                      main_dead, fully_deleted, floor):
+        """Serve the chunk from the first eligible replica, or None.
+        Eligibility is checked from the cached applied seq (refreshing
+        via a status poll when stale) BEFORE the search RPC, and enforced
+        again on the response tag — a replica below the floor never
+        serves the read (DESIGN.md §8.4)."""
+        h_fetch = min(h + (ceil16(len(main_dead)) if main_dead else 0),
+                      self._pin_n(gen))
+        for i, rep in enumerate(self.replicas):
+            try:
+                if self._replica_seq[i] < floor:
+                    st, _ = rep.call("status")
+                    with self._lock:
+                        self._replica_seq[i] = int(st["applied_seq"])
+                    if self._replica_seq[i] < floor or \
+                            int(st["gen"]) != gen:
+                        with self._lock:
+                            self.stats["excluded_stale"] += 1
+                        continue
+                meta, arrays = rep.call(
+                    "search", {"part": "full", "gen": gen, "h": h_fetch,
+                               "alpha": int(alpha), "beta": int(beta)},
+                    {"q_dims": qd, "q_vals": qv, "q_dense": qe})
+            except (ShardUnavailableError, ConnectionError, RemoteError):
+                continue
+            with self._lock:
+                self._replica_seq[i] = int(meta["applied_seq"])
+            if int(meta["applied_seq"]) < floor or int(meta["gen"]) != gen:
+                with self._lock:
+                    self.stats["excluded_stale"] += 1
+                continue
+            # merge the replica's consistent-prefix parts under the
+            # router's AUTHORITATIVE overlay: its own main tombstones
+            # (its prefix's upsert/delete kills) plus fully_deleted on
+            # BOTH parts — a stale tombstone view can hide nothing and
+            # resurrect nothing
+            drop_main = set(arrays["main_tombstones"].tolist())
+            drop_main.update(fully_deleted)
+            parts = [(arrays["ms"][:qn], arrays["mi"][:qn],
+                      np.asarray(sorted(drop_main), np.int64))]
+            if "ds" in arrays:
+                parts.append((arrays["ds"][:qn], arrays["di"][:qn],
+                              np.asarray(sorted(fully_deleted), np.int64)))
+            s, ids = merge_topk_host(parts, h)
+            with self._lock:
+                self.stats["replica_reads"] += qn
+            return s, ids
+        return None
+
+    # -- introspection ----------------------------------------------------
+
+    def _account_hops(self, engines, chunk_wall: float, qn: int) -> None:
+        walls, sends, scores = [], [], []
+        for e in engines:
+            walls.append(getattr(e.client, "last_wall_s", 0.0))
+            sends.append(getattr(e.client, "last_send_s", 0.0))
+            scores.append(float(e.last_meta.get("score_s", 0.0)))
+        with self._lock:
+            self.hop_s["serialize"] += sum(sends)
+            self.hop_s["score"] += sum(scores)
+            self.hop_s["wire"] += max(
+                0.0, sum(walls) - sum(sends) - sum(scores))
+            self.hop_s["merge"] += max(0.0, chunk_wall - max(walls,
+                                                             default=0.0))
+
+    def status(self) -> dict:
+        """Router-side cluster view: generation, corpus size, tombstone
+        counts, delta liveness, last acked seq, per-replica applied seqs,
+        and the read/failover counters."""
+        with self._lock:
+            g = self.gen
+            return {"gen": g, "num_points": self._num_points,
+                    "main_dead": len(self._main_dead.get(g, ())),
+                    "fully_deleted": len(self._fully_deleted.get(g, ())),
+                    "delta_live": self._delta_live.get(g, 0),
+                    "last_seq": self._last_seq,
+                    "replica_seq": list(self._replica_seq),
+                    **self.stats}
+
+    def close(self) -> None:
+        """Close every client socket and the fan-out pool (idempotent)."""
+        self._pool.shutdown(wait=False)
+        for c in [self.primary, *self.scorers, *self.replicas]:
+            c.close()

@@ -1,0 +1,546 @@
+"""Cluster shard server: one process, one role, one framed socket endpoint
+(DESIGN.md §8.2–§8.3).
+
+Three roles share the server shell (accept loop, dispatch, fault hooks):
+
+* ``primary`` — owns the ONE mutable ``HybridIndex`` and its persist store
+  (``persist.recover``): applies + WAL-logs every mutation, serves the
+  DELTA search part, distributes its snapshot store to bootstrapping
+  peers, and serves the WAL tail to replicas (``wal_fetch``).  Compaction
+  happens here, cut as a durable checkpoint the other roles reload from.
+* ``scorer`` — serves the MAIN search part for one row slice: bootstraps
+  by copying the primary's store, loads the snapshot, keeps
+  ``split_index_arrays(..., ragged=True)[shard]`` plus that slice's
+  external ids.  The frozen artifacts (codebooks, column space) are the
+  primary's own, which is what makes the RPC fan-out bit-identical to the
+  in-process one: there is ONE build, row-sliced — never N builds.
+* ``replica`` — a full follower: bootstraps from the store, then ships the
+  WAL tail (``MutationWAL.append_frames`` into its OWN local log, then
+  ``persist.apply_record`` through the normal mutation path), so a replica
+  restarted mid-ingest recovers from its local snapshot + shipped log to
+  the exact applied seq.  Serves whole-query (main + delta) parts tagged
+  with ``applied_seq`` for the router's watermark rule (DESIGN.md §8.4).
+
+Every search request carries the router's generation tag; a request
+against a generation this process does not hold raises
+``StaleGenerationError`` back across the wire — the router re-syncs and
+retries rather than merging parts from mixed generations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core.distributed import split_index_arrays
+from repro.core.engine import ScoringEngine
+
+from .client import ShardClient
+from .protocol import MSG_ERROR, MSG_RESPONSE, recv_msg, send_msg
+
+__all__ = ["ShardServer", "StaleGenerationError", "main"]
+
+
+class StaleGenerationError(RuntimeError):
+    """The request's generation tag is not one this server holds (a
+    compaction moved the cluster on, or the caller is ahead of a server
+    that has not reloaded yet).  The router treats it as retriable after a
+    state re-sync — never as data."""
+    kind = "StaleGeneration"
+
+
+def _jnp(x):
+    import jax.numpy as jnp
+    return jnp.asarray(x)
+
+
+class _Gen:
+    """One generation a scorer serves: the slice engine, its external ids,
+    and the slice's global row extent."""
+
+    def __init__(self, engine, ext_ids, num_points_total):
+        self.engine = engine
+        self.ext_ids = ext_ids
+        self.num_points_total = num_points_total
+
+
+class ShardServer:
+    """The process behind one cluster endpoint; see the module docstring
+    for the role split.  ``start()`` binds (port 0 = ephemeral), spawns the
+    accept loop, and returns the bound port; ``__main__`` prints
+    ``READY <port>`` on stdout so a launcher can scrape it."""
+
+    def __init__(self, role: str, *, store: str | None = None,
+                 peer: str | None = None, shard: int = 0,
+                 num_shards: int = 1, workdir: str | None = None,
+                 backend: str | None = None, poll_interval: float = 0.02):
+        if role not in ("primary", "scorer", "replica"):
+            raise ValueError(f"unknown role {role!r}")
+        self.role = role
+        self.store = store
+        self.peer = peer
+        self.shard = shard
+        self.num_shards = num_shards
+        self.workdir = workdir
+        self.backend = backend
+        self.poll_interval = poll_interval
+        self.generation = 1
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._listener: socket.socket | None = None
+        self._faults: set[str] = set()
+        self._ship_paused = threading.Event()
+        self._ship_thread: threading.Thread | None = None
+        self.shipped_records = 0
+        # primary / replica
+        self.index = None
+        self.durability = None
+        self._applied_seq = 0
+        self._prev_index = None          # (gen, index) kept across a flip
+        self._delta_engine_cache: dict[tuple, ScoringEngine] = {}
+        # scorer
+        self._gens: dict[int, _Gen] = {}
+
+    # -- bootstrap --------------------------------------------------------
+
+    def _peer_client(self) -> ShardClient:
+        host, port = self.peer.rsplit(":", 1)
+        return ShardClient(host, int(port))
+
+    def bootstrap(self) -> None:
+        """Bring this role to serving state (blocking; run before
+        ``start``): primary recovers its store; scorer/replica fetch the
+        primary's store first when they have none (snapshot
+        distribution)."""
+        from repro import persist
+        if self.role == "primary":
+            rec = persist.recover(self.store, backend=self.backend)
+            self.index, self.durability = rec.index, rec.durability
+            self._applied_seq = self.durability.wal.next_seq - 1
+        elif self.role == "scorer":
+            self._load_slice(self.generation)
+        else:                            # replica
+            if persist.read_current(self.store) is None:
+                self._peer_client().fetch_store(self.store)
+            rec = persist.recover(self.store, backend=self.backend)
+            self.index, self.durability = rec.index, rec.durability
+            self._applied_seq = self.durability.wal.next_seq - 1
+            peer_status, _ = self._peer_client().call("status")
+            self.generation = int(peer_status["gen"])
+            self._start_shipping()
+
+    def _load_slice(self, gen: int) -> None:
+        """Scorer: fetch the primary's current store into a per-generation
+        directory, load the snapshot, keep only this shard's row slice
+        (plus its external ids) — and at most the last two generations, so
+        in-flight old-generation requests drain during a flip."""
+        from repro import persist
+        root = os.path.join(self.workdir, f"gen-{gen:04d}")
+        self._peer_client().fetch_store(root)
+        index, _ = persist.load_snapshot(root, backend=self.backend)
+        parts, offsets = split_index_arrays(index.engine.arrays,
+                                            self.num_shards, ragged=True)
+        lo = int(offsets[self.shard])
+        hi = lo + parts[self.shard].num_points
+        g = _Gen(engine=ScoringEngine(arrays=parts[self.shard],
+                                      backend=index.engine.backend),
+                 ext_ids=np.asarray(index.mutable_state.id_map[lo:hi]),
+                 num_points_total=index.engine.arrays.num_points)
+        with self._lock:
+            self._gens[gen] = g
+            self.generation = gen
+            for old in sorted(self._gens)[:-2]:
+                del self._gens[old]
+
+    # -- replication shipping (replica role) ------------------------------
+
+    def _start_shipping(self) -> None:
+        self._ship_thread = threading.Thread(target=self._ship_loop,
+                                             daemon=True,
+                                             name="wal-shipping")
+        self._ship_thread.start()
+
+    def applied_seq(self) -> int:
+        """Last WAL seq whose effects are VISIBLE in this process's
+        serving state.  On the primary that is the log's high-water mark
+        (apply-then-log); on a replica it advances only after
+        ``apply_record`` returns (log-then-apply) — the distinction the
+        watermark rule (DESIGN.md §8.4) depends on: a replica must never
+        advertise a seq whose mutation a read could still miss.  Recovery
+        re-establishes it exactly (the replica-restart test pins this)."""
+        if self.role == "primary":
+            return self.durability.wal.next_seq - 1
+        return self._applied_seq
+
+    def _ship_loop(self) -> None:
+        """Replica tail loop: poll the primary for frames past our applied
+        seq, append them BYTE-IDENTICAL to the local log, then apply each
+        through the normal mutation path — log-then-apply, so a crash
+        between the two replays the record on restart instead of losing
+        it."""
+        from repro.persist import apply_record
+        peer = self._peer_client()
+        while not self._stop.is_set():
+            if self._ship_paused.is_set():
+                time.sleep(self.poll_interval)
+                continue
+            try:
+                meta, arrays = peer.call(
+                    "wal_fetch", {"from_seq": self.applied_seq() + 1})
+            except ConnectionError:
+                time.sleep(self.poll_interval)
+                continue
+            frames = arrays["frames"].tobytes()
+            if not frames:
+                time.sleep(self.poll_interval)
+                continue
+            with self._lock:
+                for rec in self.durability.wal.append_frames(frames):
+                    apply_record(self.index, rec)
+                    self._applied_seq = rec.seq
+                    self.shipped_records += 1
+
+    # -- op handlers ------------------------------------------------------
+
+    def _check_gen(self, meta: dict) -> int:
+        gen = int(meta["gen"])
+        ok = gen in self._gens if self.role == "scorer" else \
+            gen == self.generation or (
+                self._prev_index is not None and gen == self._prev_index[0])
+        if not ok:
+            raise StaleGenerationError(
+                f"{self.role} holds generation {self.generation}, "
+                f"request wants {gen}")
+        return gen
+
+    def _delta_engine(self, index, snap) -> ScoringEngine:
+        key = (id(index), snap.version, snap.capacity)
+        eng = self._delta_engine_cache.get(key)
+        if eng is None:
+            self._delta_engine_cache.clear()      # one live snapshot view
+            eng = ScoringEngine(arrays=snap.arrays,
+                                backend=index.engine.backend)
+            self._delta_engine_cache[key] = eng
+        return eng
+
+    def _op_search(self, meta, arrays):
+        qd, qv = _jnp(arrays["q_dims"]), _jnp(arrays["q_vals"])
+        qe = _jnp(arrays["q_dense"])
+        h = int(meta["h"])
+        alpha, beta = int(meta["alpha"]), int(meta["beta"])
+        part = meta["part"]
+        t0 = time.perf_counter()
+        if part == "main":                       # scorer row slice
+            with self._lock:
+                gen_no = self._check_gen(meta)
+                gen = self._gens[gen_no]
+            s, ids, _ = gen.engine.search(qd, qv, qe, h=h,
+                                          alpha=alpha, beta=beta)
+            # local slice positions -> external ids; -1 sentinels wrap to
+            # the slice's last id exactly like the in-process
+            # ``id_map[off + ids]`` (their scores are non-finite, so the
+            # merge rewrites them to -1 either way)
+            out = {"scores": np.asarray(s),
+                   "ids": gen.ext_ids[np.asarray(ids)]}
+            rmeta = {"gen": gen_no}
+        elif part == "delta":                    # primary delta shard
+            with self._lock:
+                gen = self._check_gen(meta)
+                index = (self.index if gen == self.generation
+                         else self._prev_index[1])
+                st = index.mutable_state
+                snap = st.delta.snapshot() if st.delta.live_count else None
+                eng = (self._delta_engine(index, snap)
+                       if snap is not None else None)
+            if snap is None:
+                q = int(np.asarray(arrays["q_dims"]).shape[0])
+                out = {"scores": np.zeros((q, 0), np.float32),
+                       "ids": np.zeros((q, 0), np.int64)}
+                rmeta = {"gen": gen, "live": 0}
+            else:
+                s, ids, _ = eng.search(qd, qv, qe, h=snap.capacity,
+                                       alpha=alpha, beta=beta)
+                out = {"scores": np.asarray(s),
+                       "ids": snap.ids[np.asarray(ids)]}
+                rmeta = {"gen": gen, "live": snap.live}
+        elif part == "full":                     # replica: main + delta
+            with self._lock:
+                self._check_gen(meta)
+                st = self.index.mutable_state
+                snap = st.delta.snapshot() if st.delta.live_count else None
+                eng = (self._delta_engine(self.index, snap)
+                       if snap is not None else None)
+                tombs = np.asarray(sorted(st.main_tombstones), np.int64)
+                applied = self.applied_seq()
+            ms, mi, _ = self.index.engine.search(qd, qv, qe, h=h,
+                                                 alpha=alpha, beta=beta)
+            out = {"ms": np.asarray(ms),
+                   "mi": np.asarray(st.id_map)[np.asarray(mi)],
+                   "main_tombstones": tombs}
+            if snap is not None:
+                ds, di, _ = eng.search(qd, qv, qe, h=snap.capacity,
+                                       alpha=alpha, beta=beta)
+                out["ds"], out["di"] = np.asarray(ds), snap.ids[np.asarray(di)]
+            rmeta = {"gen": self.generation, "applied_seq": applied,
+                     "delta_live": snap.live if snap is not None else 0}
+        else:
+            raise ValueError(f"unknown search part {part!r}")
+        rmeta["score_s"] = time.perf_counter() - t0
+        return rmeta, out
+
+    def _op_insert(self, meta, arrays):
+        import scipy.sparse as sp
+        xs = sp.csr_matrix((arrays["data"], arrays["indices"],
+                            arrays["indptr"]),
+                           shape=tuple(np.asarray(arrays["shape"])))
+        ids = arrays["ids"] if "ids" in arrays else None
+        with self._lock:
+            self.durability.ensure_ok()
+            st = self.index.mutable_state
+            before = set(st.main_tombstones)
+            assigned = self.index.insert(xs, arrays["dense"], ids=ids)
+            seq = self.durability.log_insert(xs, arrays["dense"], assigned,
+                                             sync=False)
+            main_killed = sorted(st.main_tombstones - before)
+            delta_live = st.delta.live_count
+        self.durability.sync(seq)                # group-commit ack
+        return ({"seq": seq, "gen": self.generation,
+                 "delta_live": delta_live},
+                {"ids": np.asarray(assigned, np.int64),
+                 "main_killed": np.asarray(main_killed, np.int64)})
+
+    def _op_delete(self, meta, arrays):
+        req = np.atleast_1d(np.asarray(arrays["ids"], np.int64))
+        with self._lock:
+            self.durability.ensure_ok()
+            st = self.index.mutable_state
+            before = set(st.main_tombstones)
+            was_live = [int(e) for e in req if int(e) in st._loc]
+            killed = self.index.delete(req)
+            seq = (self.durability.log_delete(req, sync=False)
+                   if killed else 0)
+            main_killed = sorted(st.main_tombstones - before)
+            delta_live = st.delta.live_count
+        if seq:
+            self.durability.sync(seq)
+        return ({"seq": seq, "gen": self.generation, "killed": killed,
+                 "delta_live": delta_live},
+                {"killed_ids": np.asarray(sorted(was_live), np.int64),
+                 "main_killed": np.asarray(main_killed, np.int64)})
+
+    def _op_compact(self, meta, arrays):
+        retrain = meta.get("retrain")
+        with self._lock:
+            self.durability.ensure_ok()
+            new_index = self.index.compact(retrain=retrain)
+            self.durability.checkpoint(new_index)
+            self._prev_index = (self.generation, self.index)
+            self.index = new_index
+            self.generation += 1
+            self._delta_engine_cache.clear()
+            st = new_index.mutable_state
+            return ({"gen": self.generation,
+                     "num_points": new_index.engine.arrays.num_points,
+                     "d_active": new_index.engine.arrays.d_active,
+                     "next_seq": self.durability.wal.next_seq},
+                    {"cols_global_ids":
+                     np.asarray(new_index.cols.global_ids)})
+
+    def _op_wal_fetch(self, meta, arrays):
+        buf, seqs = self.durability.wal.read_frames(
+            int(meta["from_seq"]), limit=int(meta.get("limit", 256)))
+        return ({"seqs": seqs, "next_seq": self.durability.wal.next_seq},
+                {"frames": np.frombuffer(buf, np.uint8)})
+
+    def _op_store_manifest(self, meta, arrays):
+        from repro import persist
+        return {"files": persist.store_files(self.store),
+                "gen": self.generation}, {}
+
+    def _op_store_file(self, meta, arrays):
+        with open(os.path.join(self.store, meta["path"]), "rb") as f:
+            data = f.read()
+        return {}, {"data": np.frombuffer(data, np.uint8)}
+
+    def _op_reload(self, meta, arrays):
+        gen = int(meta["gen"])
+        if self.role == "scorer":
+            self._load_slice(gen)
+        elif self.role == "replica":
+            # re-bootstrap onto the primary's post-compaction store: the
+            # old local store describes a generation that no longer takes
+            # writes, so wipe it and fetch fresh, then resume shipping
+            # from the new snapshot's replay horizon
+            import shutil
+            from repro import persist
+            self._ship_paused.set()      # quiesce the tail loop first
+            with self._lock:
+                self.durability.close()
+                shutil.rmtree(self.store)
+                self._peer_client().fetch_store(self.store)
+                rec = persist.recover(self.store, backend=self.backend)
+                self.index, self.durability = rec.index, rec.durability
+                self._applied_seq = self.durability.wal.next_seq - 1
+                self.generation = gen
+                self._delta_engine_cache.clear()
+            self._ship_paused.clear()
+        else:
+            raise ValueError("primary does not reload; it compacts")
+        return {"gen": self.generation}, {}
+
+    def _op_status(self, meta, arrays):
+        out = {"role": self.role, "gen": self.generation}
+        if self.role in ("primary", "replica"):
+            st = self.index.mutable_state
+            out.update(applied_seq=self.applied_seq(),
+                       delta_live=st.delta.live_count,
+                       num_points=self.index.engine.arrays.num_points,
+                       shipping_paused=self._ship_paused.is_set())
+        else:
+            g = self._gens[self.generation]
+            out.update(num_points_local=g.engine.num_points,
+                       num_points=g.num_points_total, shard=self.shard)
+        return out, {}
+
+    def _op_info(self, meta, arrays):
+        idx = self.index
+        st = idx.mutable_state
+        return ({"gen": self.generation,
+                 "num_points": idx.engine.arrays.num_points,
+                 "d_active": idx.engine.arrays.d_active,
+                 "nq_max": idx.params.nq_max,
+                 "backend": idx.engine.backend.value,
+                 "h": 10, "alpha": idx.params.alpha,
+                 "beta": idx.params.beta,
+                 "delta_live": st.delta.live_count,
+                 "applied_seq": self.applied_seq()},
+                {"cols_global_ids": np.asarray(idx.cols.global_ids),
+                 "main_tombstones":
+                 np.asarray(sorted(st.main_tombstones), np.int64)})
+
+    def _op_fault(self, meta, arrays):
+        mode = meta["mode"]
+        if mode == "pause_shipping":
+            self._ship_paused.set()
+        elif mode == "resume_shipping":
+            self._ship_paused.clear()
+        elif mode in ("corrupt_next", "close_next"):
+            self._faults.add(mode)
+        else:
+            raise ValueError(f"unknown fault mode {mode!r}")
+        return {"mode": mode}, {}
+
+    def _op_ping(self, meta, arrays):
+        return {"pong": True}, {}
+
+    _OPS = {"search": _op_search, "insert": _op_insert,
+            "delete": _op_delete, "compact": _op_compact,
+            "wal_fetch": _op_wal_fetch, "store_manifest": _op_store_manifest,
+            "store_file": _op_store_file, "reload": _op_reload,
+            "status": _op_status, "info": _op_info, "fault": _op_fault,
+            "ping": _op_ping}
+
+    # -- server shell -----------------------------------------------------
+
+    def _handle_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    _, meta, arrays = recv_msg(conn)
+                except (ConnectionError, OSError):
+                    return
+                cmd = meta.pop("cmd", None)
+                handler = self._OPS.get(cmd)
+                try:
+                    if handler is None:
+                        raise ValueError(f"unknown command {cmd!r}")
+                    rmeta, rarr = handler(self, meta, arrays)
+                    op = MSG_RESPONSE
+                except Exception as e:           # ships as MSG_ERROR
+                    rmeta = {"error": f"{type(e).__name__}: {e}",
+                             "kind": getattr(e, "kind", type(e).__name__)}
+                    rarr, op = {}, MSG_ERROR
+                # fault injection never eats its OWN arming ack — the
+                # armed fault fires on the NEXT (non-fault) exchange
+                if cmd != "fault" and "close_next" in self._faults:
+                    self._faults.discard("close_next")
+                    return                       # drop mid-exchange
+                corrupt = cmd != "fault" and "corrupt_next" in self._faults
+                if corrupt:
+                    self._faults.discard("corrupt_next")
+                try:
+                    send_msg(conn, "reply", rmeta, rarr, op=op,
+                             corrupt=corrupt)
+                except (ConnectionError, OSError):
+                    return
+        finally:
+            conn.close()
+
+    def start(self, port: int = 0, host: str = "127.0.0.1") -> int:
+        """Bind + listen + spawn the accept loop (daemon thread); returns
+        the bound port (``port=0`` picks an ephemeral one)."""
+        self._listener = socket.create_server((host, port))
+        self._listener.settimeout(0.2)
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"{self.role}-accept").start()
+        return self._listener.getsockname()[1]
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._handle_conn, args=(conn,),
+                             daemon=True).start()
+
+    def stop(self) -> None:
+        """Stop accepting, close the listener, close the store handle."""
+        self._stop.set()
+        if self._listener is not None:
+            self._listener.close()
+        if self.durability is not None:
+            self.durability.close()
+
+
+def main(argv=None) -> int:
+    """CLI entry (``python -m repro.serve.cluster.shard_server`` or
+    ``repro.launch.serve --role shard``): bootstrap the role, bind, print
+    ``READY <port>``, serve until killed."""
+    ap = argparse.ArgumentParser(description="hybrid cluster shard server")
+    ap.add_argument("--role", required=True,
+                    choices=["primary", "scorer", "replica"])
+    ap.add_argument("--store", help="persist store root (primary/replica)")
+    ap.add_argument("--peer", help="primary host:port (scorer/replica)")
+    ap.add_argument("--shard", type=int, default=0)
+    ap.add_argument("--num-shards", type=int, default=1)
+    ap.add_argument("--workdir", help="scratch dir (scorer store fetches)")
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--port", type=int, default=0)
+    args = ap.parse_args(argv)
+    server = ShardServer(args.role, store=args.store, peer=args.peer,
+                         shard=args.shard, num_shards=args.num_shards,
+                         workdir=args.workdir, backend=args.backend)
+    server.bootstrap()
+    port = server.start(args.port)
+    print(f"READY {port}", flush=True)
+    try:
+        while not server._stop.is_set():
+            time.sleep(0.2)
+    except KeyboardInterrupt:
+        pass
+    server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

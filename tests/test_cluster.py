@@ -1,0 +1,411 @@
+"""Cross-host serving tier (repro/serve/cluster, DESIGN.md §8).
+
+The headline property (ISSUE 8 acceptance): a REAL local cluster —
+subprocess shard servers on loopback sockets, one primary + row-sliced
+scorers (+ replicas) — serves search results bit-identical (ids AND
+scores) to the in-process ``QueryService`` on the same state, across
+backends {ref, pallas, pallas-packed} × odd/even PQ subspace counts, at
+EVERY point of a random insert/upsert/delete interleaving, through
+mid-run and final compactions.
+
+Plus the fault matrix the tier must survive WITHOUT serving wrong
+answers: torn/corrupted frames healed by checksum + reconnect; a scorer
+killed -9 mid-stream failed over to a caught-up replica (bit-identical)
+or surfaced as an explicit ``DegradedResultError`` — never a silently
+truncated top-k; a replica killed mid-ingest recovering from its local
+snapshot + shipped WAL tail to the exact applied seq; read-your-writes
+watermarks excluding stale replicas; and a lagging replica's stale
+tombstone view never resurrecting a deleted id (the per-part drop
+contract of ``merge_topk_host``, unit-pinned below).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.distributed import merge_topk_host, split_index_arrays
+from repro.core.engine import Backend, ScoringEngine
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.core.sparse_index import sparse_queries_to_padded
+from repro.core.streaming import fanout_search
+from repro.data import make_hybrid_dataset
+from repro.serve import QueryService
+from repro.serve.cluster import (DegradedResultError, LocalCluster,
+                                 ShardClient, wait_ready)
+
+# -- shared tiny workload ----------------------------------------------------
+
+N0, N_POOL, NQ = 96, 140, 3
+D_SPARSE, NNZ = 240, 8
+
+_DS_CACHE = {}
+
+
+def _dataset(d_dense=16):
+    if d_dense not in _DS_CACHE:
+        _DS_CACHE[d_dense] = make_hybrid_dataset(
+            num_points=N_POOL, num_queries=NQ, d_sparse=D_SPARSE,
+            d_dense=d_dense, nnz_per_row=NNZ, seed=11)
+    return _DS_CACHE[d_dense]
+
+
+_DS = _dataset()
+
+
+def _params(backend, k):
+    return HybridIndexParams(keep_top=16, head_dims=8, kmeans_iters=2,
+                             backend=backend, pq_subspaces=k)
+
+
+def _build(backend="ref", k=4, n0=N0, mutable=True, ds=None):
+    ds = _DS if ds is None else ds
+    return HybridIndex.build(ds.x_sparse[:n0], ds.x_dense[:n0],
+                             _params(backend, k), mutable=mutable)
+
+
+def _comparator(backend="ref", k=4, ds=None):
+    return QueryService(index=_build(backend, k, ds=ds), h=8,
+                        cache_size=0, auto_compact=False)
+
+
+def _assert_parity(router, comp, session=None, ds=None):
+    ds = _DS if ds is None else ds
+    s_r, i_r = router.search_sparse(ds.q_sparse, ds.q_dense,
+                                    session=session)
+    s_c, i_c = comp.search_sparse(ds.q_sparse, ds.q_dense)
+    np.testing.assert_array_equal(i_r, i_c)
+    np.testing.assert_array_equal(s_r, s_c)
+    return s_r, i_r
+
+
+def _wait_replica_seq(handle, seq, *, timeout=60.0):
+    """Poll a replica's status until it has applied ``seq``."""
+    rc = ShardClient("127.0.0.1", handle.port)
+    try:
+        deadline = time.monotonic() + timeout
+        while True:
+            st = wait_ready(rc)
+            if st["applied_seq"] >= seq:
+                return st
+            if time.monotonic() > deadline:
+                raise AssertionError(f"replica stuck at {st}, want {seq}")
+            time.sleep(0.05)
+    finally:
+        rc.close()
+
+
+# -- the equivalence property (the acceptance criterion) ----------------------
+
+@pytest.mark.parametrize("backend,k", [
+    ("ref", 4), ("ref", 3), ("pallas", 4), ("pallas", 3),
+    ("pallas-packed", 4), ("pallas-packed", 3)])
+def test_cluster_equivalence_random_interleaving(tmp_path, backend, k):
+    """RPC results == in-process results, bit for bit, after EVERY step of
+    a random insert/upsert/delete interleaving, and through a mid-run and
+    a final cluster-orchestrated compaction."""
+    rng = np.random.default_rng(1000 + 10 * len(backend) + k)
+    ds = _dataset(16 if k % 2 == 0 else 12)   # d_dense % K == 0
+    with LocalCluster.launch(_build(backend, k, ds=ds),
+                             str(tmp_path / "c"),
+                             num_scorers=2, backend=backend) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator(backend, k, ds=ds)
+        try:
+            live = list(range(N0))
+            pool = list(range(N0, N_POOL))
+            for t in range(14):
+                if t == 7:                       # mid-run compaction
+                    g = router.compact()
+                    comp.compact()
+                    assert g == 2
+                roll = rng.random()
+                if roll < 0.55 or len(live) < 4:
+                    src = pool.pop(0)
+                    got_r = router.insert(ds.x_sparse[src],
+                                          ds.x_dense[src])
+                    got_c = comp.insert(ds.x_sparse[src],
+                                        ds.x_dense[src])
+                    np.testing.assert_array_equal(got_r, got_c)
+                    live.append(int(got_r[0]))
+                elif roll < 0.75:                # upsert a live id
+                    src = pool.pop(0)
+                    ext = int(rng.choice(live))
+                    router.insert(ds.x_sparse[src], ds.x_dense[src],
+                                  ids=[ext])
+                    comp.insert(ds.x_sparse[src], ds.x_dense[src],
+                                ids=[ext])
+                else:
+                    ext = int(rng.choice(live))
+                    assert router.delete([ext]) == comp.delete([ext]) == 1
+                    live.remove(ext)
+                # bit-identical EVERY step
+                _assert_parity(router, comp, ds=ds)
+            router.compact()
+            comp.compact()
+            _assert_parity(router, comp, ds=ds)
+            assert router.stats["queries"] > 0
+            assert router.stats["degraded"] == 0
+        finally:
+            router.close()
+            comp.close()
+
+
+# -- fault injection ----------------------------------------------------------
+
+def test_cluster_fault_matrix(tmp_path):
+    """One cluster, the whole fault matrix in sequence: replica catch-up,
+    torn/corrupt frame heal, stale-tombstone non-resurrection, RYW
+    watermark exclusion, replica kill + restart mid-ingest recovering to
+    the exact applied seq, scorer kill -9 failing over bit-identically,
+    and finally an explicit degraded error once nothing can serve."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"), num_scorers=2,
+                             num_replicas=1) as cluster:
+        r1 = cluster.router(h=8, replica_max_lag=10 ** 9)
+        comp = _comparator()
+        repl = ShardClient("127.0.0.1", cluster.replicas[0].port)
+
+        # seed mutations: inserts, an upsert, deletes (mirrored)
+        got = r1.insert(_DS.x_sparse[N0:N0 + 6], _DS.x_dense[N0:N0 + 6])
+        got_c = comp.insert(_DS.x_sparse[N0:N0 + 6], _DS.x_dense[N0:N0 + 6])
+        np.testing.assert_array_equal(got, got_c)
+        r1.insert(_DS.x_sparse[N0 + 6], _DS.x_dense[N0 + 6],
+                  ids=[int(got[0])])
+        comp.insert(_DS.x_sparse[N0 + 6], _DS.x_dense[N0 + 6],
+                    ids=[int(got[0])])
+        assert r1.delete([3, int(got[1])]) == 2
+        assert comp.delete([3, int(got_c[1])]) == 2
+
+        # 1) replica catches up to the primary's exact last seq
+        st = _wait_replica_seq(cluster.replicas[0], r1._last_seq)
+        assert st["applied_seq"] == r1._last_seq
+        assert st["delta_live"] == 5
+        _assert_parity(r1, comp)
+
+        # 2) corrupted frame: detected by checksum, healed by reconnect,
+        #    bits unchanged; a connection dropped mid-exchange heals too
+        sc = ShardClient("127.0.0.1", cluster.scorers[0].port)
+        for mode in ("corrupt_next", "close_next"):
+            sc.call("fault", {"mode": mode})
+            before = sum(c.reconnects for c in r1.scorers)
+            _assert_parity(r1, comp)
+            assert sum(c.reconnects for c in r1.scorers) == before + 1
+        sc.close()
+
+        # 3) lagging replica must NOT resurrect a deleted id: pause
+        #    shipping, delete a main-generation id, force the replica
+        #    route — the router's authoritative tombstone view drops it
+        r2 = cluster.router(h=8, prefer_replica=True,
+                            replica_max_lag=10 ** 9)
+        repl.call("fault", {"mode": "pause_shipping"})
+        assert r2.delete([7]) == comp.delete([7]) == 1
+        s_r, i_r = _assert_parity(r2, comp)
+        assert 7 not in set(i_r.ravel().tolist())
+        assert r2.stats["replica_reads"] >= 1
+
+        # 4) read-your-writes: a session write moves the watermark past
+        #    the paused replica, which is excluded until it catches up
+        sess = r2.session()
+        r2.insert(_DS.x_sparse[N0 + 7], _DS.x_dense[N0 + 7], session=sess)
+        comp.insert(_DS.x_sparse[N0 + 7], _DS.x_dense[N0 + 7])
+        assert sess.watermark == r2._last_seq
+        reads0 = r2.stats["replica_reads"]
+        _assert_parity(r2, comp, session=sess)
+        assert r2.stats["excluded_stale"] >= 1
+        assert r2.stats["replica_reads"] == reads0   # replica NOT used
+        repl.call("fault", {"mode": "resume_shipping"})
+        _wait_replica_seq(cluster.replicas[0], r2._last_seq)
+        _assert_parity(r2, comp, session=sess)
+        assert r2.stats["replica_reads"] > reads0    # now eligible again
+        r2.close()
+
+        # 5) replica killed mid-ingest: restarts from its LOCAL snapshot +
+        #    shipped WAL tail, resumes shipping, catches up to the exact
+        #    primary seq, and serves a bit-identical follower read
+        for j in range(4):
+            r1.insert(_DS.x_sparse[N0 + 8 + j], _DS.x_dense[N0 + 8 + j])
+            comp.insert(_DS.x_sparse[N0 + 8 + j], _DS.x_dense[N0 + 8 + j])
+        cluster.kill_replica(0)
+        repl.close()
+        for j in range(3):
+            r1.insert(_DS.x_sparse[N0 + 12 + j], _DS.x_dense[N0 + 12 + j])
+            comp.insert(_DS.x_sparse[N0 + 12 + j],
+                        _DS.x_dense[N0 + 12 + j])
+        cluster.restart_replica(0)
+        st = _wait_replica_seq(cluster.replicas[0], r1._last_seq)
+        assert st["applied_seq"] == r1._last_seq
+        r3 = cluster.router(h=8, prefer_replica=True,
+                            replica_max_lag=10 ** 9)
+        _assert_parity(r3, comp)
+        assert r3.stats["replica_reads"] >= 1
+        r3.close()
+
+        # 6) scorer killed -9 mid-stream: fail over to the caught-up
+        #    replica, bit-identical — never a silently truncated top-k
+        rf = cluster.router(h=8, replica_max_lag=10 ** 9)
+        cluster.kill_scorer(0)
+        _assert_parity(rf, comp)
+        assert rf.stats["failovers"] >= 1
+        assert rf.stats["replica_reads"] >= 1
+
+        # 7) replica killed too: EXPLICIT degraded error
+        cluster.kill_replica(0)
+        with pytest.raises(DegradedResultError, match="refusing"):
+            rf.search_sparse(_DS.q_sparse, _DS.q_dense)
+        assert rf.stats["degraded"] == 1
+        rf.close()
+        r1.close()
+        comp.close()
+
+
+def test_cluster_degraded_without_replicas(tmp_path):
+    """No replicas configured: a dead scorer surfaces immediately as
+    ``DegradedResultError`` (the no-silent-truncation contract)."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator()
+        _assert_parity(router, comp)
+        cluster.kill_scorer(1)
+        with pytest.raises(DegradedResultError, match="refusing"):
+            router.search_sparse(_DS.q_sparse, _DS.q_dense)
+        router.close()
+        comp.close()
+
+
+# -- concurrent mutations + background compaction -----------------------------
+
+def test_cluster_concurrent_mutations_and_compaction(tmp_path):
+    """Searches stay invariant-clean while a mutator thread inserts and
+    deletes and a background thread runs a cluster compaction: no
+    duplicate ids in a result row, no id served after its delete was
+    acked, no exceptions (generation flips retry internally)."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        lock = threading.Lock()
+        deleted_acked: set[int] = set()
+        errors: list[BaseException] = []
+        done = threading.Event()
+
+        def mutate():
+            try:
+                live = []
+                for t in range(12):
+                    if t % 3 == 2 and live:
+                        ext = live.pop(0)
+                        router.delete([ext])
+                        with lock:
+                            deleted_acked.add(ext)
+                    else:
+                        got = router.insert(_DS.x_sparse[N0 + t],
+                                            _DS.x_dense[N0 + t])
+                        live.append(int(got[0]))
+                    time.sleep(0.02)
+            except BaseException as e:
+                errors.append(e)
+            finally:
+                done.set()
+
+        def compact_bg():
+            try:
+                time.sleep(0.15)
+                router.compact()
+            except BaseException as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=mutate),
+                   threading.Thread(target=compact_bg)]
+        for th in threads:
+            th.start()
+        searches = 0
+        while not done.is_set() or searches < 6:
+            with lock:
+                dead_before = set(deleted_acked)
+            s, ids = router.search_sparse(_DS.q_sparse, _DS.q_dense)
+            searches += 1
+            for row_s, row_i in zip(s, ids):
+                valid = row_i[row_i >= 0]
+                assert len(set(valid.tolist())) == len(valid)  # no dups
+                assert not (set(valid.tolist()) & dead_before), \
+                    (valid, dead_before)
+                assert np.isfinite(row_s[row_i >= 0]).all()
+        for th in threads:
+            th.join()
+        assert not errors, errors
+        assert router.gen == 2                   # the compaction landed
+        router.close()
+
+
+# -- merge / split unit regressions (the contracts the tier rests on) ---------
+
+def test_merge_topk_host_per_part_tombstone_views():
+    """REGRESSION (ISSUE 8 satellite): ``filtered`` may be an explicit
+    per-part drop list — a lagging replica's part gets the CALLER's
+    authoritative tombstones, not one shared view, so its stale state can
+    never resurrect a deleted id."""
+    main = (np.asarray([[5.0, 4.0, 3.0]]), np.asarray([[10, 11, 12]]))
+    delta = (np.asarray([[4.5, 2.0]]), np.asarray([[13, 14]]))
+    # shared-view semantics: drop_ids hits every filtered part
+    s, i = merge_topk_host([(main[0], main[1], True),
+                            (delta[0], delta[1], False)],
+                           3, drop_ids={11})
+    np.testing.assert_array_equal(i, [[10, 13, 12]])
+    np.testing.assert_array_equal(s, [[5.0, 4.5, 3.0]])
+    # per-part view: 11 dropped from the main part only, 14 from delta's
+    s, i = merge_topk_host([(main[0], main[1], [11]),
+                            (delta[0], delta[1], [14])], 3)
+    np.testing.assert_array_equal(i, [[10, 13, 12]])
+    np.testing.assert_array_equal(s, [[5.0, 4.5, 3.0]])
+    # a drop leaving fewer than h live candidates pads with id -1
+    s, i = merge_topk_host([(main[0], main[1], [10, 11, 12])], 3)
+    np.testing.assert_array_equal(i, [[-1, -1, -1]])
+    assert not np.isfinite(s).any()
+
+
+def test_merge_topk_host_dedup_upserts():
+    """``dedup_upserts=True``: an id live in an unfiltered (delta) part
+    proves its main copies are superseded — they are dropped from every
+    filtered part even when absent from the drop lists (the cross-
+    transport upsert race, DESIGN.md §8.2)."""
+    main = (np.asarray([[5.0, 4.0]]), np.asarray([[10, 11]]))
+    delta = (np.asarray([[4.5, -np.inf]]), np.asarray([[10, 12]]))
+    s, i = merge_topk_host([(main[0], main[1], True),
+                            (delta[0], delta[1], False)],
+                           2, dedup_upserts=True)
+    # main's 10 is dropped (delta serves the upserted copy at 4.5);
+    # delta's tombstoned 12 never surfaces
+    np.testing.assert_array_equal(i, [[10, 11]])
+    np.testing.assert_array_equal(s, [[4.5, 4.0]])
+    # without the flag the stale main copy would win — the race the
+    # cluster path must close
+    s0, i0 = merge_topk_host([(main[0], main[1], True),
+                              (delta[0], delta[1], False)], 2)
+    np.testing.assert_array_equal(i0, [[10, 10]])
+
+
+def test_split_index_arrays_ragged_bit_identical():
+    """A ragged ceil-split (first ``n % S`` shards one row longer) fan-out
+    merges bit-identically to the unsharded search — the property that
+    lets the cluster tier shard a compacted corpus of arbitrary size."""
+    idx = _build(n0=95, mutable=False)
+    with pytest.raises(ValueError, match=r"equal shards.*ragged=True"):
+        split_index_arrays(idx.engine.arrays, 7)
+    with pytest.raises(ValueError, match="equal shards"):
+        split_index_arrays(idx.engine.arrays, 96)     # > n: no ragged hint
+    shards, offsets = split_index_arrays(idx.engine.arrays, 7, ragged=True)
+    sizes = [s.num_points for s in shards]
+    assert sizes == [14, 14, 14, 14, 13, 13, 13] and sum(sizes) == 95
+    np.testing.assert_array_equal(offsets, np.cumsum([0] + sizes[:-1]))
+    engines = [ScoringEngine(arrays=a, backend=Backend.REF) for a in shards]
+    qd, qv = sparse_queries_to_padded(_DS.q_sparse, idx.cols,
+                                      nq_max=idx.params.nq_max)
+    p = idx.params
+    s_f, i_f = fanout_search(engines, [8] * 7, offsets,
+                             np.asarray(idx.pi), None, None, set(),
+                             qd, qv, _DS.q_dense, h=8,
+                             alpha=p.alpha, beta=p.beta)
+    r = idx.search(_DS.q_sparse, _DS.q_dense, h=8)
+    np.testing.assert_array_equal(i_f, np.asarray(r.ids))
+    np.testing.assert_array_equal(s_f, np.asarray(r.scores))

@@ -118,12 +118,13 @@ DOC_GATED_PACKAGES = ("serve", "persist")
 
 
 def check_api_docstrings(errors: list[str]) -> None:
-    """The serving layer (src/repro/serve/, DESIGN.md §5) and the
-    durability layer (src/repro/persist/, DESIGN.md §7) are documented
-    interfaces: every public function, class, and method needs a
-    docstring."""
+    """The serving layer (src/repro/serve/, DESIGN.md §5), the durability
+    layer (src/repro/persist/, DESIGN.md §7), and the cluster tier
+    (src/repro/serve/cluster/, DESIGN.md §8) are documented interfaces:
+    every public function, class, and method needs a docstring.  rglob so
+    nested packages (serve/cluster/) are gated too."""
     for pkg in DOC_GATED_PACKAGES:
-        for path in sorted((REPO / "src" / "repro" / pkg).glob("*.py")):
+        for path in sorted((REPO / "src" / "repro" / pkg).rglob("*.py")):
             rel = path.relative_to(REPO)
             tree = ast.parse(path.read_text(errors="replace"))
             for name, node in _public_defs(tree):
