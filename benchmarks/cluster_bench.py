@@ -1,13 +1,24 @@
 """Cluster serving benchmark (DESIGN.md §8): router fan-out QPS vs the
-in-process service, the per-hop latency breakdown, and replica catch-up
-rate over WAL shipping.
+in-process service, wire-level batching before/after, multi-router and
+failover probes, the per-hop latency breakdown, and replica catch-up rate
+over WAL shipping.
 
 Spawns a REAL local cluster (subprocess shard servers on loopback — the
-same harness the fault tests use), then measures:
+same harness the fault tests use) with FOUR scorers + one replica, then
+measures:
 
 * router QPS at batch sizes Q ∈ {1, 8, 32} against the in-process
-  ``QueryService`` on the same built index (the cost of crossing a
-  socket, paid per batch);
+  ``QueryService`` on the same built index, under BOTH wire disciplines:
+  ``lockstep`` (one blocking RPC per shard per chunk — the pre-batching
+  shape) and the default pipelined+coalesced path (every request on the
+  wire before any reply is read, one shared pre-serialized frame per
+  fetch depth, concurrent chunks folded into ``msearch`` frames, §8.8);
+* two routers sharing the cluster: cross-router mutation visibility
+  (server-side authority, §8.4) asserted bit-identical, and aggregate
+  concurrent-search throughput;
+* failover: SIGKILL the primary, ``failover()`` promotes the caught-up
+  replica, and the first post-promotion search — timed end to end and
+  asserted bit-identical to the in-process comparator (§8.7);
 * the router's per-hop breakdown {serialize, wire, score, merge} from its
   ``hop_s`` counters, normalized per query;
 * replica catch-up: shipping paused, a burst of mutations logged at the
@@ -18,11 +29,16 @@ Emits CSV rows like the other benchmark modules AND writes
 ``BENCH_cluster.json`` (README "Cluster" schema):
 
     workload              points/dims/scorers of the spawned cluster
-    qps                   per Q: {router_qps, inproc_qps, rpc_overhead_x}
+    qps                   per Q: {router_qps, inproc_qps, rpc_overhead_x,
+                          lockstep_qps, rpc_overhead_x_lockstep,
+                          batching_speedup_x}
     hops                  {serialize_us, wire_us, score_us, merge_us} per
                           query, plus the raw totals
+    multi_router          {routers, agg_qps, equivalence_checked}
+    failover              {promote_s, first_search_s, term,
+                          equivalence_checked}
     replication           {burst_records, catchup_s, catchup_records_per_s}
-    equivalence_checked   true — one bitwise ids+scores parity assertion
+    equivalence_checked   true — bitwise ids+scores parity assertions
                           between router and in-process results ran inside
                           the bench (a benchmark of the WRONG answer is
                           worthless)
@@ -37,6 +53,7 @@ import argparse
 import json
 import shutil
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -51,12 +68,28 @@ from .common import emit
 OUT_JSON = "BENCH_cluster.json"
 H = 10
 BATCHES = (1, 8, 32)
+NUM_SCORERS = 4
 
 
 def _sub(ds, q):
     """First ``q`` queries of the dataset (router and service both
     bucket-pad, so parity holds at any batch size)."""
     return ds.q_sparse[:q], ds.q_dense[:q]
+
+
+def _assert_parity(router, comp, qs, qd):
+    s_r, i_r = router.search_sparse(qs, qd)
+    s_c, i_c = comp.search_sparse(qs, qd)
+    np.testing.assert_array_equal(i_r, i_c)
+    np.testing.assert_array_equal(s_r, s_c)
+
+
+def _time_search(router, qs, qd, iters):
+    router.search_sparse(qs, qd)                # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        router.search_sparse(qs, qd)
+    return (time.perf_counter() - t0) / iters
 
 
 def main(smoke: bool = False):
@@ -71,7 +104,8 @@ def main(smoke: bool = False):
     params = HybridIndexParams(keep_top=24, head_dims=16, kmeans_iters=2)
     tmp = tempfile.mkdtemp(prefix="cluster-bench-")
     out: dict = {"workload": {"num_points": n, "d_sparse": d_s,
-                              "d_dense": 32, "num_scorers": 2, "h": H},
+                              "d_dense": 32, "num_scorers": NUM_SCORERS,
+                              "h": H},
                  "qps": {}, "smoke": smoke}
     try:
         idx = HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n], params,
@@ -80,42 +114,41 @@ def main(smoke: bool = False):
             index=HybridIndex.build(ds.x_sparse[:n], ds.x_dense[:n],
                                     params, mutable=True),
             h=H, cache_size=0, auto_compact=False)
-        with LocalCluster.launch(idx, tmp, num_scorers=2,
+        with LocalCluster.launch(idx, tmp, num_scorers=NUM_SCORERS,
                                  num_replicas=1) as cluster:
             router = cluster.router(h=H)
+            r_lock = cluster.router(h=H, lockstep=True)
 
             # -- equivalence gate: a fast wrong answer is no answer -------
             qs, qd = _sub(ds, max(BATCHES))
-            s_r, i_r = router.search_sparse(qs, qd)
-            s_c, i_c = comp.search_sparse(qs, qd)
-            np.testing.assert_array_equal(i_r, i_c)
-            np.testing.assert_array_equal(s_r, s_c)
+            _assert_parity(router, comp, qs, qd)
+            _assert_parity(r_lock, comp, qs, qd)
             out["equivalence_checked"] = True
 
-            # -- QPS: router fan-out vs in-process, per batch size --------
+            # -- QPS: pipelined vs lockstep vs in-process, per Q ----------
             for q in BATCHES:
                 qs, qd = _sub(ds, q)
-                router.search_sparse(qs, qd)        # warm both paths
-                comp.search_sparse(qs, qd)
+                comp.search_sparse(qs, qd)          # warm
                 for k in router.hop_s:              # hops: measured runs
                     router.hop_s[k] = 0.0
-                t0 = time.perf_counter()
-                for _ in range(iters):
-                    router.search_sparse(qs, qd)
-                router_s = (time.perf_counter() - t0) / iters
+                router_s = _time_search(router, qs, qd, iters)
+                lock_s = _time_search(r_lock, qs, qd, iters)
                 t0 = time.perf_counter()
                 for _ in range(iters):
                     comp.search_sparse(qs, qd)
                 inproc_s = (time.perf_counter() - t0) / iters
-                router_qps = q / router_s
-                inproc_qps = q / inproc_s
                 out["qps"][str(q)] = {
-                    "router_qps": router_qps, "inproc_qps": inproc_qps,
-                    "rpc_overhead_x": router_s / inproc_s}
+                    "router_qps": q / router_s,
+                    "lockstep_qps": q / lock_s,
+                    "inproc_qps": q / inproc_s,
+                    "rpc_overhead_x": router_s / inproc_s,
+                    "rpc_overhead_x_lockstep": lock_s / inproc_s,
+                    "batching_speedup_x": lock_s / router_s}
                 emit(f"cluster_router_q{q}", router_s * 1e6,
-                     f"router_qps={router_qps:.1f};"
-                     f"inproc_qps={inproc_qps:.1f};"
-                     f"overhead={router_s / inproc_s:.2f}x")
+                     f"router_qps={q / router_s:.1f};"
+                     f"inproc_qps={q / inproc_s:.1f};"
+                     f"overhead={router_s / inproc_s:.2f}x;"
+                     f"lockstep_overhead={lock_s / inproc_s:.2f}x")
 
             # per-hop breakdown of the LAST batch-size loop, per query
             nq = max(BATCHES) * iters
@@ -126,11 +159,40 @@ def main(smoke: bool = False):
                  ";".join(f"{k}={v / nq * 1e6:.0f}us"
                           for k, v in router.hop_s.items()))
 
+            # -- two routers, one truth (DESIGN.md §8.4) ------------------
+            # a delete through the SECOND router is immediately visible —
+            # bit-identically — through the first (server-side authority)
+            r_lock.delete([0])
+            comp.delete([0])
+            qs, qd = _sub(ds, max(BATCHES))
+            _assert_parity(router, comp, qs, qd)
+            qs1, qd1 = _sub(ds, 8)
+            done = []
+            def hammer(r):
+                for _ in range(iters):
+                    r.search_sparse(qs1, qd1)
+                done.append(1)
+            t0 = time.perf_counter()
+            ths = [threading.Thread(target=hammer, args=(r,))
+                   for r in (router, r_lock)]
+            for t in ths:
+                t.start()
+            for t in ths:
+                t.join()
+            multi_s = time.perf_counter() - t0
+            agg = 2 * 8 * iters / multi_s
+            out["multi_router"] = {"routers": 2, "agg_qps": agg,
+                                   "equivalence_checked": True}
+            emit("cluster_multi_router", multi_s / (2 * iters) * 1e6,
+                 f"routers=2;agg_qps={agg:.1f}")
+            r_lock.close()
+
             # -- replica catch-up rate over WAL shipping ------------------
             repl = ShardClient("127.0.0.1", cluster.replicas[0].port)
             repl.call("fault", {"mode": "pause_shipping"})
             for j in range(burst):
                 router.insert(ds.x_sparse[n + j], ds.x_dense[n + j])
+                comp.insert(ds.x_sparse[n + j], ds.x_dense[n + j])
             repl.call("fault", {"mode": "resume_shipping"})
             t0 = time.perf_counter()
             while True:
@@ -146,6 +208,21 @@ def main(smoke: bool = False):
                                   "catchup_records_per_s": rate}
             emit("cluster_replica_catchup", catchup_s * 1e6,
                  f"records={burst};records_per_s={rate:.1f}")
+
+            # -- failover: kill the coordinator, promote, keep serving ----
+            qs, qd = _sub(ds, max(BATCHES))
+            cluster.kill_primary()
+            t0 = time.perf_counter()
+            term = router.failover()
+            promote_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            _assert_parity(router, comp, qs, qd)    # bit-identical AFTER
+            first_search_s = time.perf_counter() - t0
+            out["failover"] = {"promote_s": promote_s,
+                               "first_search_s": first_search_s,
+                               "term": term, "equivalence_checked": True}
+            emit("cluster_failover", promote_s * 1e6,
+                 f"term={term};first_search_us={first_search_s * 1e6:.0f}")
             router.close()
         comp.close()
         with open(OUT_JSON, "w") as f:

@@ -15,7 +15,7 @@
 from .snapshot import (FORMAT_VERSION, list_snapshots,  # noqa: F401
                        load_snapshot, read_current, store_files,
                        write_snapshot)
-from .wal import (RECORD_DELETE, RECORD_INSERT, MutationWAL,  # noqa: F401
-                  WalRecord)
+from .wal import (RECORD_DELETE, RECORD_INSERT, RECORD_NOOP,  # noqa: F401
+                  MutationWAL, WalRecord)
 from .recovery import (Durability, RecoveryResult, apply_record,  # noqa: F401
                        bootstrap, recover)

@@ -30,7 +30,7 @@ import numpy as np
 import scipy.sparse as sp
 
 from .snapshot import load_snapshot, read_current, write_snapshot
-from .wal import RECORD_DELETE, RECORD_INSERT, MutationWAL
+from .wal import RECORD_DELETE, RECORD_INSERT, RECORD_NOOP, MutationWAL
 
 __all__ = ["Durability", "RecoveryResult", "recover", "bootstrap",
            "apply_record"]
@@ -61,6 +61,8 @@ def apply_record(index, record) -> None:
         index.mutable_state.insert(xs, a["dense"], ids=a["ids"])
     elif record.kind == RECORD_DELETE:
         index.mutable_state.delete(record.arrays["ids"])
+    elif record.kind == RECORD_NOOP:
+        pass          # term barrier: advances the applied seq, nothing else
     else:
         raise ValueError(f"unknown WAL record kind {record.kind!r} "
                          f"at seq {record.seq}")
@@ -118,6 +120,16 @@ class Durability:
         (``ensure_ok``)."""
         try:
             return self.wal.append_delete(ids, sync=sync)
+        except BaseException:
+            self.failed = True
+            raise
+
+    def log_noop(self, *, sync: bool | None = None) -> int:
+        """Log a term-barrier no-op (``MutationWAL.append_noop``) — the
+        first record a freshly promoted primary writes; returns its WAL
+        seq.  An append failure poisons the handle (``ensure_ok``)."""
+        try:
+            return self.wal.append_noop(sync=sync)
         except BaseException:
             self.failed = True
             raise
@@ -203,7 +215,12 @@ def recover(root: str, *, backend=None, sync: bool = True,
             f"{root!r} has no committed snapshot store (CURRENT missing); "
             "bootstrap one with persist.bootstrap(root, index)")
     index, manifest = load_snapshot(root, backend=backend, verify=verify)
-    wal = MutationWAL(os.path.join(root, _WAL_SUBDIR), sync=sync)
+    # a store with no WAL files yet (a follower's freshly fetched snapshot
+    # — WAL segments are never part of snapshot distribution) starts its
+    # log AT the snapshot's replay horizon, so shipped frames continue it
+    # without a fake gap
+    wal = MutationWAL(os.path.join(root, _WAL_SUBDIR), sync=sync,
+                      start_seq=int(manifest["replay_from_seq"]))
     replayed, last_seq = 0, 0
     for record in wal.records(from_seq=manifest["replay_from_seq"]):
         apply_record(index, record)

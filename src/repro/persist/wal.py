@@ -8,17 +8,27 @@ encoded index state: replay re-runs the exact ``core/streaming.py``
 encode-on-insert machinery, which is what makes a recovered index
 bit-identical to the never-crashed one (tests/test_persist.py).
 
-Frame format (little-endian, 19-byte header)::
+Frame format (little-endian, 27-byte header)::
 
     magic   2s   b"WR"
     kind    u8   1 = insert, 2 = delete
     seq     u64  global monotone mutation sequence number
+    term    u64  monotone primary term (DESIGN.md §8.7): every record is
+                 stamped with the term of the primary that wrote it, and a
+                 log refuses shipped frames from a LOWER term than its own
+                 — the fence that stops a zombie ex-primary's post-
+                 promotion writes from entering a follower's log
     length  u32  payload byte count
-    crc32   u32  zlib.crc32 of magic+kind+seq+length THEN the payload —
-                 the header fields are covered too, so a flipped bit in
-                 ``seq`` or ``kind`` is a detected error, not a silently
-                 skipped or reordered mutation
+    crc32   u32  zlib.crc32 of magic+kind+seq+term+length THEN the payload
+                 — the header fields are covered too, so a flipped bit in
+                 ``seq``, ``term`` or ``kind`` is a detected error, not a
+                 silently skipped or reordered mutation
     payload      checkpoint.leaves.pack_arrays of the record's arrays
+
+The current term persists in a ``TERM`` file beside the segments (written
+atomically + fsync'd by ``set_term``) and is additionally recovered from
+the scanned active segment's records, so a restarted node can never
+come back believing an OLDER term than anything it durably wrote.
 
 Truncation policy: a reader stops at the FIRST anomaly — short header,
 wrong magic, short payload, or crc mismatch — and everything before it is
@@ -49,32 +59,37 @@ import numpy as np
 
 from repro.checkpoint.leaves import fsync_dir, pack_arrays, unpack_arrays
 
-__all__ = ["MutationWAL", "WalRecord", "RECORD_INSERT", "RECORD_DELETE"]
+__all__ = ["MutationWAL", "WalRecord", "RECORD_INSERT", "RECORD_DELETE",
+           "RECORD_NOOP"]
 
 RECORD_INSERT = 1
 RECORD_DELETE = 2
+RECORD_NOOP = 3       # term barrier: no state change, just a durable term
 
 _MAGIC = b"WR"
-_HEADER = struct.Struct("<2sBQII")      # magic, kind, seq, length, crc32
-_PREFIX = struct.Struct("<2sBQI")       # the crc-covered header fields
+_HEADER = struct.Struct("<2sBQQII")     # magic, kind, seq, term, len, crc32
+_PREFIX = struct.Struct("<2sBQQI")      # the crc-covered header fields
 _SEG_PREFIX, _SEG_SUFFIX = "wal-", ".log"
+_TERM_FILE = "TERM"
 
 
-def _frame_crc(kind: int, seq: int, payload: bytes) -> int:
-    """crc32 over the header prefix (magic, kind, seq, length) AND the
-    payload, so header corruption is detected, not silently replayed."""
+def _frame_crc(kind: int, seq: int, term: int, payload: bytes) -> int:
+    """crc32 over the header prefix (magic, kind, seq, term, length) AND
+    the payload, so header corruption is detected, not silently replayed."""
     return zlib.crc32(payload,
-                      zlib.crc32(_PREFIX.pack(_MAGIC, kind, seq,
+                      zlib.crc32(_PREFIX.pack(_MAGIC, kind, seq, term,
                                               len(payload))))
 
 
 @dataclasses.dataclass(frozen=True)
 class WalRecord:
     """One decoded WAL record: the mutation kind, its global sequence
-    number, and the payload arrays (``pack_arrays`` names)."""
+    number, the primary term that wrote it, and the payload arrays
+    (``pack_arrays`` names)."""
     seq: int
     kind: int
     arrays: dict
+    term: int = 1
 
 
 def _segment_path(wal_dir: str, first_seq: int) -> str:
@@ -102,13 +117,14 @@ def _scan_segment(path: str):
         header = buf[off:off + _HEADER.size]
         if len(header) < _HEADER.size:
             return records, off, len(header) == 0
-        magic, kind, seq, length, crc = _HEADER.unpack(header)
+        magic, kind, seq, term, length, crc = _HEADER.unpack(header)
         if magic != _MAGIC:
             return records, off, False
         payload = buf[off + _HEADER.size:off + _HEADER.size + length]
-        if len(payload) < length or _frame_crc(kind, seq, payload) != crc:
+        if len(payload) < length or \
+                _frame_crc(kind, seq, term, payload) != crc:
             return records, off, False
-        records.append(WalRecord(seq=seq, kind=kind,
+        records.append(WalRecord(seq=seq, kind=kind, term=term,
                                  arrays=unpack_arrays(payload)))
         off += _HEADER.size + length
 
@@ -122,9 +138,9 @@ def _has_valid_frame_after(buf: bytes, start: int) -> bool:
     while i != -1:
         header = buf[i:i + _HEADER.size]
         if len(header) == _HEADER.size:
-            magic, kind, seq, length, crc = _HEADER.unpack(header)
+            magic, kind, seq, term, length, crc = _HEADER.unpack(header)
             payload = buf[i + _HEADER.size:i + _HEADER.size + length]
-            if len(payload) == length and _frame_crc(kind, seq,
+            if len(payload) == length and _frame_crc(kind, seq, term,
                                                      payload) == crc:
                 return True
         i = buf.find(_MAGIC, i + 1)
@@ -149,7 +165,8 @@ class MutationWAL:
     ``append_many`` amortizes framing + flush + fsync over a whole batch
     explicitly."""
 
-    def __init__(self, wal_dir: str, *, sync: bool = True):
+    def __init__(self, wal_dir: str, *, sync: bool = True,
+                 start_seq: int = 1):
         self.wal_dir = wal_dir
         self.sync = sync
         # _append_lock orders frame bytes + next_seq; _sync_lock serializes
@@ -158,13 +175,19 @@ class MutationWAL:
         self._append_lock = threading.Lock()
         self._sync_lock = threading.Lock()
         os.makedirs(wal_dir, exist_ok=True)
+        self.term = self._read_term_file()
         self._segments = sorted(
             s for s in (_segment_first_seq(n) for n in os.listdir(wal_dir))
             if s is not None)
-        self.next_seq = 1
+        # ``start_seq``: first sequence number of a BRAND-NEW log (ignored
+        # when segments already exist).  A follower bootstrapping from a
+        # fetched snapshot has no WAL files, but the snapshot's replay
+        # horizon is ``replay_from_seq`` — its log must continue THERE, or
+        # the first shipped frame after a compaction would look like a gap.
+        self.next_seq = start_seq
         if not self._segments:
-            self._segments = [1]
-            self._file = open(_segment_path(wal_dir, 1), "ab")
+            self._segments = [start_seq]
+            self._file = open(_segment_path(wal_dir, start_seq), "ab")
         else:
             active = _segment_path(wal_dir, self._segments[-1])
             records, valid, clean = _scan_segment(active)
@@ -181,19 +204,61 @@ class MutationWAL:
                     f.truncate(valid)
             self.next_seq = (records[-1].seq + 1 if records
                              else self._segments[-1])
+            # a durably written record proves its term was adopted, even
+            # if the crash beat the TERM-file write
+            if records:
+                self.term = max(self.term,
+                                max(r.term for r in records))
             self._file = open(active, "ab")
         # nothing is pending at open: everything on disk counts as synced
         self._synced_seq = self.next_seq - 1
+
+    # -- term fencing (DESIGN.md §8.7) -------------------------------------
+
+    def _read_term_file(self) -> int:
+        path = os.path.join(self.wal_dir, _TERM_FILE)
+        if not os.path.exists(path):
+            return 1
+        with open(path) as f:
+            return int(f.read().strip())
+
+    def set_term(self, term: int) -> None:
+        """Adopt a HIGHER primary term (promotion, or learning of one from
+        shipped frames) and persist it durably before any record can be
+        stamped with it.  A term can never go backwards: lowering it would
+        re-admit a fenced-off zombie primary's writes."""
+        with self._append_lock:
+            self._adopt_term(int(term))
+
+    def _adopt_term(self, term: int) -> None:
+        """Persist + adopt a term (caller holds ``_append_lock``)."""
+        if term < self.term:
+            raise ValueError(
+                f"term {term} < current term {self.term} — terms are "
+                "monotone; a lowered term would unfence a zombie primary")
+        if term == self.term:
+            return
+        path = os.path.join(self.wal_dir, _TERM_FILE)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(term))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        fsync_dir(self.wal_dir)
+        self.term = term
 
     # -- append -----------------------------------------------------------
 
     def _write_frame(self, kind: int, arrays: dict) -> int:
         """Frame + buffer one record (caller holds ``_append_lock``);
-        returns its sequence number.  No flush — the caller batches."""
+        returns its sequence number.  No flush — the caller batches.
+        Records are stamped with the log's current term."""
         seq = self.next_seq
         payload = pack_arrays(arrays)
-        frame = _HEADER.pack(_MAGIC, kind, seq, len(payload),
-                             _frame_crc(kind, seq, payload)) + payload
+        frame = _HEADER.pack(_MAGIC, kind, seq, self.term, len(payload),
+                             _frame_crc(kind, seq, self.term,
+                                        payload)) + payload
         self._file.write(frame)
         self.next_seq = seq + 1
         return seq
@@ -260,6 +325,15 @@ class MutationWAL:
         return self.append(RECORD_DELETE,
                            {"ids": np.atleast_1d(np.asarray(ids, np.int64))},
                            sync=sync)
+
+    def append_noop(self, *, sync: bool | None = None) -> int:
+        """Log a TERM BARRIER: a record with no state effect whose only job
+        is to carry the log's current term (DESIGN.md §8.7).  A freshly
+        promoted primary appends one immediately, so the first frame it
+        ships proves the new term to every follower — after a follower
+        applies it, a deposed primary's same-seq frames are refused by the
+        term fence instead of racing the real ones."""
+        return self.append(RECORD_NOOP, {}, sync=sync)
 
     # -- segmentation -----------------------------------------------------
 
@@ -329,10 +403,10 @@ class MutationWAL:
                 header = buf[off:off + _HEADER.size]
                 if len(header) < _HEADER.size:
                     break
-                magic, kind, seq, length, crc = _HEADER.unpack(header)
+                magic, kind, seq, term, length, crc = _HEADER.unpack(header)
                 payload = buf[off + _HEADER.size:off + _HEADER.size + length]
                 if (magic != _MAGIC or len(payload) < length
-                        or _frame_crc(kind, seq, payload) != crc):
+                        or _frame_crc(kind, seq, term, payload) != crc):
                     break            # torn/unflushed tail: stop shipping
                 if seq >= from_seq:
                     out.append(buf[off:off + _HEADER.size + length])
@@ -349,7 +423,12 @@ class MutationWAL:
         ``next_seq`` (shipping is resumable but never leaves a gap: a
         restarted replica recovers to its exact applied seq and re-requests
         from there).  Frames the log already holds (seq < next_seq) are
-        skipped, so an overlapping re-ship is idempotent.  Durability
+        skipped, so an overlapping re-ship is idempotent.  A frame stamped
+        with a term LOWER than this log's current term is REFUSED — the
+        zombie fence (DESIGN.md §8.7): once a follower has learned of term
+        T (promotion, or a shipped term-T record), nothing the deposed
+        term-(T-1) primary keeps writing can enter its log.  A higher term
+        is adopted (and persisted) before the frame lands.  Durability
         follows the log's sync policy.  Returns the decoded records that
         were appended, in order, for the caller to apply."""
         appended: list[WalRecord] = []
@@ -359,10 +438,10 @@ class MutationWAL:
                 header = buf[off:off + _HEADER.size]
                 if len(header) < _HEADER.size:
                     raise ValueError("shipped WAL buffer ends mid-header")
-                magic, kind, seq, length, crc = _HEADER.unpack(header)
+                magic, kind, seq, term, length, crc = _HEADER.unpack(header)
                 payload = buf[off + _HEADER.size:off + _HEADER.size + length]
                 if (magic != _MAGIC or len(payload) < length
-                        or _frame_crc(kind, seq, payload) != crc):
+                        or _frame_crc(kind, seq, term, payload) != crc):
                     raise ValueError(
                         f"shipped WAL frame at offset {off} failed its "
                         "checksum — refusing to persist garbage")
@@ -370,13 +449,20 @@ class MutationWAL:
                 if seq < self.next_seq:
                     off = frame_end          # already have it: idempotent
                     continue
+                if term < self.term:
+                    raise ValueError(
+                        f"shipped WAL frame seq {seq} carries term {term} "
+                        f"< this log's term {self.term} — refusing a "
+                        "deposed (zombie) primary's write")
                 if seq != self.next_seq:
                     raise ValueError(
                         f"shipped WAL frame seq {seq} does not continue "
                         f"this log (expected {self.next_seq}) — a gap "
                         "would silently lose mutations")
+                if term > self.term:
+                    self._adopt_term(term)
                 self._file.write(buf[off:frame_end])
-                appended.append(WalRecord(seq=seq, kind=kind,
+                appended.append(WalRecord(seq=seq, kind=kind, term=term,
                                           arrays=unpack_arrays(payload)))
                 self.next_seq = seq + 1
                 off = frame_end

@@ -4,27 +4,33 @@ replication — the paper's §7.2 many-server deployment, made concrete.
 * ``protocol`` — length-prefixed, crc-checksummed frames carrying a JSON
   meta line + bit-exact packed tensors (§8.1);
 * ``shard_server`` — one process per role: ``primary`` (mutations + delta
-  + persist store), ``scorer`` (one ragged row slice of the ONE build),
-  ``replica`` (full follower via snapshot distribution + WAL shipping,
-  §8.3);
-* ``client`` — reconnecting ``ShardClient`` + the remote ``ShardSearcher``
-  handles ``fanout_search`` dispatches like in-process engines;
-* ``router`` — bucketed fan-out, authoritative per-generation tombstone
-  overlay at the merge, read-your-writes watermarks, explicit
-  ``DegradedResultError`` instead of silently truncated top-k (§8.2,
-  §8.4);
+  + persist store + the AUTHORITATIVE (term, epoch)-tagged liveness
+  state), ``scorer`` (one ragged row slice of the ONE build), ``replica``
+  (full follower via snapshot distribution + WAL shipping, promotable to
+  primary under term fencing, §8.3, §8.7);
+* ``client`` — pipelining ``ShardClient`` (submit/PendingReply +
+  same-shard request coalescing into ``msearch`` frames, §8.8) + the
+  remote ``ShardSearcher`` handles that dispatch like in-process engines;
+* ``router`` — bucketed fan-out merging under server-side authority
+  (epoch-validated cache), read-your-writes watermarks, deterministic
+  ``failover()`` election, explicit ``DegradedResultError`` instead of
+  silently truncated top-k (§8.2, §8.4, §8.7);
 * ``local`` — subprocess launcher for tests/benchmarks/demos.
 
 The contract the test harness (tests/test_cluster.py) pins: RPC results
 are bit-identical — ids AND scores — to the in-process ``QueryService``
-fan-out on the same state, across backends, odd/even K, and every
-mutation interleaving.
+fan-out on the same state, for ANY number of routers sharing the cluster,
+across backends, odd/even K, every mutation interleaving, and across a
+primary failover.
 """
 
-from .client import (RemoteDeltaEngine, RemoteMainEngine,  # noqa: F401
-                     ShardClient, ShardUnavailableError, wait_ready)
+from .client import (PendingReply, RemoteDeltaEngine,      # noqa: F401
+                     RemoteMainEngine, ShardClient,
+                     ShardUnavailableError, wait_ready)
 from .local import LocalCluster, NodeHandle                # noqa: F401
-from .protocol import RemoteError, TornFrameError          # noqa: F401
+from .protocol import (RemoteError, TornFrameError,        # noqa: F401
+                       build_frame)
 from .router import (ClusterRouter, DegradedResultError,   # noqa: F401
-                     Session)
-from .shard_server import ShardServer, StaleGenerationError  # noqa: F401
+                     FailoverError, Session, StaleTermError)
+from .shard_server import (NotPrimaryError, PromotionError,  # noqa: F401
+                           ShardServer, StaleGenerationError)

@@ -151,6 +151,13 @@ class LocalCluster:
                              [s.addr for s in self.scorers],
                              [r.addr for r in self.replicas], **kw)
 
+    def kill_primary(self) -> None:
+        """SIGKILL the primary mid-whatever-it-was-doing — the failover
+        suite's inciting incident.  The handle stays in the topology (a
+        router holding its address gets ``ShardUnavailableError``); use
+        ``ClusterRouter.failover()`` to promote a replica in its place."""
+        self.primary.kill()
+
     def kill_scorer(self, i: int) -> None:
         """SIGKILL scorer ``i`` (it stays in the topology — routers that
         contact it get ``ShardUnavailableError`` and fail over)."""

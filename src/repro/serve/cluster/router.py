@@ -1,8 +1,8 @@
-"""Cluster router: bucketed fan-out over RPC shards + authoritative
-host-side merge (DESIGN.md §8.2, §8.4) — the cross-host form of
-``QueryService``'s in-process fan-out, sharing its actual machinery:
-``bucket_for``/``pad_rows`` for micro-batching, ``plan_overfetch`` for
-tombstone slack, ``fanout_search``/``merge_topk_host`` for the merge.
+"""Cluster router: bucketed fan-out over RPC shards + host-side merge
+under SERVER-SIDE authority (DESIGN.md §8.2, §8.4) — the cross-host form
+of ``QueryService``'s in-process fan-out, sharing its actual machinery:
+``bucket_for``/``pad_rows`` for micro-batching, the ``plan_overfetch``
+budget formula for tombstone slack, ``merge_topk_host`` for the merge.
 
 Topology: N ``scorer`` servers each hold one contiguous row slice of the
 ONE build (bit-identity depends on that — frozen artifacts are global,
@@ -13,12 +13,22 @@ exactly the in-process ``[main shards…, delta]`` — so stable-sort
 tie-breaking, and therefore every bit of every result, matches the
 single-process service.
 
-Tombstones are filtered HERE, from the router's authoritative per-
-generation view (accumulated from mutation acks), never from a shard's
-possibly-stale view — the ``merge_topk_host`` per-part drop fix this PR
-pins: a lagging replica cannot resurrect a deleted id because the router
-overlays ``fully_deleted`` on the replica's parts at merge time
-(DESIGN.md §8.4).
+AUTHORITY IS SERVER-SIDE: the primary versions its liveness state
+(tombstones, fully-deleted overlay, delta live count) with a
+``(term, epoch)`` tag; this router keeps only a CACHE of it.  Every chunk
+dispatches the delta request as a validation channel carrying the cached
+tag — a mismatched response piggybacks the authoritative sets, and the
+merge always uses the authoritative view, re-deepening main fetches when
+the cache under-budgeted the overfetch.  That is what makes N routers
+over one cluster bit-identical to one router: no router ever merges from
+private state another router cannot see (DESIGN.md §8.4).
+
+Failover (DESIGN.md §8.7): ``failover()`` runs a deterministic election
+over the replica set (most-applied wins, ties to the lowest index),
+promotes the winner via the ``promote`` op — gated server-side on having
+applied every sealed seq — and re-points every node at it.  The promoted
+term fences the deposed primary: any response carrying a lower term
+raises ``StaleTermError`` instead of being folded into state.
 
 Read-your-writes: every mutation ack carries its WAL seq; a ``Session``
 records the max as its watermark, and follower reads are only served by a
@@ -39,14 +49,13 @@ import numpy as np
 from repro.core.distributed import ceil16, merge_topk_host
 from repro.core.sparse_index import (CompactColumns,
                                      sparse_queries_to_padded)
-from repro.core.streaming import fanout_search, plan_overfetch
 from repro.serve.query_service import DEFAULT_BUCKETS, bucket_for, pad_rows
 
-from .client import (RemoteDeltaEngine, RemoteMainEngine, ShardClient,
-                     ShardUnavailableError)
-from .protocol import RemoteError
+from .client import ShardClient, ShardUnavailableError
+from .protocol import RemoteError, build_frame
 
-__all__ = ["ClusterRouter", "Session", "DegradedResultError"]
+__all__ = ["ClusterRouter", "Session", "DegradedResultError",
+           "StaleTermError", "FailoverError"]
 
 
 class DegradedResultError(RuntimeError):
@@ -56,16 +65,61 @@ class DegradedResultError(RuntimeError):
     looks right, which the fault-injection suite forbids."""
 
 
+class StaleTermError(RuntimeError):
+    """A response carried a fencing term LOWER than one this router has
+    already observed: it came from a deposed (zombie) primary.  Its ack is
+    refused — the mutation may sit in the zombie's log, but the promoted
+    primary's log will never contain it, so folding it into watermarks or
+    tombstone state would invent durability (DESIGN.md §8.7)."""
+
+
+class FailoverError(RuntimeError):
+    """No promotion candidate survives the eligibility gate (applied every
+    sealed seq, same generation, reachable).  Promoting anything else
+    would lose acked mutations, so the election refuses instead."""
+
+
 @dataclasses.dataclass
 class Session:
     """Read-your-writes handle: ``watermark`` is the WAL seq of this
-    session's last acked write; reads made with the session are only
-    served by state that has applied at least that seq."""
-    watermark: int = 0
+    session's last acked write (-1 = no writes observed yet; real seqs
+    start at 1, and seq 0 never occurs); reads made with the session are
+    only served by state that has applied at least that seq."""
+    watermark: int = -1
 
     def observe(self, seq: int) -> None:
         """Fold an acked write's seq into the watermark."""
         self.watermark = max(self.watermark, int(seq))
+
+
+@dataclasses.dataclass(frozen=True)
+class _PinnedState:
+    """One consistent router-state snapshot for a chunk's lifetime (the
+    cross-host analogue of ``QueryService._acquire_view``): generation +
+    its corpus geometry, the CACHED liveness sets with their validating
+    ``(term, epoch)`` tag, and the last acked seq.  ``epoch == -1`` means
+    no cache — the delta response will carry the authoritative sets."""
+    gen: int
+    num_points: int
+    d_active: int
+    cols: CompactColumns
+    main_dead: frozenset
+    fully_deleted: frozenset
+    delta_live: int
+    last_seq: int
+    epoch: int
+    term: int
+
+
+@dataclasses.dataclass
+class _Auth:
+    """Cached authoritative liveness state for one generation, valid
+    exactly at ``(term, epoch)``."""
+    epoch: int
+    term: int
+    main_dead: set
+    fully_deleted: set
+    delta_live: int
 
 
 def _addr(spec: str) -> tuple[str, int]:
@@ -80,14 +134,29 @@ class ClusterRouter:
     ``local.LocalCluster`` for a one-call launcher).  Searches take raw
     scipy sparse queries (``search_sparse``) or pre-padded compact-space
     batches (``search``); mutations go to the primary and their acks feed
-    the router's authoritative tombstone/watermark state; ``compact()``
-    orchestrates the cluster-wide generation flip."""
+    the router's cache + watermark state; ``compact()`` orchestrates the
+    cluster-wide generation flip; ``failover()`` promotes a replica when
+    the primary dies.  ``lockstep=True`` disables request pipelining,
+    coalescing, AND the adaptive fan-out cutoff (one blocking call per
+    shard via the thread pool — the pre-batching wire discipline, kept
+    for the benchmark's before/after comparison).
+
+    ``direct_q_max`` is the adaptive fan-out cutoff (DESIGN.md §8.8):
+    chunks whose padded bucket is at most this many queries skip the
+    S-scorer scatter-gather and get served by ONE ``part="full"`` request
+    to the primary — the same main+delta read (and the same
+    bit-identical merge) a replica serves, against the node that is
+    trivially caught-up.  A single query through S scorers pays S+1 RPCs
+    of fixed dispatch cost to do one process worth of scoring; the
+    scatter-gather only earns its overhead at batch sizes that fill the
+    slices.  ``0`` disables the cutoff (every chunk fans out)."""
 
     def __init__(self, primary: str, scorers: list[str],
                  replicas: list[str] = (), *, h: int = 10,
                  alpha: int | None = None, beta: int | None = None,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  prefer_replica: bool = False, replica_max_lag: int = 0,
+                 lockstep: bool = False, direct_q_max: int = 1,
                  timeout: float = 60.0):
         self.primary = ShardClient(*_addr(primary), timeout=timeout)
         self.scorers = [ShardClient(*_addr(a), timeout=timeout)
@@ -97,6 +166,8 @@ class ClusterRouter:
         self.buckets = buckets
         self.prefer_replica = prefer_replica
         self.replica_max_lag = replica_max_lag
+        self.lockstep = lockstep
+        self.direct_q_max = int(direct_q_max)
         self._lock = threading.RLock()
         self._pool = ThreadPoolExecutor(
             max_workers=max(2, len(self.scorers) + 1),
@@ -110,49 +181,118 @@ class ClusterRouter:
         self._d_active = int(info["d_active"])
         self._nq_max = int(info["nq_max"])
         self._cols = CompactColumns(global_ids=arrays["cols_global_ids"])
-        self._main_dead = {self.gen: set(arrays["main_tombstones"].tolist())}
-        self._fully_deleted = {self.gen: set()}
-        self._delta_live = {self.gen: int(info["delta_live"])}
+        self.term = int(info.get("term", 0))
+        self._auth = {self.gen: _Auth(
+            epoch=int(info.get("epoch", 0)), term=self.term,
+            main_dead=set(arrays["main_tombstones"].tolist()),
+            fully_deleted=set(arrays["fully_deleted"].tolist()),
+            delta_live=int(info["delta_live"]))}
         self._last_seq = int(info["applied_seq"])
         self._replica_seq = [(-1) for _ in self.replicas]
         self.stats = {"primary_reads": 0, "replica_reads": 0,
-                      "failovers": 0, "degraded": 0, "stale_retries": 0,
-                      "excluded_stale": 0, "queries": 0}
+                      "direct_reads": 0, "failovers": 0, "degraded": 0,
+                      "stale_retries": 0, "excluded_stale": 0,
+                      "queries": 0, "resyncs": 0, "promotions": 0}
         self.hop_s = {"serialize": 0.0, "wire": 0.0, "score": 0.0,
                       "merge": 0.0}
 
     # -- sessions ---------------------------------------------------------
 
     def session(self) -> Session:
-        """A fresh read-your-writes session (watermark 0 = any state)."""
+        """A fresh read-your-writes session (watermark -1 = any state)."""
         return Session()
+
+    # -- term fencing + state cache ---------------------------------------
+
+    def _fence_term(self, term: int) -> None:
+        """Refuse a deposed primary's response (caller holds ``_lock``):
+        terms only grow, so anything below the highest one this router has
+        seen is a zombie talking (DESIGN.md §8.7)."""
+        if term and term < self.term:
+            raise StaleTermError(
+                f"response carries term {term} but this router has seen "
+                f"term {self.term}: a deposed primary is still answering; "
+                "refusing its state")
+        if term > self.term:
+            self.term = term
+
+    def _adopt_auth(self, gen: int, term: int, epoch: int, main_dead: set,
+                    fully_deleted: set, delta_live: int) -> None:
+        """Install a synced authoritative view as the cache for ``gen``
+        (caller holds ``_lock``); never replaces a newer tag."""
+        a = self._auth.get(gen)
+        if a is None or (term, epoch) >= (a.term, a.epoch):
+            self._auth[gen] = _Auth(epoch=epoch, term=term,
+                                    main_dead=main_dead,
+                                    fully_deleted=fully_deleted,
+                                    delta_live=delta_live)
+
+    def _resync(self) -> None:
+        """Re-learn generation, corpus geometry, column space and the
+        authoritative liveness state from the primary — another router may
+        have compacted, mutated, or failed the cluster over since this
+        router last looked."""
+        info, arrays = self.primary.call("info")
+        with self._lock:
+            self._fence_term(int(info.get("term", 0)))
+            g = int(info["gen"])
+            self.gen = g
+            self._num_points = int(info["num_points"])
+            self._d_active = int(info["d_active"])
+            self._cols = CompactColumns(
+                global_ids=arrays["cols_global_ids"])
+            self._adopt_auth(g, int(info.get("term", 0)),
+                             int(info.get("epoch", 0)),
+                             set(arrays["main_tombstones"].tolist()),
+                             set(arrays["fully_deleted"].tolist()),
+                             int(info["delta_live"]))
+            self._auth = {gg: aa for gg, aa in self._auth.items()
+                          if gg == g}
+            self._last_seq = max(self._last_seq, int(info["applied_seq"]))
+            self.stats["resyncs"] += 1
 
     # -- mutations (primary only) -----------------------------------------
 
     def _ack(self, meta: dict, *, main_killed, resurrected=(),
              fully_killed=(), session: Session | None) -> None:
-        """Fold one mutation ack into the authoritative per-generation
-        tombstone view + watermark state.  Acks are generation-tagged by
-        the primary, so one racing a compaction lands in the right
-        epoch's sets (the flip preserves already-accumulated entries)."""
+        """Fold one mutation ack into the watermark state and — when the
+        ack extends the cache's exact ``(term, epoch)`` tag — the cached
+        liveness view.  An ack that does NOT extend the tag (another
+        router mutated in between) invalidates the cache instead: the
+        next read's delta response re-syncs it from authority.  A stale
+        term raises ``StaleTermError`` BEFORE anything is folded — a
+        zombie's ack must not move watermarks."""
+        seq = meta["seq"]
+        term = int(meta.get("term", 0))
         with self._lock:
+            self._fence_term(term)
             g = int(meta["gen"])
-            self._main_dead.setdefault(g, set()).update(
-                int(e) for e in main_killed)
-            fd = self._fully_deleted.setdefault(g, set())
-            fd.update(int(e) for e in fully_killed)
-            fd.difference_update(int(e) for e in resurrected)
-            self._delta_live[g] = int(meta["delta_live"])
-            self._last_seq = max(self._last_seq, int(meta["seq"]))
-        if session is not None and meta["seq"]:
-            session.observe(meta["seq"])
+            e = int(meta.get("epoch", 0))
+            a = self._auth.get(g)
+            if a is not None:
+                if a.term == term and e in (a.epoch, a.epoch + 1):
+                    a.main_dead.update(int(x) for x in main_killed)
+                    a.fully_deleted.update(int(x) for x in fully_killed)
+                    a.fully_deleted.difference_update(
+                        int(x) for x in resurrected)
+                    a.delta_live = int(meta["delta_live"])
+                    a.epoch = e
+                else:
+                    del self._auth[g]
+            if seq is not None:
+                self._last_seq = max(self._last_seq, int(seq))
+        # ``is not None``, not truthiness: only a no-op mutation acks with
+        # seq None, and a session must observe every REAL seq it was acked
+        if session is not None and seq is not None:
+            session.observe(seq)
 
     def insert(self, x_sparse, x_dense, ids=None,
                session: Session | None = None) -> np.ndarray:
         """Insert (or upsert) rows via the primary; returns the assigned
         external ids.  Acked only after the primary's WAL covers the batch
         (its group-commit discipline); the ack's ``main_killed`` ids feed
-        the router's tombstone view and its seq the session watermark."""
+        the router's cached liveness view and its seq the session
+        watermark."""
         import scipy.sparse as sp
         xs = sp.csr_matrix(x_sparse)
         arrays = {"data": xs.data, "indices": xs.indices,
@@ -169,7 +309,7 @@ class ClusterRouter:
 
     def delete(self, ids, session: Session | None = None) -> int:
         """Tombstone rows by external id via the primary; returns #killed.
-        The ack's killed ids join BOTH router sets: ``main_dead`` (drop
+        The ack's killed ids join BOTH cached sets: ``main_dead`` (drop
         from scorer parts) and ``fully_deleted`` (the overlay that stops a
         lagging replica resurrecting them, DESIGN.md §8.4)."""
         meta, arr = self.primary.call(
@@ -186,10 +326,10 @@ class ClusterRouter:
         """Orchestrate a cluster compaction: pause replica shipping, fold
         delta + tombstones at the primary (cut as a durable checkpoint),
         have every scorer/replica reload the new store, then atomically
-        flip the router's generation + reset its tombstone epoch.  Old-
-        generation searches keep working mid-flip (servers hold the last
-        two generations); new-generation state starts clean.  Returns the
-        new generation number."""
+        flip the router's generation + seed the new epoch's cache from the
+        compact ack's tag.  Old-generation searches keep working mid-flip
+        (servers hold the last two generations).  Returns the new
+        generation number."""
         for r in self.replicas:
             r.call("fault", {"mode": "pause_shipping"})
         meta, arrays = self.primary.call("compact", {"retrain": retrain},
@@ -200,38 +340,115 @@ class ClusterRouter:
         for r in self.replicas:
             r.call("reload", {"gen": gen})
         with self._lock:
+            self._fence_term(int(meta.get("term", 0)))
             self.gen = gen
             self._num_points = int(meta["num_points"])
             self._d_active = int(meta["d_active"])
             self._cols = CompactColumns(
                 global_ids=arrays["cols_global_ids"])
-            # keep entries acks already accumulated FOR this generation
-            # (a mutation can race the flip), drop every older epoch
-            self._main_dead = {gen: self._main_dead.get(gen, set())}
-            self._fully_deleted = {gen: self._fully_deleted.get(gen, set())}
-            self._delta_live = {gen: self._delta_live.get(gen, 0)}
+            # a fresh generation starts with empty liveness sets, valid at
+            # the compact ack's tag; a mutation racing the flip bumps the
+            # server epoch past it, so the tag validation catches it
+            self._auth = {gen: _Auth(epoch=int(meta.get("epoch", 0)),
+                                     term=int(meta.get("term", 0)),
+                                     main_dead=set(), fully_deleted=set(),
+                                     delta_live=0)}
         return gen
+
+    # -- failover (DESIGN.md §8.7) ----------------------------------------
+
+    def failover(self, new_primary: int | None = None) -> int:
+        """Promote a replica to primary after the primary died: a
+        deterministic election (every router over the same replica set
+        picks the same winner: most applied seqs first, ties to the lowest
+        index), committed by the ``promote`` op whose server-side gate
+        re-checks eligibility under the apply lock.  The new term fences
+        the deposed primary everywhere.  Re-points every surviving node's
+        upstream, then re-syncs state from the new primary.  Returns the
+        new term; raises ``FailoverError`` when no candidate has applied
+        every sealed (acked) seq."""
+        with self._lock:
+            sealed = self._last_seq
+            gen = self.gen
+            known_term = self.term
+        candidates = []
+        for i, rep in enumerate(self.replicas):
+            try:
+                st, _ = rep.call("status")
+            except (ShardUnavailableError, ConnectionError):
+                continue
+            known_term = max(known_term, int(st.get("term", 0)))
+            if st.get("role") != "replica" or int(st["gen"]) != gen:
+                continue
+            candidates.append((int(st["applied_seq"]), i))
+        eligible = [(a, i) for a, i in candidates if a >= sealed]
+        if new_primary is not None:
+            eligible = [(a, i) for a, i in eligible if i == new_primary]
+        if not eligible:
+            raise FailoverError(
+                f"no eligible promotion candidate: need applied_seq >= "
+                f"sealed seq {sealed} at gen {gen}, saw "
+                f"{sorted(candidates)}; promoting a lagging replica would "
+                "lose acked mutations")
+        eligible.sort(key=lambda t: (-t[0], t[1]))
+        win = eligible[0][1]
+        new_term = known_term + 1
+        target = self.replicas[win]
+        meta, _ = target.call("promote", {"sealed_seq": sealed,
+                                          "new_term": new_term},
+                              retry=False)
+        old = self.primary
+        with self._lock:
+            self.primary = target
+            del self.replicas[win]
+            del self._replica_seq[win]
+            self.term = new_term
+            self._last_seq = max(self._last_seq, int(meta["applied_seq"]))
+            # the new primary's state IS the authority now — drop the
+            # cache and re-sync below rather than trusting anything folded
+            # from the deposed primary's acks
+            self._auth.pop(gen, None)
+            self.stats["promotions"] += 1
+        new_addr = f"{target.host}:{target.port}"
+        for c in [*self.scorers, *self.replicas]:
+            try:
+                c.call("set_peer", {"peer": new_addr})
+            except (ShardUnavailableError, ConnectionError):
+                pass                 # unreachable now; it re-learns on
+                                     # restart or the next reload
+        old.close()
+        self._resync()
+        return new_term
 
     # -- search -----------------------------------------------------------
 
     def _slice_sizes(self, n: int) -> list[int]:
         """Row counts per scorer under the ragged ceil-split — must mirror
-        ``split_index_arrays(..., ragged=True)`` exactly, since
-        ``plan_overfetch`` budgets per-slice fetch depths from them."""
+        ``split_index_arrays(..., ragged=True)`` exactly, since the
+        overfetch budget computes per-slice fetch depths from them."""
         s = len(self.scorers)
         base, rem = divmod(n, s)
         return [base + 1 if i < rem else base for i in range(s)]
 
-    def _pin(self):
-        """One consistent router-state snapshot (the cross-host analogue
-        of ``QueryService._acquire_view``): generation, corpus size,
-        column space, tombstone sets, delta liveness, last acked seq."""
+    def _pin(self) -> _PinnedState:
+        """Snapshot the router's view for one chunk: generation + corpus
+        geometry pinned TOGETHER (a compaction racing the chunk cannot
+        re-budget old-generation fetch depths from the new generation's
+        row count), plus the cached liveness sets and their validating
+        tag."""
         with self._lock:
             g = self.gen
-            return (g, self._num_points, self._d_active, self._cols,
-                    frozenset(self._main_dead.get(g, ())),
-                    frozenset(self._fully_deleted.get(g, ())),
-                    self._delta_live.get(g, 0), self._last_seq)
+            a = self._auth.get(g)
+            return _PinnedState(
+                gen=g, num_points=self._num_points,
+                d_active=self._d_active, cols=self._cols,
+                main_dead=frozenset(a.main_dead) if a else frozenset(),
+                fully_deleted=(frozenset(a.fully_deleted) if a
+                               else frozenset()),
+                delta_live=a.delta_live if a else 0,
+                last_seq=self._last_seq,
+                epoch=a.epoch if a else -1,
+                term=a.term if a else -1)
 
     def search_sparse(self, q_sparse, q_dense, *, h: int | None = None,
                       alpha: int | None = None, beta: int | None = None,
@@ -240,11 +457,10 @@ class ClusterRouter:
         generation's compact column space (generation-bound, like
         ``QueryService.search_sparse``), then fan out.  Returns
         ``(scores (Q, h), ids (Q, h))`` in external ids."""
-        gen_state = self._pin()
-        cols, nq_max = gen_state[3], self._nq_max
-        q_dims, q_vals = sparse_queries_to_padded(q_sparse, cols,
-                                                  nq_max=nq_max)
-        return self._search_pinned(gen_state,
+        pin = self._pin()
+        q_dims, q_vals = sparse_queries_to_padded(q_sparse, pin.cols,
+                                                  nq_max=self._nq_max)
+        return self._search_pinned(pin,
                                    np.atleast_2d(np.asarray(q_dims,
                                                             np.int32)),
                                    np.atleast_2d(np.asarray(q_vals,
@@ -267,7 +483,7 @@ class ClusterRouter:
             np.atleast_2d(np.asarray(q_dense, np.float32)),
             h, alpha, beta, session)
 
-    def _search_pinned(self, gen_state, q_dims, q_vals, q_dense,
+    def _search_pinned(self, pin, q_dims, q_vals, q_dense,
                        h, alpha, beta, session, _retries: int = 8):
         h = self.h if h is None else h
         alpha = self.alpha if alpha is None else alpha
@@ -280,7 +496,7 @@ class ClusterRouter:
             hi = min(lo + max_bucket, qn_total)
             for attempt in range(_retries):
                 try:
-                    s, ids = self._run_chunk(gen_state, q_dims[lo:hi],
+                    s, ids = self._run_chunk(pin, q_dims[lo:hi],
                                              q_vals[lo:hi], q_dense[lo:hi],
                                              h, alpha, beta, session)
                     break
@@ -288,42 +504,50 @@ class ClusterRouter:
                     if "StaleGeneration" not in str(e) \
                             or attempt + 1 >= _retries:
                         raise
-                    # a compaction flipped generations mid-flight:
-                    # re-pin and retry against the new epoch
+                    # a compaction flipped generations mid-flight (possibly
+                    # driven by ANOTHER router): re-learn the cluster state
+                    # from the primary, re-pin, retry against the new epoch
                     with self._lock:
                         self.stats["stale_retries"] += 1
-                    time.sleep(0.05)
-                    gen_state = self._pin()
+                    # mid-flip the scorers lag the primary's new
+                    # generation by a store fetch + reload — back off
+                    # so the retry budget spans the whole flip
+                    time.sleep(0.05 * (attempt + 1))
+                    try:
+                        self._resync()
+                    except (ShardUnavailableError, ConnectionError):
+                        pass
+                    pin = self._pin()
             out_s[lo:hi], out_i[lo:hi] = s, ids
         with self._lock:
             self.stats["queries"] += qn_total
         return out_s, out_i
 
-    def _run_chunk(self, gen_state, q_dims, q_vals, q_dense, h, alpha,
+    def _run_chunk(self, pin, q_dims, q_vals, q_dense, h, alpha,
                    beta, session):
-        (gen, n, d_active, _cols, main_dead, fully_deleted, delta_live,
-         last_seq) = gen_state
         qn = q_dims.shape[0]
         bucket = bucket_for(qn, self.buckets)
-        qd = pad_rows(q_dims, bucket, fill=d_active)
+        qd = pad_rows(q_dims, bucket, fill=pin.d_active)
         qv = pad_rows(q_vals, bucket)
         qe = pad_rows(q_dense, bucket)
-        required = session.watermark if session is not None else 0
-        floor = max(required, last_seq - self.replica_max_lag)
+        required = session.watermark if session is not None else -1
+        floor = max(required, pin.last_seq - self.replica_max_lag)
 
         if self.prefer_replica and self.replicas:
-            res = self._try_replicas(gen, qd, qv, qe, qn, h, alpha, beta,
-                                     main_dead, fully_deleted, floor)
+            res = self._try_replicas(pin, qd, qv, qe, qn, h, alpha, beta,
+                                     floor)
             if res is not None:
                 return res
         try:
-            return self._primary_fanout(gen, qd, qv, qe, qn, h, alpha,
-                                        beta, main_dead, delta_live)
+            if bucket <= self.direct_q_max and not self.lockstep:
+                return self._primary_full(pin, qd, qv, qe, qn, h,
+                                          alpha, beta)
+            return self._fanout(pin, qd, qv, qe, qn, h, alpha, beta)
         except (ShardUnavailableError, ConnectionError):
             with self._lock:
                 self.stats["failovers"] += 1
-            res = self._try_replicas(gen, qd, qv, qe, qn, h, alpha, beta,
-                                     main_dead, fully_deleted, floor)
+            res = self._try_replicas(pin, qd, qv, qe, qn, h, alpha, beta,
+                                     floor)
             if res is not None:
                 return res
             with self._lock:
@@ -333,41 +557,198 @@ class ClusterRouter:
                 f"applied seq >= {floor}; refusing to return a silently "
                 "truncated top-k") from None
 
-    def _primary_fanout(self, gen, qd, qv, qe, qn, h, alpha, beta,
-                        main_dead, delta_live):
-        """The S-scorer + primary-delta path: the literal in-process merge
-        (``plan_overfetch`` + ``fanout_search``) over remote engines."""
+    def _collect(self, client, entry, cmd, meta, arrays):
+        """Collect one pipelined reply, healing a transport failure (torn
+        frame, dropped socket) with ONE fresh-connection resend — the same
+        discipline and ``reconnects`` accounting as ``ShardClient.call``;
+        searches are idempotent, so the resend is safe.  Returns
+        ``(rmeta, rarrays, wall_s, send_s)``."""
+        try:
+            rmeta, rarr = entry.result()
+            p = getattr(entry, "_pending", entry)
+            return rmeta, rarr, p.wall_s, p.send_s
+        except RemoteError:
+            raise
+        except ShardUnavailableError:
+            raise
+        except (ConnectionError, OSError):
+            client.reconnects += 1
+            rmeta, rarr = client.call(cmd, meta, arrays, retry=False)
+            return rmeta, rarr, client.last_wall_s, client.last_send_s
+
+    def _primary_full(self, pin, qd, qv, qe, qn, h, alpha, beta):
+        """The adaptive fan-out cutoff: serve one small chunk with ONE
+        ``part="full"`` request to the primary (DESIGN.md §8.8).  The
+        primary scores its whole main engine plus the live delta — the
+        exact read a replica serves, merged with the exact same per-part
+        drop construction, against the one node whose applied prefix is
+        the cluster's truth (read-your-writes floors hold trivially).
+        The response's ``main_tombstones`` are the CURRENT authoritative
+        kills and the server self-slacks its fetch depth by them, so a
+        stale pinned cache can neither truncate nor resurrect; a frozen
+        pinned generation gets the server's StaleGeneration refusal and
+        re-pins through ``_search_pinned``'s retry loop."""
         t0 = time.perf_counter()
-        engines = [RemoteMainEngine(c, generation=gen, num_points=sz)
-                   for c, sz in zip(self.scorers,
-                                    self._slice_sizes(self._pin_n(gen)))]
-        h_fetch = plan_overfetch(engines, h, main_dead)
-        delta = (RemoteDeltaEngine(self.primary, generation=gen,
-                                   num_points=delta_live)
-                 if delta_live > 0 else None)
-        s, ids = fanout_search(
-            engines, h_fetch, np.zeros(len(engines), np.int64), None,
-            delta, None, main_dead, qd, qv, qe, h=h, alpha=alpha,
-            beta=beta, qn=qn, executor=self._pool, dedup_upserts=True)
-        self._account_hops([e for e in engines + ([delta] if delta else [])],
-                           time.perf_counter() - t0, qn)
+        dead = pin.main_dead | pin.fully_deleted
+        h_fetch = min(h + (ceil16(len(dead)) if dead else 0),
+                      pin.num_points)
+        meta, arrays = self.primary.call(
+            "search", {"part": "full", "gen": pin.gen, "h": int(h_fetch),
+                       "alpha": int(alpha), "beta": int(beta)},
+            {"q_dims": qd, "q_vals": qv, "q_dense": qe})
+        with self._lock:
+            self._fence_term(int(meta.get("term", 0)))
+            self._last_seq = max(self._last_seq,
+                                 int(meta.get("applied_seq", -1)))
+        drop_main = set(arrays["main_tombstones"].tolist())
+        drop_main.update(pin.fully_deleted)
+        parts = [(arrays["ms"][:qn], arrays["mi"][:qn],
+                  np.asarray(sorted(drop_main), np.int64))]
+        if "ds" in arrays:
+            parts.append((arrays["ds"][:qn], arrays["di"][:qn],
+                          np.asarray(sorted(pin.fully_deleted),
+                                     np.int64)))
+        s, ids = merge_topk_host(parts, h)
+        self._account_hops([self.primary.last_wall_s],
+                           [self.primary.last_send_s],
+                           [float(meta.get("score_s", 0.0))],
+                           time.perf_counter() - t0)
+        with self._lock:
+            self.stats["primary_reads"] += qn
+            self.stats["direct_reads"] += qn
+        return s, ids
+
+    def _fanout(self, pin, qd, qv, qe, qn, h, alpha, beta):
+        """The S-scorer + primary-delta path.  The delta request is ALWAYS
+        dispatched — it is the chunk's state-validation channel: its
+        response either confirms the pinned cache tag or carries the
+        authoritative liveness sets, and the merge uses whichever is
+        authoritative.  Main fetches are re-deepened (once, only the
+        under-budgeted slices) when the authoritative dead set needs more
+        overfetch slack than the cache predicted — main parts are pure
+        functions of (generation, depth, query), so a re-fetch merges
+        exactly as a first fetch would have."""
+        t0 = time.perf_counter()
+        sizes = self._slice_sizes(pin.num_points)
+        # the plan_overfetch budget formula over pinned slice sizes
+        slack = ceil16(len(pin.main_dead)) if pin.main_dead else 0
+        h_fetch = [min(h + slack, sz) for sz in sizes]
+        q_arrays = {"q_dims": qd, "q_vals": qv, "q_dense": qe}
+        dmeta_req = {"part": "delta", "gen": pin.gen, "h": int(h),
+                     "alpha": int(alpha), "beta": int(beta),
+                     "have_epoch": pin.epoch, "have_term": pin.term}
+        metas = [{"part": "main", "gen": pin.gen, "h": int(hf),
+                  "alpha": int(alpha), "beta": int(beta)}
+                 for hf in h_fetch]
+        walls, sends, scores = [], [], []
+        if self.lockstep:
+            futs = [self._pool.submit(c.call, "search", m, q_arrays)
+                    for c, m in zip(self.scorers, metas)]
+            dfut = self._pool.submit(self.primary.call, "search",
+                                     dmeta_req, q_arrays)
+            mains = [f.result() for f in futs]
+            dmeta, darr = dfut.result()
+            for c in [*self.scorers, self.primary]:
+                walls.append(c.last_wall_s)
+                sends.append(c.last_send_s)
+        else:
+            # pipelined: every request on the wire before any reply is
+            # read; one pre-built frame shared by every scorer with the
+            # same fetch depth (serialize the query batch ONCE); the
+            # per-client coalescer may fold concurrent chunks' requests
+            # into msearch frames
+            frames: dict[int, bytes] = {}
+            entries = []
+            for c, m, hf in zip(self.scorers, metas, h_fetch):
+                fr = frames.get(hf)
+                if fr is None:
+                    fr = frames[hf] = build_frame("search", m, q_arrays)
+                entries.append(c.submit_search(m, q_arrays, frame=fr))
+            dentry = self.primary.submit_search(dmeta_req, q_arrays)
+            mains = []
+            for c, m, en in zip(self.scorers, metas, entries):
+                rm, ra, wall, send = self._collect(c, en, "search", m,
+                                                   q_arrays)
+                mains.append((rm, ra))
+                walls.append(wall)
+                sends.append(send)
+            dmeta, darr, wall, send = self._collect(
+                self.primary, dentry, "search", dmeta_req, q_arrays)
+            walls.append(wall)
+            sends.append(send)
+
+        # adopt / confirm the authoritative liveness state
+        with self._lock:
+            self._fence_term(int(dmeta.get("term", 0)))
+        # a frozen-generation reply means another router compacted since
+        # this chunk pinned: the frozen state misses every post-flip
+        # mutation, so re-learn the cluster and retry instead of serving
+        # it (the StaleGeneration retry loop in ``_search_pinned``)
+        cur_g = int(dmeta.get("current_gen", pin.gen))
+        if cur_g != pin.gen:
+            raise RemoteError(
+                f"StaleGeneration: generation {pin.gen} is frozen — the "
+                f"cluster has compacted to generation {cur_g}")
+        live = int(dmeta["live"])
+        if dmeta.get("sync"):
+            auth_md = frozenset(
+                int(x) for x in darr["sync_main_dead"].tolist())
+            auth_fd = frozenset(
+                int(x) for x in darr["sync_fully_deleted"].tolist())
+            if int(dmeta.get("epoch", 0)) > 0:    # 0 = frozen prev-gen
+                with self._lock:
+                    self._adopt_auth(pin.gen, int(dmeta["term"]),
+                                     int(dmeta["epoch"]), set(auth_md),
+                                     set(auth_fd), live)
+        else:
+            auth_md, auth_fd = pin.main_dead, pin.fully_deleted
+
+        # re-deepen under-budgeted main fetches against the authoritative
+        # dead set
+        need = ceil16(len(auth_md)) if auth_md else 0
+        if need > slack:
+            for k, sz in enumerate(sizes):
+                hf2 = min(h + need, sz)
+                if hf2 > h_fetch[k]:
+                    m2 = dict(metas[k], h=int(hf2))
+                    rm, ra = self.scorers[k].call("search", m2, q_arrays)
+                    mains[k] = (rm, ra)
+
+        # assemble parts exactly as the in-process fanout_search does:
+        # scorer slices in row order (filtered), delta last (unfiltered)
+        parts = []
+        for rm, ra in mains:
+            scores.append(float(rm.get("score_s", 0.0)))
+            parts.append((np.asarray(ra["scores"])[:qn],
+                          np.asarray(ra["ids"]).astype(np.int64)[:qn],
+                          True))
+        scores.append(float(dmeta.get("score_s", 0.0)))
+        if live > 0:
+            parts.append((np.asarray(darr["scores"])[:qn],
+                          np.asarray(darr["ids"]).astype(np.int64)[:qn],
+                          False))
+        s, ids = merge_topk_host(parts, h, drop_ids=auth_md,
+                                 dedup_upserts=True)
+        self._account_hops(walls, sends, scores,
+                           time.perf_counter() - t0)
         with self._lock:
             self.stats["primary_reads"] += qn
         return s, ids
 
-    def _pin_n(self, gen: int) -> int:
-        with self._lock:
-            return self._num_points
-
-    def _try_replicas(self, gen, qd, qv, qe, qn, h, alpha, beta,
-                      main_dead, fully_deleted, floor):
+    def _try_replicas(self, pin, qd, qv, qe, qn, h, alpha, beta, floor):
         """Serve the chunk from the first eligible replica, or None.
         Eligibility is checked from the cached applied seq (refreshing
         via a status poll when stale) BEFORE the search RPC, and enforced
         again on the response tag — a replica below the floor never
-        serves the read (DESIGN.md §8.4)."""
-        h_fetch = min(h + (ceil16(len(main_dead)) if main_dead else 0),
-                      self._pin_n(gen))
+        serves the read (DESIGN.md §8.4).  The overfetch budget covers
+        the UNION of both cached dead sets: the merge drops the
+        ``fully_deleted`` overlay from the replica's parts too, so
+        budgeting from ``main_dead`` alone could truncate the merged
+        top-k below h (the replica adds its own self-slack for kills this
+        router has not seen)."""
+        dead = pin.main_dead | pin.fully_deleted
+        h_fetch = min(h + (ceil16(len(dead)) if dead else 0),
+                      pin.num_points)
         for i, rep in enumerate(self.replicas):
             try:
                 if self._replica_seq[i] < floor:
@@ -375,34 +756,39 @@ class ClusterRouter:
                     with self._lock:
                         self._replica_seq[i] = int(st["applied_seq"])
                     if self._replica_seq[i] < floor or \
-                            int(st["gen"]) != gen:
+                            int(st["gen"]) != pin.gen:
                         with self._lock:
                             self.stats["excluded_stale"] += 1
                         continue
                 meta, arrays = rep.call(
-                    "search", {"part": "full", "gen": gen, "h": h_fetch,
-                               "alpha": int(alpha), "beta": int(beta)},
+                    "search", {"part": "full", "gen": pin.gen,
+                               "h": int(h_fetch), "alpha": int(alpha),
+                               "beta": int(beta)},
                     {"q_dims": qd, "q_vals": qv, "q_dense": qe})
             except (ShardUnavailableError, ConnectionError, RemoteError):
                 continue
             with self._lock:
                 self._replica_seq[i] = int(meta["applied_seq"])
-            if int(meta["applied_seq"]) < floor or int(meta["gen"]) != gen:
+                # a lagging replica legitimately reports an old term —
+                # adopt newer terms, never refuse follower reads over it
+                self.term = max(self.term, int(meta.get("term", 0)))
+            if int(meta["applied_seq"]) < floor or \
+                    int(meta["gen"]) != pin.gen:
                 with self._lock:
                     self.stats["excluded_stale"] += 1
                 continue
             # merge the replica's consistent-prefix parts under the
-            # router's AUTHORITATIVE overlay: its own main tombstones
-            # (its prefix's upsert/delete kills) plus fully_deleted on
-            # BOTH parts — a stale tombstone view can hide nothing and
-            # resurrect nothing
+            # router's view: its own main tombstones (its prefix's
+            # upsert/delete kills) plus fully_deleted on BOTH parts — a
+            # stale tombstone view can hide nothing and resurrect nothing
             drop_main = set(arrays["main_tombstones"].tolist())
-            drop_main.update(fully_deleted)
+            drop_main.update(pin.fully_deleted)
             parts = [(arrays["ms"][:qn], arrays["mi"][:qn],
                       np.asarray(sorted(drop_main), np.int64))]
             if "ds" in arrays:
                 parts.append((arrays["ds"][:qn], arrays["di"][:qn],
-                              np.asarray(sorted(fully_deleted), np.int64)))
+                              np.asarray(sorted(pin.fully_deleted),
+                                         np.int64)))
             s, ids = merge_topk_host(parts, h)
             with self._lock:
                 self.stats["replica_reads"] += qn
@@ -411,12 +797,8 @@ class ClusterRouter:
 
     # -- introspection ----------------------------------------------------
 
-    def _account_hops(self, engines, chunk_wall: float, qn: int) -> None:
-        walls, sends, scores = [], [], []
-        for e in engines:
-            walls.append(getattr(e.client, "last_wall_s", 0.0))
-            sends.append(getattr(e.client, "last_send_s", 0.0))
-            scores.append(float(e.last_meta.get("score_s", 0.0)))
+    def _account_hops(self, walls, sends, scores, chunk_wall: float
+                      ) -> None:
         with self._lock:
             self.hop_s["serialize"] += sum(sends)
             self.hop_s["score"] += sum(scores)
@@ -426,15 +808,18 @@ class ClusterRouter:
                                                              default=0.0))
 
     def status(self) -> dict:
-        """Router-side cluster view: generation, corpus size, tombstone
-        counts, delta liveness, last acked seq, per-replica applied seqs,
-        and the read/failover counters."""
+        """Router-side cluster view: generation, corpus size, cached
+        liveness-set sizes + their validating tag, last acked seq,
+        per-replica applied seqs, and the read/failover counters."""
         with self._lock:
             g = self.gen
+            a = self._auth.get(g)
             return {"gen": g, "num_points": self._num_points,
-                    "main_dead": len(self._main_dead.get(g, ())),
-                    "fully_deleted": len(self._fully_deleted.get(g, ())),
-                    "delta_live": self._delta_live.get(g, 0),
+                    "term": self.term,
+                    "epoch": a.epoch if a else -1,
+                    "main_dead": len(a.main_dead) if a else 0,
+                    "fully_deleted": len(a.fully_deleted) if a else 0,
+                    "delta_live": a.delta_live if a else 0,
                     "last_seq": self._last_seq,
                     "replica_seq": list(self._replica_seq),
                     **self.stats}

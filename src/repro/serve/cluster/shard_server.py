@@ -1,5 +1,5 @@
 """Cluster shard server: one process, one role, one framed socket endpoint
-(DESIGN.md §8.2–§8.3).
+(DESIGN.md §8.2–§8.3, §8.7).
 
 Three roles share the server shell (accept loop, dispatch, fault hooks):
 
@@ -20,6 +20,18 @@ Three roles share the server shell (accept loop, dispatch, fault hooks):
   restarted mid-ingest recovers from its local snapshot + shipped log to
   the exact applied seq.  Serves whole-query (main + delta) parts tagged
   with ``applied_seq`` for the router's watermark rule (DESIGN.md §8.4).
+  A caught-up replica can be PROMOTED to primary (``promote`` op), fenced
+  by the WAL's monotonic term so the deposed primary's writes are refused
+  everywhere (DESIGN.md §8.7).
+
+AUTHORITY lives here, not in any router: the primary's liveness view —
+tombstones, fully-deleted ids, delta live count — is versioned by a
+``(term, epoch)`` tag that every mutation ack and delta response carries.
+Routers keep only a cache keyed by that tag; a delta response whose tag
+differs from the request's ``have_epoch``/``have_term`` piggybacks the
+full authoritative sets (``state_sync`` serves the same payload on
+demand), which is what makes N routers over one cluster bit-identical to
+one router (DESIGN.md §8.4).
 
 Every search request carries the router's generation tag; a request
 against a generation this process does not hold raises
@@ -38,13 +50,14 @@ import time
 
 import numpy as np
 
-from repro.core.distributed import split_index_arrays
+from repro.core.distributed import ceil16, split_index_arrays
 from repro.core.engine import ScoringEngine
 
 from .client import ShardClient
 from .protocol import MSG_ERROR, MSG_RESPONSE, recv_msg, send_msg
 
-__all__ = ["ShardServer", "StaleGenerationError", "main"]
+__all__ = ["ShardServer", "StaleGenerationError", "NotPrimaryError",
+           "PromotionError", "main"]
 
 
 class StaleGenerationError(RuntimeError):
@@ -55,9 +68,22 @@ class StaleGenerationError(RuntimeError):
     kind = "StaleGeneration"
 
 
-def _jnp(x):
-    import jax.numpy as jnp
-    return jnp.asarray(x)
+class NotPrimaryError(RuntimeError):
+    """A mutation (or compaction) was sent to a node that is not the
+    primary.  Applying it locally would fork the replicated log — the
+    exact divergence the single-writer discipline exists to prevent — so
+    it is refused outright; the router re-discovers the primary and
+    re-drives."""
+    kind = "NotPrimary"
+
+
+class PromotionError(RuntimeError):
+    """A ``promote`` request failed its eligibility gate: the target is
+    not a replica, has not applied every sealed (acked) seq, or the
+    proposed term does not exceed its current one.  Promoting anyway would
+    lose acked mutations or un-fence a zombie — the router must pick
+    another candidate (DESIGN.md §8.7)."""
+    kind = "Promotion"
 
 
 class _Gen:
@@ -103,7 +129,15 @@ class ShardServer:
         self.durability = None
         self._applied_seq = 0
         self._prev_index = None          # (gen, index) kept across a flip
+        self._prev_auth = None           # frozen (main_dead, fully_deleted)
         self._delta_engine_cache: dict[tuple, ScoringEngine] = {}
+        # liveness-state version: bumped under _lock on every op that can
+        # change what a merge must drop (mutation, shipped record, flip,
+        # promotion).  Paired with the WAL term it orders authoritative
+        # state ACROSS primaries: terms only grow, so (term, epoch)
+        # compares lexicographically even though a promoted replica's
+        # epoch counter is unrelated to the deposed primary's.
+        self._state_epoch = 1
         # scorer
         self._gens: dict[int, _Gen] = {}
 
@@ -178,15 +212,30 @@ class ShardServer:
             return self.durability.wal.next_seq - 1
         return self._applied_seq
 
+    def term(self) -> int:
+        """The WAL's fencing term (DESIGN.md §8.7); 0 for scorers, which
+        hold no log and take no part in fencing."""
+        return self.durability.wal.term if self.durability is not None else 0
+
     def _ship_loop(self) -> None:
-        """Replica tail loop: poll the primary for frames past our applied
-        seq, append them BYTE-IDENTICAL to the local log, then apply each
-        through the normal mutation path — log-then-apply, so a crash
-        between the two replays the record on restart instead of losing
-        it."""
+        """Replica tail loop: poll the (current) primary for frames past
+        our applied seq, append them BYTE-IDENTICAL to the local log, then
+        apply each through the normal mutation path — log-then-apply, so a
+        crash between the two replays the record on restart instead of
+        losing it.  Follows ``set_peer`` re-pointing (failover moves the
+        tail source to the promoted primary) and exits the moment this
+        process is itself promoted."""
         from repro.persist import apply_record
+        peer_addr = self.peer
         peer = self._peer_client()
         while not self._stop.is_set():
+            if self.role != "replica":
+                peer.close()
+                return                   # promoted: this process leads now
+            if self.peer != peer_addr:   # re-pointed at a new primary
+                peer.close()
+                peer_addr = self.peer
+                peer = self._peer_client()
             if self._ship_paused.is_set():
                 time.sleep(self.poll_interval)
                 continue
@@ -200,11 +249,39 @@ class ShardServer:
             if not frames:
                 time.sleep(self.poll_interval)
                 continue
-            with self._lock:
-                for rec in self.durability.wal.append_frames(frames):
-                    apply_record(self.index, rec)
-                    self._applied_seq = rec.seq
-                    self.shipped_records += 1
+            try:
+                with self._lock:
+                    if self.role != "replica":
+                        peer.close()
+                        return
+                    for rec in self.durability.wal.append_frames(frames):
+                        apply_record(self.index, rec)
+                        self._applied_seq = rec.seq
+                        self.shipped_records += 1
+                        self._state_epoch += 1
+            except ValueError:
+                # the term fence refused the frames — a deposed primary is
+                # still talking; drop the batch and re-poll (a set_peer /
+                # promote is racing this fetch)
+                time.sleep(self.poll_interval)
+
+    # -- authoritative liveness state (DESIGN.md §8.4) --------------------
+
+    def _auth_state(self, index) -> tuple[np.ndarray, np.ndarray]:
+        """The two dead-id sets every merge must drop, from THIS node's
+        applied state (caller holds ``_lock``): ``main_dead`` (tombstoned
+        main rows — upserts and deletes both) and ``fully_deleted`` (ids
+        with no live copy anywhere — the overlay that stops a lagging
+        follower resurrecting them)."""
+        st = index.mutable_state
+        main_dead = np.asarray(sorted(st.main_tombstones), np.int64)
+        fully = (st.main_tombstones | set(st.extra_ids)) - st._loc.keys()
+        return main_dead, np.asarray(sorted(fully), np.int64)
+
+    def _ensure_primary(self) -> None:
+        if self.role != "primary":
+            raise NotPrimaryError(
+                f"this node is a {self.role}; mutations go to the primary")
 
     # -- op handlers ------------------------------------------------------
 
@@ -230,8 +307,12 @@ class ShardServer:
         return eng
 
     def _op_search(self, meta, arrays):
-        qd, qv = _jnp(arrays["q_dims"]), _jnp(arrays["q_vals"])
-        qe = _jnp(arrays["q_dense"])
+        # queries stay host numpy: the engine accepts numpy for EVERY
+        # backend (the in-process QueryService always feeds it numpy), and
+        # a per-request device put costs ~0.4ms of pure overhead on the
+        # hot path — the backend moves data only if its kernels need to
+        qd, qv = arrays["q_dims"], arrays["q_vals"]
+        qe = arrays["q_dense"]
         h = int(meta["h"])
         alpha, beta = int(meta["alpha"]), int(meta["beta"])
         part = meta["part"]
@@ -252,33 +333,72 @@ class ShardServer:
         elif part == "delta":                    # primary delta shard
             with self._lock:
                 gen = self._check_gen(meta)
-                index = (self.index if gen == self.generation
-                         else self._prev_index[1])
+                current = gen == self.generation
+                index = self.index if current else self._prev_index[1]
                 st = index.mutable_state
                 snap = st.delta.snapshot() if st.delta.live_count else None
                 eng = (self._delta_engine(index, snap)
                        if snap is not None else None)
+                # the delta response doubles as the router's state
+                # validation channel: tag it, and when the caller's cached
+                # (term, epoch) is not exactly ours — or it asked about a
+                # frozen previous generation (epoch 0 sentinel) — piggyback
+                # the full authoritative sets, captured under the SAME lock
+                # as the delta snapshot so both describe one state
+                epoch = self._state_epoch if current else 0
+                term = self.term()
+                # ``current_gen`` lets a router that pinned a frozen
+                # generation discover the flip from the wire (another
+                # router may have compacted) instead of silently serving
+                # pre-compaction state that misses newer mutations
+                rmeta = {"gen": gen, "epoch": epoch, "term": term,
+                         "current_gen": self.generation,
+                         "applied_seq": self.applied_seq(),
+                         "live": snap.live if snap is not None else 0}
+                sync = (not current
+                        or int(meta.get("have_epoch", -1)) != epoch
+                        or int(meta.get("have_term", -1)) != term)
+                if sync:
+                    md, fd = self._auth_state(index)
             if snap is None:
                 q = int(np.asarray(arrays["q_dims"]).shape[0])
                 out = {"scores": np.zeros((q, 0), np.float32),
                        "ids": np.zeros((q, 0), np.int64)}
-                rmeta = {"gen": gen, "live": 0}
             else:
                 s, ids, _ = eng.search(qd, qv, qe, h=snap.capacity,
                                        alpha=alpha, beta=beta)
                 out = {"scores": np.asarray(s),
                        "ids": snap.ids[np.asarray(ids)]}
-                rmeta = {"gen": gen, "live": snap.live}
-        elif part == "full":                     # replica: main + delta
+            if sync:
+                rmeta["sync"] = True
+                out["sync_main_dead"] = md
+                out["sync_fully_deleted"] = fd
+        elif part == "full":                     # replica OR primary direct
             with self._lock:
-                self._check_gen(meta)
+                # strictly current-generation: this branch scores
+                # ``self.index``, so a frozen prev-gen pin must get the
+                # StaleGeneration signal (and re-pin), never current rows
+                # budgeted under old-generation geometry
+                if int(meta["gen"]) != self.generation:
+                    raise StaleGenerationError(
+                        f"{self.role} serves part='full' only at its "
+                        f"current generation {self.generation}, request "
+                        f"wants {meta['gen']}")
                 st = self.index.mutable_state
                 snap = st.delta.snapshot() if st.delta.live_count else None
                 eng = (self._delta_engine(self.index, snap)
                        if snap is not None else None)
                 tombs = np.asarray(sorted(st.main_tombstones), np.int64)
                 applied = self.applied_seq()
-            ms, mi, _ = self.index.engine.search(qd, qv, qe, h=h,
+            # self-slack: the caller budgeted overfetch from ITS dead-id
+            # view, which cannot know kills this node applied that the
+            # caller has not seen acked — deepen the fetch by our own
+            # tombstone count so dropping them can never truncate below
+            # the requested k (overfetch depth cannot change the merged
+            # top-k, only guarantee it)
+            n = self.index.engine.arrays.num_points
+            h_eff = min(h + (ceil16(len(tombs)) if len(tombs) else 0), n)
+            ms, mi, _ = self.index.engine.search(qd, qv, qe, h=h_eff,
                                                  alpha=alpha, beta=beta)
             out = {"ms": np.asarray(ms),
                    "mi": np.asarray(st.id_map)[np.asarray(mi)],
@@ -288,14 +408,57 @@ class ShardServer:
                                        alpha=alpha, beta=beta)
                 out["ds"], out["di"] = np.asarray(ds), snap.ids[np.asarray(di)]
             rmeta = {"gen": self.generation, "applied_seq": applied,
+                     "term": self.term(),
                      "delta_live": snap.live if snap is not None else 0}
         else:
             raise ValueError(f"unknown search part {part!r}")
         rmeta["score_s"] = time.perf_counter() - t0
         return rmeta, out
 
+    def _op_msearch(self, meta, arrays):
+        """Coalesced searches: ``subs`` is a list of search metas, arrays
+        are keyed ``"<i>:<name>"``.  Each sub runs independently; a sub
+        that fails reports ``error``/``kind`` in ITS slot of the reply's
+        ``subs`` instead of failing the frame — the batch is a transport
+        artifact, not a transaction (DESIGN.md §8.8)."""
+        rsubs: list[dict] = []
+        out: dict = {}
+        for i, sub in enumerate(meta["subs"]):
+            prefix = f"{i}:"
+            sub_arrays = {k[len(prefix):]: v for k, v in arrays.items()
+                          if k.startswith(prefix)}
+            try:
+                rm, ra = self._op_search(dict(sub), sub_arrays)
+            except Exception as e:
+                rm, ra = {"error": f"{type(e).__name__}: {e}",
+                          "kind": getattr(e, "kind", type(e).__name__)}, {}
+            rsubs.append(rm)
+            for k, v in ra.items():
+                out[f"{i}:{k}"] = v
+        return {"subs": rsubs}, out
+
+    def _op_state_sync(self, meta, arrays):
+        """The authoritative liveness snapshot on demand (routers call it
+        at attach, after failover, and whenever their cache tag went
+        stale): the full dead-id sets plus the (term, epoch) tag and seq /
+        corpus scalars, all captured under one lock."""
+        if self.index is None:
+            raise ValueError("scorers hold no authoritative state; "
+                             "state_sync is a primary/replica op")
+        with self._lock:
+            st = self.index.mutable_state
+            md, fd = self._auth_state(self.index)
+            return ({"gen": self.generation, "epoch": self._state_epoch,
+                     "term": self.term(), "role": self.role,
+                     "applied_seq": self.applied_seq(),
+                     "delta_live": st.delta.live_count,
+                     "num_points": self.index.engine.arrays.num_points,
+                     "d_active": self.index.engine.arrays.d_active},
+                    {"main_dead": md, "fully_deleted": fd})
+
     def _op_insert(self, meta, arrays):
         import scipy.sparse as sp
+        self._ensure_primary()
         xs = sp.csr_matrix((arrays["data"], arrays["indices"],
                             arrays["indptr"]),
                            shape=tuple(np.asarray(arrays["shape"])))
@@ -309,13 +472,16 @@ class ShardServer:
                                              sync=False)
             main_killed = sorted(st.main_tombstones - before)
             delta_live = st.delta.live_count
+            self._state_epoch += 1
+            epoch, term = self._state_epoch, self.term()
         self.durability.sync(seq)                # group-commit ack
-        return ({"seq": seq, "gen": self.generation,
-                 "delta_live": delta_live},
+        return ({"seq": seq, "gen": self.generation, "epoch": epoch,
+                 "term": term, "delta_live": delta_live},
                 {"ids": np.asarray(assigned, np.int64),
                  "main_killed": np.asarray(main_killed, np.int64)})
 
     def _op_delete(self, meta, arrays):
+        self._ensure_primary()
         req = np.atleast_1d(np.asarray(arrays["ids"], np.int64))
         with self._lock:
             self.durability.ensure_ok()
@@ -323,19 +489,26 @@ class ShardServer:
             before = set(st.main_tombstones)
             was_live = [int(e) for e in req if int(e) in st._loc]
             killed = self.index.delete(req)
+            # seq is None — not 0 — when nothing was logged: 0 is never a
+            # real WAL seq, but callers folding watermarks must be able to
+            # test "was anything acked" without a falsy-zero trap
             seq = (self.durability.log_delete(req, sync=False)
-                   if killed else 0)
+                   if killed else None)
             main_killed = sorted(st.main_tombstones - before)
             delta_live = st.delta.live_count
-        if seq:
+            if killed:
+                self._state_epoch += 1
+            epoch, term = self._state_epoch, self.term()
+        if seq is not None:
             self.durability.sync(seq)
         return ({"seq": seq, "gen": self.generation, "killed": killed,
-                 "delta_live": delta_live},
+                 "epoch": epoch, "term": term, "delta_live": delta_live},
                 {"killed_ids": np.asarray(sorted(was_live), np.int64),
                  "main_killed": np.asarray(main_killed, np.int64)})
 
     def _op_compact(self, meta, arrays):
         retrain = meta.get("retrain")
+        self._ensure_primary()
         with self._lock:
             self.durability.ensure_ok()
             new_index = self.index.compact(retrain=retrain)
@@ -344,13 +517,57 @@ class ShardServer:
             self.index = new_index
             self.generation += 1
             self._delta_engine_cache.clear()
-            st = new_index.mutable_state
+            self._state_epoch += 1
             return ({"gen": self.generation,
+                     "epoch": self._state_epoch, "term": self.term(),
                      "num_points": new_index.engine.arrays.num_points,
                      "d_active": new_index.engine.arrays.d_active,
                      "next_seq": self.durability.wal.next_seq},
                     {"cols_global_ids":
                      np.asarray(new_index.cols.global_ids)})
+
+    # -- failover (DESIGN.md §8.7) ----------------------------------------
+
+    def _op_promote(self, meta, arrays):
+        """Promote this replica to primary — the router-driven election's
+        commit point.  Gated under the SAME lock that serializes shipped-
+        record application, so the eligibility check is exact: a replica
+        that passes ``applied_seq >= sealed_seq`` here has applied every
+        mutation any router ever acked.  The new term is persisted BEFORE
+        the role flips, and a no-op term barrier is logged immediately:
+        the first record the new primary ships proves the new term to
+        every follower, closing the window where a zombie's same-seq frame
+        could still look current."""
+        sealed = int(meta["sealed_seq"])
+        new_term = int(meta["new_term"])
+        with self._lock:
+            if self.role != "replica":
+                raise PromotionError(
+                    f"cannot promote a {self.role}; promotion targets a "
+                    "replica")
+            if self._applied_seq < sealed:
+                raise PromotionError(
+                    f"replica applied seq {self._applied_seq} < sealed "
+                    f"seq {sealed}: promoting it would lose acked "
+                    "mutations")
+            if new_term <= self.durability.wal.term:
+                raise PromotionError(
+                    f"proposed term {new_term} does not exceed current "
+                    f"term {self.durability.wal.term}")
+            self.durability.wal.set_term(new_term)
+            self.role = "primary"        # the ship loop sees this and exits
+            barrier = self.durability.log_noop()
+            self._state_epoch += 1
+            return ({"term": new_term, "seq": barrier,
+                     "gen": self.generation, "epoch": self._state_epoch,
+                     "applied_seq": self.applied_seq()}, {})
+
+    def _op_set_peer(self, meta, arrays):
+        """Re-point this node's upstream (failover moved the primary): a
+        replica's ship loop re-targets its WAL tail fetches, a scorer's
+        next reload fetches the store from the new address."""
+        self.peer = str(meta["peer"])
+        return {"peer": self.peer}, {}
 
     def _op_wal_fetch(self, meta, arrays):
         buf, seqs = self.durability.wal.read_frames(
@@ -389,18 +606,21 @@ class ShardServer:
                 self._applied_seq = self.durability.wal.next_seq - 1
                 self.generation = gen
                 self._delta_engine_cache.clear()
+                self._state_epoch += 1
             self._ship_paused.clear()
         else:
             raise ValueError("primary does not reload; it compacts")
         return {"gen": self.generation}, {}
 
     def _op_status(self, meta, arrays):
-        out = {"role": self.role, "gen": self.generation}
+        out = {"role": self.role, "gen": self.generation,
+               "term": self.term()}
         if self.role in ("primary", "replica"):
             st = self.index.mutable_state
             out.update(applied_seq=self.applied_seq(),
                        delta_live=st.delta.live_count,
                        num_points=self.index.engine.arrays.num_points,
+                       epoch=self._state_epoch,
                        shipping_paused=self._ship_paused.is_set())
         else:
             g = self._gens[self.generation]
@@ -409,20 +629,23 @@ class ShardServer:
         return out, {}
 
     def _op_info(self, meta, arrays):
-        idx = self.index
-        st = idx.mutable_state
-        return ({"gen": self.generation,
-                 "num_points": idx.engine.arrays.num_points,
-                 "d_active": idx.engine.arrays.d_active,
-                 "nq_max": idx.params.nq_max,
-                 "backend": idx.engine.backend.value,
-                 "h": 10, "alpha": idx.params.alpha,
-                 "beta": idx.params.beta,
-                 "delta_live": st.delta.live_count,
-                 "applied_seq": self.applied_seq()},
-                {"cols_global_ids": np.asarray(idx.cols.global_ids),
-                 "main_tombstones":
-                 np.asarray(sorted(st.main_tombstones), np.int64)})
+        with self._lock:
+            idx = self.index
+            st = idx.mutable_state
+            md, fd = self._auth_state(idx)
+            return ({"gen": self.generation,
+                     "num_points": idx.engine.arrays.num_points,
+                     "d_active": idx.engine.arrays.d_active,
+                     "nq_max": idx.params.nq_max,
+                     "backend": idx.engine.backend.value,
+                     "h": 10, "alpha": idx.params.alpha,
+                     "beta": idx.params.beta,
+                     "delta_live": st.delta.live_count,
+                     "applied_seq": self.applied_seq(),
+                     "epoch": self._state_epoch, "term": self.term(),
+                     "role": self.role},
+                    {"cols_global_ids": np.asarray(idx.cols.global_ids),
+                     "main_tombstones": md, "fully_deleted": fd})
 
     def _op_fault(self, meta, arrays):
         mode = meta["mode"]
@@ -439,8 +662,10 @@ class ShardServer:
     def _op_ping(self, meta, arrays):
         return {"pong": True}, {}
 
-    _OPS = {"search": _op_search, "insert": _op_insert,
-            "delete": _op_delete, "compact": _op_compact,
+    _OPS = {"search": _op_search, "msearch": _op_msearch,
+            "insert": _op_insert, "delete": _op_delete,
+            "compact": _op_compact, "state_sync": _op_state_sync,
+            "promote": _op_promote, "set_peer": _op_set_peer,
             "wal_fetch": _op_wal_fetch, "store_manifest": _op_store_manifest,
             "store_file": _op_store_file, "reload": _op_reload,
             "status": _op_status, "info": _op_info, "fault": _op_fault,

@@ -1,0 +1,494 @@
+"""Multi-router correctness + primary failover (ISSUE 9, DESIGN.md §8.4,
+§8.7, §8.8).
+
+The tentpole properties:
+
+* N routers over ONE cluster are bit-identical to one router (and to the
+  in-process ``QueryService``) at every step of an interleaving in which
+  the routers alternate mutations — authority lives server-side under a
+  ``(term, epoch)`` tag, so a delete issued through router A can never be
+  resurrected by router B's stale private view;
+* the cluster survives its coordinator: SIGKILL the primary, promote a
+  caught-up replica under a fenced term, and every acked mutation is
+  still served bit-identically — while a deposed (zombie) primary's acks
+  are refused (``StaleTermError``) and a lagging replica is never
+  promoted (``FailoverError``);
+* the four satellite regressions: pinned corpus geometry for
+  old-generation chunks, the replica overfetch budget covering the UNION
+  of both dead sets, no-op mutations acking ``seq=None`` (and a real seq
+  0 still observed), and ``fetch_store`` refusing a sha256-mismatched
+  blob before committing CURRENT.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import persist
+from repro.core.distributed import ceil16
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.core.sparse_index import sparse_queries_to_padded
+from repro.data import make_hybrid_dataset
+from repro.serve import QueryService
+from repro.serve.cluster import (ClusterRouter, FailoverError, LocalCluster,
+                                 RemoteError, ShardClient, StaleTermError,
+                                 wait_ready)
+from repro.serve.query_service import bucket_for, pad_rows
+
+# -- shared tiny workload (mirrors tests/test_cluster.py) ---------------------
+
+N0, N_POOL, NQ = 96, 140, 3
+D_SPARSE, NNZ = 240, 8
+
+_DS = make_hybrid_dataset(num_points=N_POOL, num_queries=NQ,
+                          d_sparse=D_SPARSE, d_dense=16,
+                          nnz_per_row=NNZ, seed=11)
+
+
+def _build(n0=N0):
+    return HybridIndex.build(
+        _DS.x_sparse[:n0], _DS.x_dense[:n0],
+        HybridIndexParams(keep_top=16, head_dims=8, kmeans_iters=2,
+                          backend="ref", pq_subspaces=4), mutable=True)
+
+
+def _comparator():
+    return QueryService(index=_build(), h=8, cache_size=0,
+                        auto_compact=False)
+
+
+def _assert_parity(router, comp, session=None):
+    s_r, i_r = router.search_sparse(_DS.q_sparse, _DS.q_dense,
+                                    session=session)
+    s_c, i_c = comp.search_sparse(_DS.q_sparse, _DS.q_dense)
+    np.testing.assert_array_equal(i_r, i_c)
+    np.testing.assert_array_equal(s_r, s_c)
+    return s_r, i_r
+
+
+def _wait_replica_seq(handle, seq, *, timeout=60.0):
+    rc = ShardClient("127.0.0.1", handle.port)
+    try:
+        deadline = time.monotonic() + timeout
+        while True:
+            st = wait_ready(rc)
+            if st["applied_seq"] >= seq:
+                return st
+            if time.monotonic() > deadline:
+                raise AssertionError(f"replica stuck at {st}, want {seq}")
+            time.sleep(0.05)
+    finally:
+        rc.close()
+
+
+# -- tentpole (a): N routers, one truth ---------------------------------------
+
+def test_multi_router_equivalence_interleaved(tmp_path):
+    """Two routers — one pipelined+coalesced, one lockstep — ALTERNATE
+    mutations over one cluster; after every step BOTH serve bit-identical
+    results to the in-process comparator.  Covers the cross-router delete
+    (no resurrection from a stale private view), the cross-router upsert,
+    and a compaction driven by the OTHER router (generation flip learned
+    via StaleGeneration + resync)."""
+    rng = np.random.default_rng(905)
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        r_pipe = cluster.router(h=8)
+        r_lock = cluster.router(h=8, lockstep=True)
+        comp = _comparator()
+        try:
+            live = list(range(N0))
+            pool = list(range(N0, N_POOL))
+            for t in range(12):
+                actor = r_pipe if t % 2 == 0 else r_lock
+                if t == 6:                 # the OTHER router compacts
+                    assert r_lock.compact() == 2
+                    comp.compact()
+                roll = rng.random()
+                if roll < 0.5 or len(live) < 4:
+                    src = pool.pop(0)
+                    got = actor.insert(_DS.x_sparse[src], _DS.x_dense[src])
+                    np.testing.assert_array_equal(
+                        got, comp.insert(_DS.x_sparse[src],
+                                         _DS.x_dense[src]))
+                    live.append(int(got[0]))
+                elif roll < 0.7:           # upsert a live id
+                    src = pool.pop(0)
+                    ext = int(rng.choice(live))
+                    actor.insert(_DS.x_sparse[src], _DS.x_dense[src],
+                                 ids=[ext])
+                    comp.insert(_DS.x_sparse[src], _DS.x_dense[src],
+                                ids=[ext])
+                else:                      # delete through ONE router …
+                    ext = int(rng.choice(live))
+                    live.remove(ext)
+                    assert actor.delete([ext]) == comp.delete([ext]) == 1
+                # … and BOTH routers must agree with the comparator
+                _assert_parity(r_pipe, comp)
+                _assert_parity(r_lock, comp)
+            # the non-compacting router learned the flip from the wire
+            assert r_pipe.gen == r_lock.gen == 2
+        finally:
+            r_pipe.close()
+            r_lock.close()
+
+
+def test_concurrent_searches_coalesce_and_stay_bit_identical(tmp_path):
+    """Racing searches through ONE router (the coalescer folds their
+    same-shard requests into ``msearch`` frames) return exactly the
+    sequential answer, and the client-level batching demux is pinned:
+    entries queued behind an in-flight request ship as one frame and
+    demultiplex to the same (meta, arrays) a solo call returns."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator()
+        try:
+            want_s, want_i = comp.search_sparse(_DS.q_sparse, _DS.q_dense)
+            results = [None] * 6
+            def worker(j):
+                results[j] = router.search_sparse(_DS.q_sparse,
+                                                  _DS.q_dense)
+            threads = [threading.Thread(target=worker, args=(j,))
+                       for j in range(len(results))]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            for s, i in results:
+                np.testing.assert_array_equal(i, want_i)
+                np.testing.assert_array_equal(s, want_s)
+
+            # client-level: two entries queued behind an in-flight search
+            # coalesce into ONE msearch frame and demux correctly
+            pin = router._pin()
+            qd, qv = sparse_queries_to_padded(_DS.q_sparse, pin.cols,
+                                              nq_max=router._nq_max)
+            b = bucket_for(NQ, router.buckets)
+            arrays = {
+                "q_dims": pad_rows(np.atleast_2d(np.asarray(qd, np.int32)),
+                                   b, fill=pin.d_active),
+                "q_vals": pad_rows(np.atleast_2d(np.asarray(qv,
+                                                            np.float32)), b),
+                "q_dense": pad_rows(np.atleast_2d(np.asarray(_DS.q_dense,
+                                                             np.float32)),
+                                    b)}
+            meta = {"part": "main", "gen": pin.gen, "h": 8,
+                    "alpha": router.alpha, "beta": router.beta}
+            c = router.scorers[0]
+            ref_meta, ref_arr = c.call("search", meta, arrays)
+            e1 = c.submit_search(meta, arrays)   # ships immediately
+            e2 = c.submit_search(meta, arrays)   # queued behind e1
+            e3 = c.submit_search(meta, arrays)   # queued behind e1
+            for e in (e1, e2, e3):
+                rm, ra = e.result()
+                np.testing.assert_array_equal(ra["ids"], ref_arr["ids"])
+                np.testing.assert_array_equal(ra["scores"],
+                                              ref_arr["scores"])
+            assert e1.width == 1                 # solo: a plain search
+            assert e2.width == e3.width == 2     # one msearch frame
+            assert {e2.slot, e3.slot} == {0, 1}
+        finally:
+            router.close()
+
+
+# -- tentpole (b): the cluster survives its coordinator -----------------------
+
+def test_failover_promotes_caught_up_replica(tmp_path):
+    """Ingest → compact → ingest (replicas re-bootstrap onto the
+    post-compaction store and keep shipping — the ``start_seq`` horizon
+    regression), SIGKILL the primary, ``failover()``: every acked
+    mutation is served bit-identically by the promoted primary, new
+    mutations and a full cluster compaction work, and read-your-writes
+    watermarks carry across the promotion."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"), num_scorers=2,
+                             num_replicas=2) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator()
+        sess = router.session()
+        try:
+            for src in range(N0, N0 + 4):
+                np.testing.assert_array_equal(
+                    router.insert(_DS.x_sparse[src], _DS.x_dense[src],
+                                  session=sess),
+                    comp.insert(_DS.x_sparse[src], _DS.x_dense[src]))
+            assert router.compact() == 2
+            comp.compact()
+            # post-compaction mutations: a replica whose fetched snapshot
+            # starts at replay_from_seq must accept these shipped frames
+            assert router.delete([5], session=sess) == comp.delete([5]) == 1
+            src = N0 + 4
+            np.testing.assert_array_equal(
+                router.insert(_DS.x_sparse[src], _DS.x_dense[src],
+                              session=sess),
+                comp.insert(_DS.x_sparse[src], _DS.x_dense[src]))
+            _assert_parity(router, comp, session=sess)
+            for h in cluster.replicas:
+                _wait_replica_seq(h, router._last_seq)
+
+            # mutations must go through the primary, never a follower
+            rc = ShardClient("127.0.0.1", cluster.replicas[0].port)
+            try:
+                with pytest.raises(RemoteError, match="NotPrimary"):
+                    rc.call("delete",
+                            arrays={"ids": np.asarray([5], np.int64)})
+            finally:
+                rc.close()
+
+            cluster.kill_primary()
+            new_term = router.failover()
+            assert new_term == 2
+            st = router.status()
+            assert st["promotions"] == 1 and st["term"] == 2
+
+            # every acked mutation survived the coordinator, bit for bit
+            _assert_parity(router, comp, session=sess)
+
+            # the promoted primary takes new mutations + a full compaction
+            src = N0 + 5
+            np.testing.assert_array_equal(
+                router.insert(_DS.x_sparse[src], _DS.x_dense[src],
+                              session=sess),
+                comp.insert(_DS.x_sparse[src], _DS.x_dense[src]))
+            assert router.delete([7], session=sess) == comp.delete([7]) == 1
+            _assert_parity(router, comp, session=sess)
+            assert sess.watermark == router._last_seq
+            assert router.compact() == 3
+            comp.compact()
+            _assert_parity(router, comp, session=sess)
+        finally:
+            router.close()
+
+
+def test_failover_refuses_lagging_replica(tmp_path):
+    """A replica that has NOT applied every acked seq is never promoted —
+    ``failover()`` raises instead of silently losing acked mutations."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"), num_scorers=2,
+                             num_replicas=1) as cluster:
+        router = cluster.router(h=8)
+        try:
+            router.replicas[0].call("fault", {"mode": "pause_shipping"})
+            router.insert(_DS.x_sparse[N0], _DS.x_dense[N0])   # acked …
+            cluster.kill_primary()
+            with pytest.raises(FailoverError, match="lose acked"):
+                router.failover()              # … so the laggard loses
+        finally:
+            router.close()
+
+
+def test_zombie_primary_acks_refused(tmp_path):
+    """Promote a replica while the old primary is STILL ALIVE (the
+    partition case): a router that has seen the new term refuses the
+    zombie's mutation ack with ``StaleTermError`` — nothing it says can
+    move watermarks or the cached liveness view."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"), num_scorers=2,
+                             num_replicas=1) as cluster:
+        r1 = cluster.router(h=8)
+        try:
+            r1.insert(_DS.x_sparse[N0], _DS.x_dense[N0])
+            _wait_replica_seq(cluster.replicas[0], r1._last_seq)
+            promoted_port = cluster.replicas[0].port
+            assert r1.failover() == 2          # old primary NOT killed
+            # a second router bootstrapped from the new primary knows
+            # term 2; point it at the zombie and let the zombie answer
+            r2 = ClusterRouter(f"127.0.0.1:{promoted_port}",
+                               [s.addr for s in cluster.scorers], [])
+            try:
+                assert r2.term == 2
+                r2.primary.close()
+                r2.primary = ShardClient("127.0.0.1", cluster.primary.port)
+                before = r2._last_seq
+                with pytest.raises(StaleTermError, match="deposed"):
+                    r2.insert(_DS.x_sparse[N0 + 1], _DS.x_dense[N0 + 1])
+                assert r2._last_seq == before  # the ack moved nothing
+            finally:
+                r2.close()
+        finally:
+            r1.close()
+
+
+# -- satellite regressions ----------------------------------------------------
+
+def test_search_budgets_from_pinned_geometry(tmp_path):
+    """A chunk budgets its ragged slice sizes from the corpus size PINNED
+    together with the generation — a racing resync/compaction updating
+    the router's LIVE ``_num_points`` between pin and dispatch must not
+    re-budget the chunk's fetch depths from the wrong corpus."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator()
+        try:
+            for src in range(N0, N0 + 10):
+                router.insert(_DS.x_sparse[src], _DS.x_dense[src])
+                comp.insert(_DS.x_sparse[src], _DS.x_dense[src])
+            pin = router._pin()                # gen 1, num_points == N0
+            assert pin.gen == 1 and pin.num_points == N0
+            # simulate the racing thread: live geometry moves on after the
+            # pin (what a concurrent resync against a compacted cluster
+            # does), while this chunk is still in flight
+            router._num_points = N0 + 37
+            seen = []
+            orig = router._slice_sizes
+            router._slice_sizes = lambda n: (seen.append(n) or orig(n))
+            want_s, want_i = comp.search_sparse(_DS.q_sparse, _DS.q_dense)
+            qd, qv = sparse_queries_to_padded(_DS.q_sparse, pin.cols,
+                                              nq_max=router._nq_max)
+            s, i = router._search_pinned(
+                pin, np.atleast_2d(np.asarray(qd, np.int32)),
+                np.atleast_2d(np.asarray(qv, np.float32)),
+                np.atleast_2d(np.asarray(_DS.q_dense, np.float32)),
+                None, None, None, None)
+            assert seen == [N0]                # pinned n, not the live one
+            np.testing.assert_array_equal(i, want_i)
+            np.testing.assert_array_equal(s, want_s)
+        finally:
+            router.close()
+
+
+def test_direct_primary_single_query_path(tmp_path):
+    """Single-query chunks take the adaptive fan-out cutoff (DESIGN.md
+    §8.8): ONE ``part="full"`` primary read, bit-identical to the
+    in-process service with live tombstones and delta upserts in play;
+    batch chunks and the lockstep (pre-batching) router keep the full
+    scatter-gather; a compaction flipped by ANOTHER router gets the
+    server's StaleGeneration refusal and re-pins instead of serving
+    frozen pre-flip state."""
+    comp = _comparator()
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        r_lock = cluster.router(h=8, lockstep=True)
+        try:
+            for j in range(6):
+                router.insert(_DS.x_sparse[N0 + j], _DS.x_dense[N0 + j])
+                comp.insert(_DS.x_sparse[N0 + j], _DS.x_dense[N0 + j])
+            assert router.delete([3, N0 + 2]) == \
+                comp.delete([3, N0 + 2]) == 2
+            for qi in range(2):
+                qs = _DS.q_sparse[qi:qi + 1]
+                qd = _DS.q_dense[qi:qi + 1]
+                s_r, i_r = router.search_sparse(qs, qd)
+                s_c, i_c = comp.search_sparse(qs, qd)
+                np.testing.assert_array_equal(i_r, i_c)
+                np.testing.assert_array_equal(s_r, s_c)
+            assert router.stats["direct_reads"] == 2
+            _assert_parity(router, comp)       # NQ=3 bucket: fans out
+            assert router.stats["direct_reads"] == 2
+            s_l, i_l = r_lock.search_sparse(_DS.q_sparse[:1],
+                                            _DS.q_dense[:1])
+            s_c, i_c = comp.search_sparse(_DS.q_sparse[:1],
+                                          _DS.q_dense[:1])
+            np.testing.assert_array_equal(i_l, i_c)
+            np.testing.assert_array_equal(s_l, s_c)
+            assert r_lock.stats["direct_reads"] == 0
+            # the OTHER router compacts: the stale pin's direct read must
+            # re-pin, not serve generation-1 rows under flipped geometry
+            assert r_lock.compact() == 2
+            comp.compact()
+            s_r, i_r = router.search_sparse(_DS.q_sparse[:1],
+                                            _DS.q_dense[:1])
+            s_c, i_c = comp.search_sparse(_DS.q_sparse[:1],
+                                          _DS.q_dense[:1])
+            np.testing.assert_array_equal(i_r, i_c)
+            np.testing.assert_array_equal(s_r, s_c)
+            assert router.stats["stale_retries"] >= 1
+            assert router.gen == 2
+        finally:
+            r_lock.close()
+            router.close()
+    comp.close()
+
+
+def test_replica_budget_covers_fully_deleted(tmp_path):
+    """The follower-read overfetch budget covers the UNION of the cached
+    dead sets: 20 delta-only deletes leave ``main_dead`` empty but the
+    merge still drops them from the replica's parts, so the fetch depth
+    must be ``h + ceil16(20)``, not ``h``."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"), num_scorers=2,
+                             num_replicas=1) as cluster:
+        router = cluster.router(h=8, prefer_replica=True,
+                                replica_max_lag=1_000_000)
+        comp = _comparator()
+        try:
+            ids = router.insert(_DS.x_sparse[N0:N0 + 20],
+                                _DS.x_dense[N0:N0 + 20])
+            comp.insert(_DS.x_sparse[N0:N0 + 20], _DS.x_dense[N0:N0 + 20])
+            assert router.delete(ids) == comp.delete(ids) == 20
+            _wait_replica_seq(cluster.replicas[0], router._last_seq)
+            pin = router._pin()
+            assert not pin.main_dead and len(pin.fully_deleted) == 20
+            depths = []
+            orig = router.replicas[0].call
+            def spy(cmd, meta=None, arrays=None, **kw):
+                if cmd == "search":
+                    depths.append(int(meta["h"]))
+                return orig(cmd, meta, arrays, **kw)
+            router.replicas[0].call = spy
+            _assert_parity(router, comp)
+            assert router.stats["replica_reads"] == NQ
+            assert depths and all(d == 8 + ceil16(20) for d in depths)
+        finally:
+            router.close()
+
+
+def test_noop_delete_acks_seq_none(tmp_path):
+    """A delete that kills nothing logs nothing: its ack carries
+    ``seq=None`` and moves neither the router's last-seq nor the session
+    watermark — while a REAL seq of 0 (the falsy-zero regression) is
+    still observed, and a real mutation's watermark equals its seq."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        sess = router.session()
+        try:
+            before = router._last_seq
+            assert router.delete([999_999], session=sess) == 0
+            assert sess.watermark == -1 and router._last_seq == before
+            # seq is gated on ``is not None`` — a legitimate 0 must fold
+            a = router._auth[router.gen]
+            router._ack({"seq": 0, "gen": router.gen, "epoch": a.epoch,
+                         "term": a.term, "delta_live": a.delta_live},
+                        main_killed=(), session=sess)
+            assert sess.watermark == 0
+            assert router.delete([3], session=sess) == 1
+            assert sess.watermark == router._last_seq > before
+        finally:
+            router.close()
+
+
+def test_fetch_store_rejects_corrupt_blob(tmp_path):
+    """Snapshot distribution verifies every fetched blob against the
+    manifest's recorded sha256 BEFORE committing CURRENT: a bit-flipped
+    source blob fails the fetch and leaves no committed-looking store."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=1) as cluster:
+        c = ShardClient("127.0.0.1", cluster.primary.port)
+        try:
+            dst = str(tmp_path / "copy")
+            c.fetch_store(dst)
+            assert os.path.exists(os.path.join(dst, "CURRENT"))
+            rec = persist.recover(dst)         # committed AND recoverable
+            rec.durability.close()
+
+            # flip one byte of a snapshot leaf at the source
+            store = os.path.join(str(tmp_path / "c"), "store")
+            snap = persist.read_current(store)["snapshot"]
+            import json
+            with open(os.path.join(store, snap, "manifest.json")) as f:
+                leaf = next(iter(json.load(f)["leaves"].values()))
+            blob = os.path.join(store, snap, leaf["file"])
+            raw = bytearray(open(blob, "rb").read())
+            raw[len(raw) // 2] ^= 0xFF
+            with open(blob, "wb") as f:
+                f.write(raw)
+
+            dst2 = str(tmp_path / "copy2")
+            with pytest.raises(ValueError, match="sha256"):
+                c.fetch_store(dst2)
+            assert not os.path.exists(os.path.join(dst2, "CURRENT"))
+        finally:
+            c.close()

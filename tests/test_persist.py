@@ -305,6 +305,98 @@ def test_group_commit_crash_matrix_truncation(seed):
         shutil.rmtree(root, ignore_errors=True)
 
 
+# -- term fencing (DESIGN.md §8.7) --------------------------------------------
+
+def test_wal_term_monotone_and_persisted(tmp_path):
+    """Terms only grow, survive close/reopen via the TERM file, and stamp
+    every subsequently appended record."""
+    wal = persist.MutationWAL(os.path.join(str(tmp_path), "wal"))
+    assert wal.term == 1
+    wal.append_delete([1])
+    wal.set_term(3)
+    with pytest.raises(ValueError, match="monotone"):
+        wal.set_term(2)
+    wal.set_term(3)                       # idempotent re-adopt is fine
+    wal.append_delete([2])
+    wal.close()
+    wal = persist.MutationWAL(os.path.join(str(tmp_path), "wal"))
+    assert wal.term == 3
+    terms = [r.term for r in wal.records()]
+    assert terms == [1, 3]
+    wal.close()
+
+
+def test_wal_append_frames_zombie_fence(tmp_path):
+    """A shipped frame stamped with a term below the follower's is REFUSED
+    (the zombie ex-primary fence), while an overlapping re-ship of frames
+    the log already holds stays idempotent — the seq<next_seq skip runs
+    BEFORE the fence, so old same-term history never trips it."""
+    root = str(tmp_path)
+    old = persist.MutationWAL(os.path.join(root, "old"))     # term 1
+    s1 = old.append_delete([1])
+    buf1, _ = old.read_frames(s1)
+    follower = persist.MutationWAL(os.path.join(root, "f"))
+    follower.append_frames(buf1)                # term-1 history lands
+    follower.set_term(2)                        # learns of a promotion
+    # the deposed primary keeps writing in term 1 …
+    s2 = old.append_delete([2])
+    buf2, _ = old.read_frames(s2)
+    with pytest.raises(ValueError, match="zombie"):
+        follower.append_frames(buf2)            # … and is refused
+    assert follower.next_seq == s2              # nothing landed
+    # re-shipping already-held term-1 frames is still a no-op, not a raise
+    assert follower.append_frames(buf1) == []
+    old.close()
+    follower.close()
+
+
+def test_wal_append_frames_adopts_higher_term(tmp_path):
+    """A shipped frame carrying a HIGHER term is adopted durably before it
+    lands, and the noop term barrier replays as a no-op through recovery's
+    ``apply_record``."""
+    root = str(tmp_path)
+    new = persist.MutationWAL(os.path.join(root, "new"))
+    new.set_term(5)
+    sn = new.append_noop()                      # the promotion barrier
+    assert new.records()[-1].kind == persist.RECORD_NOOP
+    buf, seqs = new.read_frames(sn)
+    follower = persist.MutationWAL(os.path.join(root, "f"))
+    recs = follower.append_frames(buf)
+    assert seqs == [sn] and [r.seq for r in recs] == [sn]
+    assert follower.term == 5                   # adopted …
+    follower.close()
+    follower = persist.MutationWAL(os.path.join(root, "f"))
+    assert follower.term == 5                   # … and persisted
+    persist.apply_record(object(), recs[0])     # noop touches nothing
+    follower.close()
+    new.close()
+
+
+def test_wal_start_seq_bootstrap_continues_at_horizon(tmp_path):
+    """A brand-new log opened with ``start_seq=N`` (a follower whose
+    fetched snapshot has ``replay_from_seq=N``) accepts shipped frames
+    starting at N instead of seeing a 1..N-1 gap — the post-compaction
+    bootstrap path."""
+    root = str(tmp_path)
+    primary = persist.MutationWAL(os.path.join(root, "p"))
+    for i in range(4):
+        primary.append_delete([i])
+    primary.rotate()                            # compaction cut at seq 5
+    s5 = primary.append_delete([99])
+    assert s5 == 5
+    buf, _ = primary.read_frames(5)
+    fresh = persist.MutationWAL(os.path.join(root, "f"), start_seq=5)
+    assert fresh.next_seq == 5
+    recs = fresh.append_frames(buf)             # no gap error
+    assert [r.seq for r in recs] == [5]
+    fresh.close()
+    # start_seq is ignored once segments exist: reopen resumes after 5
+    fresh = persist.MutationWAL(os.path.join(root, "f"), start_seq=1)
+    assert fresh.next_seq == 6
+    fresh.close()
+    primary.close()
+
+
 # -- snapshot store -----------------------------------------------------------
 
 @pytest.mark.parametrize("backend,k", [("ref", 4), ("pallas-packed", 3)])
