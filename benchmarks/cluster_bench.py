@@ -19,8 +19,9 @@ measures:
 * failover: SIGKILL the primary, ``failover()`` promotes the caught-up
   replica, and the first post-promotion search — timed end to end and
   asserted bit-identical to the in-process comparator (§8.7);
-* the router's per-hop breakdown {serialize, wire, score, merge} from its
-  ``hop_s`` counters, normalized per query;
+* the router's per-hop breakdown {serialize, wire, queue, score, merge}
+  sourced from its request SPANS (DESIGN.md §9.2: ``tracer.take()`` +
+  ``stage_totals``, not client-field scraping), normalized per query;
 * replica catch-up: shipping paused, a burst of mutations logged at the
   primary, shipping resumed — applied records per second until the
   replica reaches the primary's exact seq.
@@ -32,8 +33,9 @@ Emits CSV rows like the other benchmark modules AND writes
     qps                   per Q: {router_qps, inproc_qps, rpc_overhead_x,
                           lockstep_qps, rpc_overhead_x_lockstep,
                           batching_speedup_x}
-    hops                  {serialize_us, wire_us, score_us, merge_us} per
-                          query, plus the raw totals
+    hops                  {serialize_us, wire_us, queue_us, score_us,
+                          merge_us} per query, plus the raw totals, the
+                          trace count, and ``span_sourced: true``
     multi_router          {routers, agg_qps, equivalence_checked}
     failover              {promote_s, first_search_s, term,
                           equivalence_checked}
@@ -60,6 +62,7 @@ import numpy as np
 
 from repro.core.hybrid import HybridIndex, HybridIndexParams
 from repro.data import make_hybrid_dataset
+from repro.obs import stage_totals
 from repro.serve import QueryService
 from repro.serve.cluster import LocalCluster, ShardClient, wait_ready
 
@@ -86,6 +89,7 @@ def _assert_parity(router, comp, qs, qd):
 
 def _time_search(router, qs, qd, iters):
     router.search_sparse(qs, qd)                # warm
+    router.obs.tracer.take()    # drop warm traces: hops = measured runs only
     t0 = time.perf_counter()
     for _ in range(iters):
         router.search_sparse(qs, qd)
@@ -129,8 +133,6 @@ def main(smoke: bool = False):
             for q in BATCHES:
                 qs, qd = _sub(ds, q)
                 comp.search_sparse(qs, qd)          # warm
-                for k in router.hop_s:              # hops: measured runs
-                    router.hop_s[k] = 0.0
                 router_s = _time_search(router, qs, qd, iters)
                 lock_s = _time_search(r_lock, qs, qd, iters)
                 t0 = time.perf_counter()
@@ -150,14 +152,20 @@ def main(smoke: bool = False):
                      f"overhead={router_s / inproc_s:.2f}x;"
                      f"lockstep_overhead={lock_s / inproc_s:.2f}x")
 
-            # per-hop breakdown of the LAST batch-size loop, per query
+            # per-hop breakdown of the LAST batch-size loop, per query —
+            # SPAN-SOURCED (DESIGN.md §9.2): drain the router's finished
+            # trace ring and sum the per-stage tags, instead of scraping
+            # client timing fields (which raced under concurrent chunks)
+            traces = router.obs.tracer.take()
+            totals = stage_totals(traces)
             nq = max(BATCHES) * iters
             out["hops"] = {
-                **{f"{k}_us": v / nq * 1e6 for k, v in router.hop_s.items()},
-                "totals_s": dict(router.hop_s)}
-            emit("cluster_hops", sum(router.hop_s.values()) / nq * 1e6,
-                 ";".join(f"{k}={v / nq * 1e6:.0f}us"
-                          for k, v in router.hop_s.items()))
+                **{f"{k[:-2]}_us": v / nq * 1e6 for k, v in totals.items()},
+                "totals_s": totals, "traces": len(traces),
+                "span_sourced": True}
+            emit("cluster_hops", sum(totals.values()) / nq * 1e6,
+                 ";".join(f"{k[:-2]}={v / nq * 1e6:.0f}us"
+                          for k, v in totals.items()))
 
             # -- two routers, one truth (DESIGN.md §8.4) ------------------
             # a delete through the SECOND router is immediately visible —

@@ -44,6 +44,7 @@ shard fan-out.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -618,7 +619,7 @@ def plan_overfetch(engines, h: int, deleted) -> list[int]:
 def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
                   delta_ids, deleted, qd, qv, qe, *, h: int, alpha: int,
                   beta: int, qn: int | None = None, executor=None,
-                  dedup_upserts: bool = False):
+                  dedup_upserts: bool = False, timing: dict | None = None):
     """THE fan-out merge (DESIGN.md §6.2): dispatch every main engine plus
     the delta engine back-to-back (JAX async dispatch overlaps them — the
     in-process form of the paper's §7.2 RPC fan-out), assemble the per-
@@ -646,8 +647,15 @@ def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
     in-process path leaves it None because JAX async dispatch already
     overlaps device work.  ``dedup_upserts`` forwards to
     ``merge_topk_host`` (see its docstring for the cross-transport upsert
-    race it closes).  Returns ``(scores, ids) (qn, h)`` numpy arrays.
+    race it closes).  ``timing``, when a dict, receives ``dispatch_s``
+    (dispatch + collect of every engine) and ``merge_s`` (host assembly +
+    top-h merge) wall seconds — the span tags ``QueryService`` feeds its
+    ``serve.batch`` children (DESIGN.md §9.2; note JAX async dispatch can
+    defer device sync into the assembly step, so on the in-process path
+    ``merge_s`` includes the device wait).  Returns ``(scores, ids)
+    (qn, h)`` numpy arrays.
     """
+    t0 = time.perf_counter()
     if executor is not None:
         futs = [executor.submit(e.search, qd, qv, qe, h=hf,
                                 alpha=alpha, beta=beta)
@@ -667,6 +675,7 @@ def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
             delta_out = delta_engine.search(qd, qv, qe,
                                             h=delta_engine.num_points,
                                             alpha=alpha, beta=beta)
+    t1 = time.perf_counter()
     # assemble per-engine candidate parts in a COMMON id space.  Shards
     # stay in row order so stable-sort tie-breaking matches lax.top_k on
     # the unsharded array.
@@ -687,8 +696,12 @@ def fanout_search(engines, h_fetch, offsets, id_map, delta_engine,
             s, pos = s[:qn], pos[:qn]
         parts.append((s, pos if delta_ids is None else delta_ids[pos],
                       False))
-    return merge_topk_host(parts, h, drop_ids=deleted,
-                           dedup_upserts=dedup_upserts)
+    out = merge_topk_host(parts, h, drop_ids=deleted,
+                          dedup_upserts=dedup_upserts)
+    if timing is not None:
+        timing["dispatch_s"] = t1 - t0
+        timing["merge_s"] = time.perf_counter() - t1
+    return out
 
 
 def search_mutable(index, q_sparse, q_dense, h: int = 20,

@@ -70,6 +70,18 @@ def run_lm(args) -> None:
     print("sample:", jnp.asarray(out)[0, :16].tolist())
 
 
+def _maybe_metrics_server(args, registry):
+    """Stand up the ``--metrics-port`` text endpoint (DESIGN.md §9.1) over
+    ``registry``; None when the flag wasn't given.  Port 0 binds an
+    ephemeral port (printed)."""
+    if getattr(args, "metrics_port", None) is None:
+        return None
+    from repro.obs import start_metrics_server
+    ms = start_metrics_server(registry, args.metrics_port)
+    print(f"metrics endpoint: http://127.0.0.1:{ms.port}/metrics")
+    return ms
+
+
 def run_durable_retrieval(args) -> None:
     """Durable serving loop (DESIGN.md §7): bootstrap or restore a snapshot
     store + WAL, mutate under load, and report recovery/persistence stats."""
@@ -99,11 +111,14 @@ def run_durable_retrieval(args) -> None:
         svc.delete(new[:8])
         print(f"logged {len(new)} inserts + 8 deletes to the WAL; "
               f"stats: {svc.stats()}")
+    ms = _maybe_metrics_server(args, svc.obs.metrics)
     t0 = time.perf_counter()
     s, ids = svc.search_sparse(ds.q_sparse, ds.q_dense)
     dt = time.perf_counter() - t0
     print(f"served {ids.shape[0]} queries in {dt:.2f}s "
           f"(top ids {ids[0, :5].tolist()})")
+    if ms is not None:
+        ms.close()
     svc.close()
 
 
@@ -131,6 +146,7 @@ def run_retrieval(args) -> None:
     svc = QueryService(idx.engine, h=args.h, buckets=(1, 8, 32),
                        cache_size=4 * args.queries, num_shards=args.shards,
                        id_map=idx.pi)
+    ms = _maybe_metrics_server(args, svc.obs.metrics)
 
     rng = np.random.default_rng(args.seed)
     sizes = rng.integers(1, 33, 64)
@@ -163,6 +179,8 @@ def run_retrieval(args) -> None:
           f"(hit rate {info.hit_rate:.2f}, {info.evictions} evictions)")
     print(f"jit shapes: {jit.batch_shapes} (bound {jit.bound})")
     print("stats:", svc.stats())
+    if ms is not None:
+        ms.close()
     svc.close()
 
 
@@ -189,6 +207,7 @@ def run_router(args) -> None:
                              num_replicas=args.replicas) as cluster:
         router = cluster.router(h=args.h,
                                 replica_max_lag=args.replica_max_lag)
+        ms = _maybe_metrics_server(args, router.obs.metrics)
         new = router.insert(ds.x_sparse[n0:], ds.x_dense[n0:])
         router.delete(new[:8].tolist())
         t0 = time.perf_counter()
@@ -197,6 +216,9 @@ def run_router(args) -> None:
         print(f"served {ids.shape[0]} queries in {dt:.2f}s "
               f"(top ids {ids[0, :5].tolist()})")
         print("router status:", router.status())
+        print("hop stage totals (s):", router.hops())
+        if ms is not None:
+            ms.close()
         router.close()
 
 
@@ -246,6 +268,11 @@ def main():
     ap.add_argument("--restore",
                     help="recover the index from this store (snapshot + "
                          "WAL replay) and serve it")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose the process's metrics registry as a text "
+                         "endpoint on this port (0 = ephemeral; DESIGN.md "
+                         "§9.1).  In --role shard mode the flag is "
+                         "forwarded to the shard server")
     args = ap.parse_args()
     if args.role == "router":
         run_router(args)

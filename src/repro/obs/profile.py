@@ -1,0 +1,111 @@
+"""Profiling hooks (DESIGN.md §9.3): opt-in ``jax.profiler`` capture
+around engine dispatch, plus per-pass device-time attribution that
+feeds the roofline tables.
+
+Everything degrades to a no-op when ``jax.profiler`` is unavailable
+(CPU-only CI images, stubbed jax), so call sites never guard on
+imports.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+
+__all__ = ["profiler_available", "device_trace", "StepAnnotation",
+           "pass_breakdown"]
+
+
+def _profiler():
+    try:
+        import jax.profiler as p
+        return p
+    except Exception:
+        return None
+
+
+def profiler_available() -> bool:
+    """True when ``jax.profiler`` can be imported (a capture directory
+    will actually receive a trace)."""
+    return _profiler() is not None
+
+
+@contextlib.contextmanager
+def device_trace(log_dir: str | None):
+    """Context manager wrapping ``jax.profiler.trace(log_dir)`` around a
+    region of engine dispatches.  A None ``log_dir`` (the default
+    everywhere — profiling is opt-in) or a missing profiler makes this a
+    no-op, so benchmarks can wrap their hot loops unconditionally."""
+    p = _profiler()
+    if log_dir is None or p is None:
+        yield
+        return
+    p.start_trace(log_dir)
+    try:
+        yield
+    finally:
+        p.stop_trace()
+
+
+class StepAnnotation:
+    """``jax.profiler.StepTraceAnnotation`` with a no-op fallback: names
+    one engine dispatch inside a device trace so per-pass device time is
+    attributable in the captured timeline."""
+
+    def __init__(self, name: str, **kw):
+        p = _profiler()
+        self._inner = (p.StepTraceAnnotation(name, **kw)
+                       if p is not None and
+                       hasattr(p, "StepTraceAnnotation") else None)
+
+    def __enter__(self):
+        if self._inner is not None:
+            self._inner.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        if self._inner is not None:
+            return self._inner.__exit__(*exc)
+        return None
+
+
+def pass_breakdown(engine, q_dims, q_vals, q_dense, *, h: int,
+                   alpha: int, beta: int, iters: int = 3) -> dict:
+    """Per-pass device-time attribution for one engine + query batch:
+    times pass-1-only top-k (the scan the roofline models) against the
+    full three-pass search, both with ``block_until_ready``, and reports
+    the pass-1 fraction — the measured companion to the predicted
+    bytes/point in ``src/repro/roofline/`` (DESIGN.md §9.3).
+
+    Returns ``{"pass1_s", "full_s", "pass23_s", "pass1_fraction",
+    "iters", "backend"}`` (best-of-``iters`` wall seconds)."""
+    import jax
+    from ..core.pq import adc_lut
+
+    c1, _ = engine.candidate_counts(h, alpha, beta)
+    lut = adc_lut(q_dense, engine.arrays.codebooks)
+
+    def _time(fn):
+        best = None
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            best = dt if best is None or dt < best else best
+        return best
+
+    # warm both compiles outside the timed loop
+    jax.block_until_ready(engine.pass1_topk(q_dims, q_vals, lut, c1))
+    jax.block_until_ready(engine.search(q_dims, q_vals, q_dense,
+                                        h=h, alpha=alpha, beta=beta))
+    pass1_s = _time(lambda: engine.pass1_topk(q_dims, q_vals, lut, c1))
+    full_s = _time(lambda: engine.search(q_dims, q_vals, q_dense,
+                                         h=h, alpha=alpha, beta=beta))
+    pass23_s = max(0.0, full_s - pass1_s)
+    # wall-clock jitter can time pass-1 alone above the fused full pass;
+    # an attribution fraction is [0, 1] by definition, so clamp
+    frac = min(1.0, pass1_s / full_s) if full_s > 0 else 0.0
+    return {"pass1_s": pass1_s, "full_s": full_s, "pass23_s": pass23_s,
+            "pass1_fraction": frac,
+            "iters": iters, "backend": str(engine.backend)}

@@ -183,7 +183,7 @@ class Durability:
 
 
 def bootstrap(root: str, index, *, sync: bool = True,
-              keep_last: int = 2) -> Durability:
+              keep_last: int = 2, metrics=None) -> Durability:
     """Initialize an EMPTY store root with the initial snapshot of a
     freshly built mutable index and an empty WAL; returns the attached
     ``Durability``.  Refuses a root that already holds a committed store
@@ -201,11 +201,12 @@ def bootstrap(root: str, index, *, sync: bool = True,
     # snapshot FIRST (it also validates the index is pristine): a rejected
     # index must not leave an open WAL handle or a stray wal/ directory
     write_snapshot(root, index, replay_from_seq=1, keep_last=keep_last)
-    return Durability(root, MutationWAL(wal_dir, sync=sync))
+    return Durability(root, MutationWAL(wal_dir, sync=sync,
+                                        metrics=metrics))
 
 
 def recover(root: str, *, backend=None, sync: bool = True,
-            verify: bool = True) -> RecoveryResult:
+            verify: bool = True, metrics=None) -> RecoveryResult:
     """Snapshot-load + WAL-replay; returns the rebuilt mutable index and a
     re-attached ``Durability`` whose appends continue the recovered log
     (the torn tail, if any, was truncated when the WAL reopened)."""
@@ -220,7 +221,8 @@ def recover(root: str, *, backend=None, sync: bool = True,
     # log AT the snapshot's replay horizon, so shipped frames continue it
     # without a fake gap
     wal = MutationWAL(os.path.join(root, _WAL_SUBDIR), sync=sync,
-                      start_seq=int(manifest["replay_from_seq"]))
+                      start_seq=int(manifest["replay_from_seq"]),
+                      metrics=metrics)
     replayed, last_seq = 0, 0
     for record in wal.records(from_seq=manifest["replay_from_seq"]):
         apply_record(index, record)

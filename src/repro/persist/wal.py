@@ -53,6 +53,7 @@ import dataclasses
 import os
 import struct
 import threading
+import time
 import zlib
 
 import numpy as np
@@ -166,9 +167,22 @@ class MutationWAL:
     explicitly."""
 
     def __init__(self, wal_dir: str, *, sync: bool = True,
-                 start_seq: int = 1):
+                 start_seq: int = 1, metrics=None):
         self.wal_dir = wal_dir
         self.sync = sync
+        # durability instruments (DESIGN.md §9.1): optional registry-backed
+        # histograms/gauge, plus always-on plain attributes so
+        # ``QueryService.stats()`` can report fsync health even when no
+        # registry was threaded through.
+        from repro.obs.metrics import NULL_REGISTRY
+        reg = NULL_REGISTRY if metrics is None else metrics
+        self._h_fsync = reg.histogram("wal.fsync_s")
+        self._h_batch = reg.histogram(
+            "wal.group_commit_batch",
+            bounds=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024))
+        self._g_backlog = reg.gauge("wal.unsynced_backlog")
+        self.last_fsync_s = 0.0      # duration of the most recent fsync
+        self.last_group_batch = 0    # records that fsync covered (acked)
         # _append_lock orders frame bytes + next_seq; _sync_lock serializes
         # fsyncs and guards _synced_seq.  Lock order: _sync_lock BEFORE
         # _append_lock (sync_to, rotate); append takes only _append_lock.
@@ -306,8 +320,18 @@ class MutationWAL:
                 # _sync_lock keeps rotate() from closing the handle under us
                 target = self.next_seq - 1
                 fileno = self._file.fileno()
+            synced_before = self._synced_seq
+            t0 = time.perf_counter()
             os.fsync(fileno)
+            dt = time.perf_counter() - t0
             self._synced_seq = max(self._synced_seq, target)
+            batch = max(0, target - synced_before)
+            self.last_fsync_s = dt
+            self.last_group_batch = batch
+            self._h_fsync.observe(dt)
+            if batch:
+                self._h_batch.observe(batch)
+            self._g_backlog.set(self.unsynced_backlog)
 
     def append_insert(self, x_sparse, x_dense, ids, *,
                       sync: bool | None = None) -> int:
@@ -490,6 +514,13 @@ class MutationWAL:
                     "lost; refusing to recover past it")
             out.extend(r for r in records if r.seq >= from_seq)
         return out
+
+    @property
+    def unsynced_backlog(self) -> int:
+        """Records appended (and OS-flushed) but not yet covered by a
+        disk sync — the group-commit exposure window.  Always 0 right
+        after a covering ``sync_to`` returns."""
+        return max(0, self.next_seq - 1 - self._synced_seq)
 
     @property
     def segment_paths(self) -> list[str]:

@@ -40,6 +40,7 @@ import time
 
 import numpy as np
 
+from ...obs.trace import NULL_SPAN
 from .protocol import MSG_ERROR, RemoteError, build_frame, recv_msg
 
 __all__ = ["ShardClient", "PendingReply", "RemoteMainEngine",
@@ -61,8 +62,10 @@ class PendingReply:
     A transport failure fails every in-flight pending on the connection
     (framing is lost for all of them); the raised error is the original
     ``ConnectionError``/``TornFrameError`` so callers keep their existing
-    retry semantics.  ``send_s``/``wall_s`` carry per-request timing for
-    the router's hop accounting."""
+    retry semantics.  ``send_s``/``wall_s`` carry PER-REQUEST timing (one
+    ``PendingReply`` per submit — never shared across requests, so
+    concurrent fan-outs can't overwrite each other's numbers; the router
+    folds them into hop spans, DESIGN.md §9.2)."""
 
     def __init__(self, client: "ShardClient", cmd: str):
         self.client = client
@@ -116,7 +119,14 @@ class PendingReply:
 class _CoalescedReply:
     """One search enrolled in a coalescing batch (``submit_search``): holds
     its slot in the (eventual) ``msearch`` frame and demuxes its own
-    sub-result out of the shared reply."""
+    sub-result out of the shared reply.
+
+    Timing lives ON THE ENTRY, not on the client or the shared pending:
+    ``queue_s`` (enqueue → flush, the client-side coalescer wait),
+    ``wall_s`` (enqueue → this entry's reply collected) and ``send_s``
+    (the shared frame's send duration) are written once per entry, so
+    overlapping coalesced requests keep independent numbers — the race
+    the old shared ``last_*`` fields had (DESIGN.md §9.2)."""
 
     def __init__(self, meta: dict, arrays: dict,
                  frame: bytes | None = None):
@@ -125,6 +135,10 @@ class _CoalescedReply:
         self.frame = frame
         self.slot = 0
         self.width = 1
+        self.t_enq = time.perf_counter()
+        self.queue_s = 0.0
+        self.send_s = 0.0
+        self.wall_s = 0.0
         self._ready = threading.Event()
         self._pending: PendingReply | None = None
         self._exc: BaseException | None = None
@@ -139,6 +153,8 @@ class _CoalescedReply:
             raise self._exc
         try:
             op, meta, arrays = self._pending.wait()
+            self.wall_s = time.perf_counter() - self.t_enq
+            self.send_s = self._pending.send_s
         finally:
             self._batch.on_complete()      # kick the next queued flush
         meta.pop("cmd", None)
@@ -188,10 +204,6 @@ class ShardClient:
         self.reconnects = 0
         self.bytes_sent = 0
         self.bytes_recv = 0
-        # per-call timing of the LAST ``call`` (the router's lockstep-mode
-        # per-hop latency breakdown reads these right after each fan-out)
-        self.last_send_s = 0.0
-        self.last_wall_s = 0.0
         self._sock: socket.socket | None = None
         self._send_lock = threading.Lock()
         self._recv_lock = threading.Lock()
@@ -270,13 +282,17 @@ class ShardClient:
     # -- blocking call (with the one-reconnect heal) ----------------------
 
     def call(self, cmd: str, meta: dict | None = None,
-             arrays: dict | None = None, *, retry: bool = True
-             ) -> tuple[dict, dict]:
+             arrays: dict | None = None, *, retry: bool = True,
+             span=NULL_SPAN) -> tuple[dict, dict]:
         """Send one request, read its reply; returns ``(meta, arrays)``.
         Transport failures (torn frame, dead socket) are healed by one
         reconnect + resend when ``retry`` (callers disable it for
         non-idempotent mutations and re-drive at their own layer);
-        ``MSG_ERROR`` replies raise ``RemoteError``."""
+        ``MSG_ERROR`` replies raise ``RemoteError``.  ``span`` receives
+        this call's timing tags (``serialize_s`` accumulated across the
+        heal, ``wall_s`` of the attempt that answered) plus a
+        ``reconnect_resend`` annotation when the heal fired — per-request
+        hop accounting with no shared client fields (DESIGN.md §9.2)."""
         frame = build_frame(cmd, meta, arrays)
         attempts = 2 if retry else 1
         for attempt in range(attempts):
@@ -292,8 +308,9 @@ class ShardClient:
                         f"shard {self.addr} unreachable for "
                         f"{cmd!r}: {e}") from e
                 self.reconnects += 1
-        self.last_send_s = p.send_s
-        self.last_wall_s = p.wall_s
+                span.annotate(f"reconnect_resend cmd={cmd}")
+        span.add("serialize_s", p.send_s)
+        span.set("wall_s", p.wall_s)
         rmeta.pop("cmd", None)
         if op == MSG_ERROR:
             raise RemoteError(
@@ -338,6 +355,9 @@ class ShardClient:
         """Ship one batch as a single pipelined frame: a plain ``search``
         for a batch of one, an ``msearch`` (sub-metas under ``subs``,
         arrays keyed ``"<i>:<name>"``) otherwise."""
+        now = time.perf_counter()
+        for e in batch:
+            e.queue_s = now - e.t_enq      # client-side coalescer wait
         try:
             if len(batch) == 1:
                 p = self.submit("search", batch[0].meta, batch[0].arrays,

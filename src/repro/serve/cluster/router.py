@@ -49,6 +49,8 @@ import numpy as np
 from repro.core.distributed import ceil16, merge_topk_host
 from repro.core.sparse_index import (CompactColumns,
                                      sparse_queries_to_padded)
+from repro.obs import Observability
+from repro.obs.trace import NULL_SPAN
 from repro.serve.query_service import DEFAULT_BUCKETS, bucket_for, pad_rows
 
 from .client import ShardClient, ShardUnavailableError
@@ -157,7 +159,11 @@ class ClusterRouter:
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  prefer_replica: bool = False, replica_max_lag: int = 0,
                  lockstep: bool = False, direct_q_max: int = 1,
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, obs: Observability | None = None):
+        # tracing defaults ON for the router: per-chunk span trees are
+        # the hop breakdown's only source (DESIGN.md §9.2), and their
+        # cost is microseconds against millisecond RPCs
+        self.obs = obs if obs is not None else Observability(trace=True)
         self.primary = ShardClient(*_addr(primary), timeout=timeout)
         self.scorers = [ShardClient(*_addr(a), timeout=timeout)
                         for a in scorers]
@@ -193,8 +199,13 @@ class ClusterRouter:
                       "direct_reads": 0, "failovers": 0, "degraded": 0,
                       "stale_retries": 0, "excluded_stale": 0,
                       "queries": 0, "resyncs": 0, "promotions": 0}
-        self.hop_s = {"serialize": 0.0, "wire": 0.0, "score": 0.0,
-                      "merge": 0.0}
+        # cumulative per-stage hop counters, folded from finished chunk
+        # spans (``_fold_stages``) — the span-sourced replacement for the
+        # old ad-hoc ``hop_s`` field scraping (DESIGN.md §9.2)
+        m = self.obs.metrics
+        self._hop_c = {k: m.counter(f"cluster.hop.{k}")
+                       for k in ("serialize_s", "wire_s", "queue_s",
+                                 "score_s", "merge_s")}
 
     # -- sessions ---------------------------------------------------------
 
@@ -254,18 +265,26 @@ class ClusterRouter:
     # -- mutations (primary only) -----------------------------------------
 
     def _ack(self, meta: dict, *, main_killed, resurrected=(),
-             fully_killed=(), session: Session | None) -> None:
+             fully_killed=(), session: Session | None,
+             span=NULL_SPAN) -> None:
         """Fold one mutation ack into the watermark state and — when the
         ack extends the cache's exact ``(term, epoch)`` tag — the cached
         liveness view.  An ack that does NOT extend the tag (another
         router mutated in between) invalidates the cache instead: the
         next read's delta response re-syncs it from authority.  A stale
         term raises ``StaleTermError`` BEFORE anything is folded — a
-        zombie's ack must not move watermarks."""
+        zombie's ack must not move watermarks (and the refusal is
+        recorded as a ``term_fenced`` annotation on the mutation's
+        span)."""
         seq = meta["seq"]
         term = int(meta.get("term", 0))
         with self._lock:
-            self._fence_term(term)
+            try:
+                self._fence_term(term)
+            except StaleTermError:
+                span.annotate(f"term_fenced: ack term {term} < "
+                              f"router term {self.term}, refused")
+                raise
             g = int(meta["gen"])
             e = int(meta.get("epoch", 0))
             a = self._auth.get(g)
@@ -301,10 +320,17 @@ class ClusterRouter:
                   "dense": np.atleast_2d(np.asarray(x_dense, np.float32))}
         if ids is not None:
             arrays["ids"] = np.atleast_1d(np.asarray(ids, np.int64))
-        meta, arr = self.primary.call("insert", arrays=arrays, retry=False)
-        assigned = arr["ids"]
-        self._ack(meta, main_killed=arr["main_killed"],
-                  resurrected=assigned.tolist(), session=session)
+        with self.obs.tracer.root("cluster.insert") as sp:
+            hs = sp.child("rpc", peer=self.primary.addr, part="insert")
+            ctx = sp.wire_context()
+            meta, arr = self.primary.call(
+                "insert", {"trace": ctx} if ctx else None, arrays,
+                retry=False, span=hs)
+            self._finish_hop(hs, meta)
+            assigned = arr["ids"]
+            self._ack(meta, main_killed=arr["main_killed"],
+                      resurrected=assigned.tolist(), session=session,
+                      span=sp)
         return assigned
 
     def delete(self, ids, session: Session | None = None) -> int:
@@ -312,12 +338,17 @@ class ClusterRouter:
         The ack's killed ids join BOTH cached sets: ``main_dead`` (drop
         from scorer parts) and ``fully_deleted`` (the overlay that stops a
         lagging replica resurrecting them, DESIGN.md §8.4)."""
-        meta, arr = self.primary.call(
-            "delete", arrays={"ids": np.atleast_1d(np.asarray(ids,
-                                                              np.int64))},
-            retry=False)
-        self._ack(meta, main_killed=arr["main_killed"],
-                  fully_killed=arr["killed_ids"].tolist(), session=session)
+        with self.obs.tracer.root("cluster.delete") as sp:
+            hs = sp.child("rpc", peer=self.primary.addr, part="delete")
+            ctx = sp.wire_context()
+            meta, arr = self.primary.call(
+                "delete", {"trace": ctx} if ctx else None,
+                {"ids": np.atleast_1d(np.asarray(ids, np.int64))},
+                retry=False, span=hs)
+            self._finish_hop(hs, meta)
+            self._ack(meta, main_killed=arr["main_killed"],
+                      fully_killed=arr["killed_ids"].tolist(),
+                      session=session, span=sp)
         return int(meta["killed"])
 
     # -- compaction (cluster-wide generation flip) ------------------------
@@ -371,53 +402,64 @@ class ClusterRouter:
             sealed = self._last_seq
             gen = self.gen
             known_term = self.term
-        candidates = []
-        for i, rep in enumerate(self.replicas):
-            try:
-                st, _ = rep.call("status")
-            except (ShardUnavailableError, ConnectionError):
-                continue
-            known_term = max(known_term, int(st.get("term", 0)))
-            if st.get("role") != "replica" or int(st["gen"]) != gen:
-                continue
-            candidates.append((int(st["applied_seq"]), i))
-        eligible = [(a, i) for a, i in candidates if a >= sealed]
-        if new_primary is not None:
-            eligible = [(a, i) for a, i in eligible if i == new_primary]
-        if not eligible:
-            raise FailoverError(
-                f"no eligible promotion candidate: need applied_seq >= "
-                f"sealed seq {sealed} at gen {gen}, saw "
-                f"{sorted(candidates)}; promoting a lagging replica would "
-                "lose acked mutations")
-        eligible.sort(key=lambda t: (-t[0], t[1]))
-        win = eligible[0][1]
-        new_term = known_term + 1
-        target = self.replicas[win]
-        meta, _ = target.call("promote", {"sealed_seq": sealed,
-                                          "new_term": new_term},
-                              retry=False)
-        old = self.primary
-        with self._lock:
-            self.primary = target
-            del self.replicas[win]
-            del self._replica_seq[win]
-            self.term = new_term
-            self._last_seq = max(self._last_seq, int(meta["applied_seq"]))
-            # the new primary's state IS the authority now — drop the
-            # cache and re-sync below rather than trusting anything folded
-            # from the deposed primary's acks
-            self._auth.pop(gen, None)
-            self.stats["promotions"] += 1
-        new_addr = f"{target.host}:{target.port}"
-        for c in [*self.scorers, *self.replicas]:
-            try:
-                c.call("set_peer", {"peer": new_addr})
-            except (ShardUnavailableError, ConnectionError):
-                pass                 # unreachable now; it re-learns on
+        with self.obs.tracer.root("cluster.failover", gen=gen,
+                                  sealed_seq=sealed) as sp:
+            candidates = []
+            for i, rep in enumerate(self.replicas):
+                try:
+                    st, _ = rep.call("status")
+                except (ShardUnavailableError, ConnectionError):
+                    sp.annotate(f"candidate {rep.addr} unreachable")
+                    continue
+                known_term = max(known_term, int(st.get("term", 0)))
+                if st.get("role") != "replica" or int(st["gen"]) != gen:
+                    continue
+                candidates.append((int(st["applied_seq"]), i))
+                sp.annotate(f"candidate {rep.addr} "
+                            f"applied={int(st['applied_seq'])}")
+            eligible = [(a, i) for a, i in candidates if a >= sealed]
+            if new_primary is not None:
+                eligible = [(a, i) for a, i in eligible
+                            if i == new_primary]
+            if not eligible:
+                sp.annotate("election_failed: no caught-up candidate")
+                raise FailoverError(
+                    f"no eligible promotion candidate: need applied_seq "
+                    f">= sealed seq {sealed} at gen {gen}, saw "
+                    f"{sorted(candidates)}; promoting a lagging replica "
+                    "would lose acked mutations")
+            eligible.sort(key=lambda t: (-t[0], t[1]))
+            win = eligible[0][1]
+            new_term = known_term + 1
+            target = self.replicas[win]
+            sp.annotate(f"promote winner={target.addr} "
+                        f"new_term={new_term}")
+            meta, _ = target.call("promote", {"sealed_seq": sealed,
+                                              "new_term": new_term},
+                                  retry=False)
+            old = self.primary
+            with self._lock:
+                self.primary = target
+                del self.replicas[win]
+                del self._replica_seq[win]
+                self.term = new_term
+                self._last_seq = max(self._last_seq,
+                                     int(meta["applied_seq"]))
+                # the new primary's state IS the authority now — drop the
+                # cache and re-sync below rather than trusting anything
+                # folded from the deposed primary's acks
+                self._auth.pop(gen, None)
+                self.stats["promotions"] += 1
+            sp.set("term", new_term)
+            new_addr = f"{target.host}:{target.port}"
+            for c in [*self.scorers, *self.replicas]:
+                try:
+                    c.call("set_peer", {"peer": new_addr})
+                except (ShardUnavailableError, ConnectionError):
+                    pass             # unreachable now; it re-learns on
                                      # restart or the next reload
-        old.close()
-        self._resync()
+            old.close()
+            self._resync()
         return new_term
 
     # -- search -----------------------------------------------------------
@@ -494,37 +536,46 @@ class ClusterRouter:
         max_bucket = self.buckets[-1]
         for lo in range(0, qn_total, max_bucket):
             hi = min(lo + max_bucket, qn_total)
-            for attempt in range(_retries):
-                try:
-                    s, ids = self._run_chunk(pin, q_dims[lo:hi],
-                                             q_vals[lo:hi], q_dense[lo:hi],
-                                             h, alpha, beta, session)
-                    break
-                except RemoteError as e:
-                    if "StaleGeneration" not in str(e) \
-                            or attempt + 1 >= _retries:
-                        raise
-                    # a compaction flipped generations mid-flight (possibly
-                    # driven by ANOTHER router): re-learn the cluster state
-                    # from the primary, re-pin, retry against the new epoch
-                    with self._lock:
-                        self.stats["stale_retries"] += 1
-                    # mid-flip the scorers lag the primary's new
-                    # generation by a store fetch + reload — back off
-                    # so the retry budget spans the whole flip
-                    time.sleep(0.05 * (attempt + 1))
+            # one root span per chunk, covering its whole retry loop —
+            # the trace tree the hop breakdown is sourced from
+            with self.obs.tracer.root("cluster.search",
+                                      qn=hi - lo, gen=pin.gen) as span:
+                for attempt in range(_retries):
                     try:
-                        self._resync()
-                    except (ShardUnavailableError, ConnectionError):
-                        pass
-                    pin = self._pin()
+                        s, ids = self._run_chunk(
+                            pin, q_dims[lo:hi], q_vals[lo:hi],
+                            q_dense[lo:hi], h, alpha, beta, session,
+                            span)
+                        break
+                    except RemoteError as e:
+                        if "StaleGeneration" not in str(e) \
+                                or attempt + 1 >= _retries:
+                            raise
+                        # a compaction flipped generations mid-flight
+                        # (possibly driven by ANOTHER router): re-learn
+                        # the cluster state from the primary, re-pin,
+                        # retry against the new epoch
+                        with self._lock:
+                            self.stats["stale_retries"] += 1
+                        span.annotate("stale_generation_resync "
+                                      f"attempt={attempt + 1}")
+                        # mid-flip the scorers lag the primary's new
+                        # generation by a store fetch + reload — back off
+                        # so the retry budget spans the whole flip
+                        time.sleep(0.05 * (attempt + 1))
+                        try:
+                            self._resync()
+                        except (ShardUnavailableError, ConnectionError):
+                            pass
+                        pin = self._pin()
+                        span.set("gen", pin.gen)
             out_s[lo:hi], out_i[lo:hi] = s, ids
         with self._lock:
             self.stats["queries"] += qn_total
         return out_s, out_i
 
     def _run_chunk(self, pin, q_dims, q_vals, q_dense, h, alpha,
-                   beta, session):
+                   beta, session, span=NULL_SPAN):
         qn = q_dims.shape[0]
         bucket = bucket_for(qn, self.buckets)
         qd = pad_rows(q_dims, bucket, fill=pin.d_active)
@@ -535,48 +586,95 @@ class ClusterRouter:
 
         if self.prefer_replica and self.replicas:
             res = self._try_replicas(pin, qd, qv, qe, qn, h, alpha, beta,
-                                     floor)
+                                     floor, span)
             if res is not None:
                 return res
         try:
             if bucket <= self.direct_q_max and not self.lockstep:
                 return self._primary_full(pin, qd, qv, qe, qn, h,
-                                          alpha, beta)
-            return self._fanout(pin, qd, qv, qe, qn, h, alpha, beta)
+                                          alpha, beta, span)
+            return self._fanout(pin, qd, qv, qe, qn, h, alpha, beta,
+                                span)
         except (ShardUnavailableError, ConnectionError):
             with self._lock:
                 self.stats["failovers"] += 1
+            span.annotate("shard_unreachable: replica failover")
             res = self._try_replicas(pin, qd, qv, qe, qn, h, alpha, beta,
-                                     floor)
+                                     floor, span)
             if res is not None:
                 return res
             with self._lock:
                 self.stats["degraded"] += 1
+            span.annotate("degraded: no caught-up replica")
             raise DegradedResultError(
                 "a scoring shard is unreachable and no replica has "
                 f"applied seq >= {floor}; refusing to return a silently "
                 "truncated top-k") from None
 
-    def _collect(self, client, entry, cmd, meta, arrays):
+    def _collect(self, client, entry, cmd, meta, arrays, span=NULL_SPAN):
         """Collect one pipelined reply, healing a transport failure (torn
         frame, dropped socket) with ONE fresh-connection resend — the same
         discipline and ``reconnects`` accounting as ``ShardClient.call``;
         searches are idempotent, so the resend is safe.  Returns
-        ``(rmeta, rarrays, wall_s, send_s)``."""
+        ``(rmeta, rarrays)``; the entry's PER-REQUEST timing (wall /
+        serialize / coalescer queue — _CoalescedReply fields, never
+        shared across requests) is folded into ``span``, and a healed
+        resend both re-times through ``call(span=…)`` and annotates the
+        span, so the trace survives the reconnect (DESIGN.md §9.2)."""
         try:
             rmeta, rarr = entry.result()
-            p = getattr(entry, "_pending", entry)
-            return rmeta, rarr, p.wall_s, p.send_s
+            span.add("serialize_s", entry.send_s)
+            span.add("queue_s", entry.queue_s)
+            span.set("wall_s", entry.wall_s)
+            return rmeta, rarr
         except RemoteError:
             raise
         except ShardUnavailableError:
             raise
         except (ConnectionError, OSError):
             client.reconnects += 1
-            rmeta, rarr = client.call(cmd, meta, arrays, retry=False)
-            return rmeta, rarr, client.last_wall_s, client.last_send_s
+            span.annotate(f"reconnect_resend cmd={cmd}")
+            return client.call(cmd, meta, arrays, retry=False, span=span)
 
-    def _primary_full(self, pin, qd, qv, qe, qn, h, alpha, beta):
+    def _finish_hop(self, hs, rmeta: dict) -> None:
+        """Finish one hop span: attach the shard's serialized child span
+        (``rmeta["trace"]``, present iff the request carried a trace
+        context), fold its server-measured ``queue_s``/``score_s`` into
+        the hop's stage tags, and set ``wire_s`` as the residual so the
+        stages sum exactly to the hop's measured ``wall_s``
+        (serialize + queue + score + wire == wall, DESIGN.md §9.2)."""
+        rt = rmeta.get("trace")
+        # every hop carries the full stage vocabulary (queue_s is 0.0
+        # for replies without a server span, e.g. mutations)
+        hs.add("queue_s", float(rt.get("queue_s", 0.0)) if rt else 0.0)
+        if rt:
+            # score/queue live as hop stage tags; don't duplicate them on
+            # the attached child or stage totals would double-count
+            hs.attach_remote({k: v for k, v in rt.items()
+                              if k not in ("queue_s", "score_s")})
+        hs.add("score_s", float(rmeta.get("score_s", 0.0)))
+        wall = hs.tags.get("wall_s", 0.0)
+        measured = (hs.tags.get("serialize_s", 0.0)
+                    + hs.tags.get("queue_s", 0.0)
+                    + hs.tags.get("score_s", 0.0))
+        hs.set("wire_s", max(0.0, wall - measured))
+        hs.end()
+        # fold this hop into the cumulative counters exactly once (per
+        # hop span, so chunk retries never double-count)
+        for k in ("serialize_s", "wire_s", "queue_s", "score_s"):
+            v = hs.tags.get(k)
+            if v:
+                self._hop_c[k].inc(v)
+
+    def _merge_timed(self, span, t_m: float) -> None:
+        """Tag the chunk span with the host-merge duration measured from
+        ``t_m`` and fold it into the cumulative merge counter."""
+        dt = time.perf_counter() - t_m
+        span.add("merge_s", dt)
+        self._hop_c["merge_s"].inc(dt)
+
+    def _primary_full(self, pin, qd, qv, qe, qn, h, alpha, beta,
+                      span=NULL_SPAN):
         """The adaptive fan-out cutoff: serve one small chunk with ONE
         ``part="full"`` request to the primary (DESIGN.md §8.8).  The
         primary scores its whole main engine plus the live delta — the
@@ -589,13 +687,20 @@ class ClusterRouter:
         pinned generation gets the server's StaleGeneration refusal and
         re-pins through ``_search_pinned``'s retry loop."""
         t0 = time.perf_counter()
+        span.set("path", "direct")
         dead = pin.main_dead | pin.fully_deleted
         h_fetch = min(h + (ceil16(len(dead)) if dead else 0),
                       pin.num_points)
+        req = {"part": "full", "gen": pin.gen, "h": int(h_fetch),
+               "alpha": int(alpha), "beta": int(beta)}
+        ctx = span.wire_context()
+        if ctx:
+            req["trace"] = ctx
+        hs = span.child("rpc", peer=self.primary.addr, part="full")
         meta, arrays = self.primary.call(
-            "search", {"part": "full", "gen": pin.gen, "h": int(h_fetch),
-                       "alpha": int(alpha), "beta": int(beta)},
-            {"q_dims": qd, "q_vals": qv, "q_dense": qe})
+            "search", req, {"q_dims": qd, "q_vals": qv, "q_dense": qe},
+            span=hs)
+        self._finish_hop(hs, meta)
         with self._lock:
             self._fence_term(int(meta.get("term", 0)))
             self._last_seq = max(self._last_seq,
@@ -608,17 +713,17 @@ class ClusterRouter:
             parts.append((arrays["ds"][:qn], arrays["di"][:qn],
                           np.asarray(sorted(pin.fully_deleted),
                                      np.int64)))
+        t_m = time.perf_counter()
         s, ids = merge_topk_host(parts, h)
-        self._account_hops([self.primary.last_wall_s],
-                           [self.primary.last_send_s],
-                           [float(meta.get("score_s", 0.0))],
-                           time.perf_counter() - t0)
+        self._merge_timed(span, t_m)
+        span.set("wall_s", time.perf_counter() - t0)
         with self._lock:
             self.stats["primary_reads"] += qn
             self.stats["direct_reads"] += qn
         return s, ids
 
-    def _fanout(self, pin, qd, qv, qe, qn, h, alpha, beta):
+    def _fanout(self, pin, qd, qv, qe, qn, h, alpha, beta,
+                span=NULL_SPAN):
         """The S-scorer + primary-delta path.  The delta request is ALWAYS
         dispatched — it is the chunk's state-validation channel: its
         response either confirms the pinned cache tag or carries the
@@ -627,30 +732,45 @@ class ClusterRouter:
         under-budgeted slices) when the authoritative dead set needs more
         overfetch slack than the cache predicted — main parts are pure
         functions of (generation, depth, query), so a re-fetch merges
-        exactly as a first fetch would have."""
+        exactly as a first fetch would have.
+
+        Per-hop timing is a child span per shard RPC; the SAME chunk
+        trace context rides every request meta (one shared value keeps
+        the build-once frame sharing intact), and each shard's reply
+        carries its server child span back (DESIGN.md §9.2)."""
         t0 = time.perf_counter()
+        span.set("path", "fanout")
         sizes = self._slice_sizes(pin.num_points)
         # the plan_overfetch budget formula over pinned slice sizes
         slack = ceil16(len(pin.main_dead)) if pin.main_dead else 0
         h_fetch = [min(h + slack, sz) for sz in sizes]
         q_arrays = {"q_dims": qd, "q_vals": qv, "q_dense": qe}
+        ctx = span.wire_context()
         dmeta_req = {"part": "delta", "gen": pin.gen, "h": int(h),
                      "alpha": int(alpha), "beta": int(beta),
                      "have_epoch": pin.epoch, "have_term": pin.term}
         metas = [{"part": "main", "gen": pin.gen, "h": int(hf),
                   "alpha": int(alpha), "beta": int(beta)}
                  for hf in h_fetch]
-        walls, sends, scores = [], [], []
+        if ctx:
+            dmeta_req["trace"] = ctx
+            for m in metas:
+                m["trace"] = ctx
         if self.lockstep:
-            futs = [self._pool.submit(c.call, "search", m, q_arrays)
-                    for c, m in zip(self.scorers, metas)]
+            hspans = [span.child("rpc", peer=c.addr, part="main")
+                      for c in self.scorers]
+            dspan = span.child("rpc", peer=self.primary.addr,
+                               part="delta")
+            futs = [self._pool.submit(c.call, "search", m, q_arrays,
+                                      span=hs)
+                    for c, m, hs in zip(self.scorers, metas, hspans)]
             dfut = self._pool.submit(self.primary.call, "search",
-                                     dmeta_req, q_arrays)
+                                     dmeta_req, q_arrays, span=dspan)
             mains = [f.result() for f in futs]
             dmeta, darr = dfut.result()
-            for c in [*self.scorers, self.primary]:
-                walls.append(c.last_wall_s)
-                sends.append(c.last_send_s)
+            for (rm, _), hs in zip(mains, hspans):
+                self._finish_hop(hs, rm)
+            self._finish_hop(dspan, dmeta)
         else:
             # pipelined: every request on the wire before any reply is
             # read; one pre-built frame shared by every scorer with the
@@ -658,24 +778,27 @@ class ClusterRouter:
             # per-client coalescer may fold concurrent chunks' requests
             # into msearch frames
             frames: dict[int, bytes] = {}
-            entries = []
+            entries, hspans = [], []
             for c, m, hf in zip(self.scorers, metas, h_fetch):
                 fr = frames.get(hf)
                 if fr is None:
                     fr = frames[hf] = build_frame("search", m, q_arrays)
+                hspans.append(span.child("rpc", peer=c.addr,
+                                         part="main"))
                 entries.append(c.submit_search(m, q_arrays, frame=fr))
+            dspan = span.child("rpc", peer=self.primary.addr,
+                               part="delta")
             dentry = self.primary.submit_search(dmeta_req, q_arrays)
             mains = []
-            for c, m, en in zip(self.scorers, metas, entries):
-                rm, ra, wall, send = self._collect(c, en, "search", m,
-                                                   q_arrays)
+            for c, m, en, hs in zip(self.scorers, metas, entries,
+                                    hspans):
+                rm, ra = self._collect(c, en, "search", m, q_arrays,
+                                       span=hs)
                 mains.append((rm, ra))
-                walls.append(wall)
-                sends.append(send)
-            dmeta, darr, wall, send = self._collect(
-                self.primary, dentry, "search", dmeta_req, q_arrays)
-            walls.append(wall)
-            sends.append(send)
+                self._finish_hop(hs, rm)
+            dmeta, darr = self._collect(self.primary, dentry, "search",
+                                        dmeta_req, q_arrays, span=dspan)
+            self._finish_hop(dspan, dmeta)
 
         # adopt / confirm the authoritative liveness state
         with self._lock:
@@ -711,31 +834,35 @@ class ClusterRouter:
                 hf2 = min(h + need, sz)
                 if hf2 > h_fetch[k]:
                     m2 = dict(metas[k], h=int(hf2))
-                    rm, ra = self.scorers[k].call("search", m2, q_arrays)
+                    hs2 = span.child("rpc", peer=self.scorers[k].addr,
+                                     part="main-redeepen")
+                    rm, ra = self.scorers[k].call("search", m2, q_arrays,
+                                                  span=hs2)
+                    self._finish_hop(hs2, rm)
                     mains[k] = (rm, ra)
 
         # assemble parts exactly as the in-process fanout_search does:
         # scorer slices in row order (filtered), delta last (unfiltered)
         parts = []
         for rm, ra in mains:
-            scores.append(float(rm.get("score_s", 0.0)))
             parts.append((np.asarray(ra["scores"])[:qn],
                           np.asarray(ra["ids"]).astype(np.int64)[:qn],
                           True))
-        scores.append(float(dmeta.get("score_s", 0.0)))
         if live > 0:
             parts.append((np.asarray(darr["scores"])[:qn],
                           np.asarray(darr["ids"]).astype(np.int64)[:qn],
                           False))
+        t_m = time.perf_counter()
         s, ids = merge_topk_host(parts, h, drop_ids=auth_md,
                                  dedup_upserts=True)
-        self._account_hops(walls, sends, scores,
-                           time.perf_counter() - t0)
+        self._merge_timed(span, t_m)
+        span.set("wall_s", time.perf_counter() - t0)
         with self._lock:
             self.stats["primary_reads"] += qn
         return s, ids
 
-    def _try_replicas(self, pin, qd, qv, qe, qn, h, alpha, beta, floor):
+    def _try_replicas(self, pin, qd, qv, qe, qn, h, alpha, beta, floor,
+                      span=NULL_SPAN):
         """Serve the chunk from the first eligible replica, or None.
         Eligibility is checked from the cached applied seq (refreshing
         via a status poll when stale) BEFORE the search RPC, and enforced
@@ -749,7 +876,10 @@ class ClusterRouter:
         dead = pin.main_dead | pin.fully_deleted
         h_fetch = min(h + (ceil16(len(dead)) if dead else 0),
                       pin.num_points)
+        ctx = span.wire_context()
         for i, rep in enumerate(self.replicas):
+            hs = span.child("rpc", peer=rep.addr, part="full",
+                            replica=i)
             try:
                 if self._replica_seq[i] < floor:
                     st, _ = rep.call("status")
@@ -759,13 +889,21 @@ class ClusterRouter:
                             int(st["gen"]) != pin.gen:
                         with self._lock:
                             self.stats["excluded_stale"] += 1
+                        hs.annotate("excluded_stale")
+                        hs.end()
                         continue
+                req = {"part": "full", "gen": pin.gen,
+                       "h": int(h_fetch), "alpha": int(alpha),
+                       "beta": int(beta)}
+                if ctx:
+                    req["trace"] = ctx
                 meta, arrays = rep.call(
-                    "search", {"part": "full", "gen": pin.gen,
-                               "h": int(h_fetch), "alpha": int(alpha),
-                               "beta": int(beta)},
-                    {"q_dims": qd, "q_vals": qv, "q_dense": qe})
+                    "search", req,
+                    {"q_dims": qd, "q_vals": qv, "q_dense": qe},
+                    span=hs)
             except (ShardUnavailableError, ConnectionError, RemoteError):
+                hs.annotate("replica_unreachable")
+                hs.end()
                 continue
             with self._lock:
                 self._replica_seq[i] = int(meta["applied_seq"])
@@ -776,11 +914,15 @@ class ClusterRouter:
                     int(meta["gen"]) != pin.gen:
                 with self._lock:
                     self.stats["excluded_stale"] += 1
+                hs.annotate("excluded_stale")
+                hs.end()
                 continue
             # merge the replica's consistent-prefix parts under the
             # router's view: its own main tombstones (its prefix's
             # upsert/delete kills) plus fully_deleted on BOTH parts — a
             # stale tombstone view can hide nothing and resurrect nothing
+            self._finish_hop(hs, meta)
+            span.set("path", "replica")
             drop_main = set(arrays["main_tombstones"].tolist())
             drop_main.update(pin.fully_deleted)
             parts = [(arrays["ms"][:qn], arrays["mi"][:qn],
@@ -789,7 +931,9 @@ class ClusterRouter:
                 parts.append((arrays["ds"][:qn], arrays["di"][:qn],
                               np.asarray(sorted(pin.fully_deleted),
                                          np.int64)))
+            t_m = time.perf_counter()
             s, ids = merge_topk_host(parts, h)
+            self._merge_timed(span, t_m)
             with self._lock:
                 self.stats["replica_reads"] += qn
             return s, ids
@@ -797,15 +941,17 @@ class ClusterRouter:
 
     # -- introspection ----------------------------------------------------
 
-    def _account_hops(self, walls, sends, scores, chunk_wall: float
-                      ) -> None:
-        with self._lock:
-            self.hop_s["serialize"] += sum(sends)
-            self.hop_s["score"] += sum(scores)
-            self.hop_s["wire"] += max(
-                0.0, sum(walls) - sum(sends) - sum(scores))
-            self.hop_s["merge"] += max(0.0, chunk_wall - max(walls,
-                                                             default=0.0))
+    def hops(self) -> dict:
+        """Cumulative per-stage hop seconds — ``{"serialize_s",
+        "wire_s", "queue_s", "score_s", "merge_s"}`` — folded from every
+        finished hop span (searches AND mutations).  Span-sourced: the
+        registry counters behind this are only written by
+        ``_finish_hop``/``_merge_timed`` (DESIGN.md §9.2)."""
+        return {k: c.value for k, c in self._hop_c.items()}
+
+    def metrics(self) -> dict:
+        """JSON-ready snapshot of the router's metrics registry."""
+        return self.obs.metrics.snapshot()
 
     def status(self) -> dict:
         """Router-side cluster view: generation, corpus size, cached

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core.distributed import ceil16, split_index_arrays
 from repro.core.engine import ScoringEngine
+from repro.obs import Observability
 
 from .client import ShardClient
 from .protocol import MSG_ERROR, MSG_RESPONSE, recv_msg, send_msg
@@ -105,10 +106,17 @@ class ShardServer:
     def __init__(self, role: str, *, store: str | None = None,
                  peer: str | None = None, shard: int = 0,
                  num_shards: int = 1, workdir: str | None = None,
-                 backend: str | None = None, poll_interval: float = 0.02):
+                 backend: str | None = None, poll_interval: float = 0.02,
+                 obs: Observability | None = None):
         if role not in ("primary", "scorer", "replica"):
             raise ValueError(f"unknown role {role!r}")
         self.role = role
+        # server-side tracing is enabled but PER-REQUEST opt-in: a child
+        # span is built only when the request meta carries a trace
+        # context, so untraced routers cost this server nothing
+        # (DESIGN.md §9.2)
+        self.obs = obs if obs is not None else Observability(trace=True)
+        self._h_score = self.obs.metrics.histogram("server.score_s")
         self.store = store
         self.peer = peer
         self.shard = shard
@@ -154,7 +162,8 @@ class ShardServer:
         distribution)."""
         from repro import persist
         if self.role == "primary":
-            rec = persist.recover(self.store, backend=self.backend)
+            rec = persist.recover(self.store, backend=self.backend,
+                                      metrics=self.obs.metrics)
             self.index, self.durability = rec.index, rec.durability
             self._applied_seq = self.durability.wal.next_seq - 1
         elif self.role == "scorer":
@@ -162,7 +171,8 @@ class ShardServer:
         else:                            # replica
             if persist.read_current(self.store) is None:
                 self._peer_client().fetch_store(self.store)
-            rec = persist.recover(self.store, backend=self.backend)
+            rec = persist.recover(self.store, backend=self.backend,
+                                      metrics=self.obs.metrics)
             self.index, self.durability = rec.index, rec.durability
             self._applied_seq = self.durability.wal.next_seq - 1
             peer_status, _ = self._peer_client().call("status")
@@ -316,6 +326,10 @@ class ShardServer:
         h = int(meta["h"])
         alpha, beta = int(meta["alpha"]), int(meta["beta"])
         part = meta["part"]
+        # per-request opt-in child span: NULL_SPAN unless the request
+        # meta carries the router's trace context (DESIGN.md §9.2)
+        sp = self.obs.tracer.from_wire(meta.get("trace"), "shard.search",
+                                       role=self.role, part=part)
         t0 = time.perf_counter()
         if part == "main":                       # scorer row slice
             with self._lock:
@@ -412,7 +426,16 @@ class ShardServer:
                      "delta_live": snap.live if snap is not None else 0}
         else:
             raise ValueError(f"unknown search part {part!r}")
-        rmeta["score_s"] = time.perf_counter() - t0
+        score_s = time.perf_counter() - t0
+        rmeta["score_s"] = score_s
+        self._h_score.observe(score_s)
+        if sp:
+            # the serialized child span the router folds into its hop
+            # span; queue_s 0 here — ``msearch`` overwrites it with the
+            # sub's measured dispatch wait
+            sp.set("score_s", score_s)
+            sp.set("queue_s", 0.0)
+            rmeta["trace"] = sp.to_wire()
         return rmeta, out
 
     def _op_msearch(self, meta, arrays):
@@ -420,18 +443,27 @@ class ShardServer:
         are keyed ``"<i>:<name>"``.  Each sub runs independently; a sub
         that fails reports ``error``/``kind`` in ITS slot of the reply's
         ``subs`` instead of failing the frame — the batch is a transport
-        artifact, not a transaction (DESIGN.md §8.8)."""
+        artifact, not a transaction (DESIGN.md §8.8).  Subs run
+        sequentially, so sub i waits behind subs 0..i-1; that wait is
+        the server-side ``queue_s`` stamped into each traced sub's child
+        span — the coalesced-pipelined path's per-request timing that
+        previously had no home (DESIGN.md §9.2)."""
         rsubs: list[dict] = []
         out: dict = {}
+        t_start = time.perf_counter()
         for i, sub in enumerate(meta["subs"]):
             prefix = f"{i}:"
             sub_arrays = {k[len(prefix):]: v for k, v in arrays.items()
                           if k.startswith(prefix)}
+            waited = time.perf_counter() - t_start
             try:
                 rm, ra = self._op_search(dict(sub), sub_arrays)
             except Exception as e:
                 rm, ra = {"error": f"{type(e).__name__}: {e}",
                           "kind": getattr(e, "kind", type(e).__name__)}, {}
+            tr = rm.get("trace")
+            if tr is not None:
+                tr["queue_s"] = waited
             rsubs.append(rm)
             for k, v in ra.items():
                 out[f"{i}:{k}"] = v
@@ -601,7 +633,8 @@ class ShardServer:
                 self.durability.close()
                 shutil.rmtree(self.store)
                 self._peer_client().fetch_store(self.store)
-                rec = persist.recover(self.store, backend=self.backend)
+                rec = persist.recover(self.store, backend=self.backend,
+                                      metrics=self.obs.metrics)
                 self.index, self.durability = rec.index, rec.durability
                 self._applied_seq = self.durability.wal.next_seq - 1
                 self.generation = gen
@@ -662,6 +695,15 @@ class ShardServer:
     def _op_ping(self, meta, arrays):
         return {"pong": True}, {}
 
+    def _op_stats(self, meta, arrays):
+        """Observability RPC: this node's full metrics registry snapshot
+        (per-op counters, score-time histogram, WAL durability gauges on
+        primary/replica) plus role/generation — how routers and the
+        benches read server-side numbers (DESIGN.md §9.1)."""
+        return ({"role": self.role, "gen": self.generation,
+                 "applied_seq": self.applied_seq(),
+                 "metrics": self.obs.metrics.snapshot()}, {})
+
     _OPS = {"search": _op_search, "msearch": _op_msearch,
             "insert": _op_insert, "delete": _op_delete,
             "compact": _op_compact, "state_sync": _op_state_sync,
@@ -669,7 +711,7 @@ class ShardServer:
             "wal_fetch": _op_wal_fetch, "store_manifest": _op_store_manifest,
             "store_file": _op_store_file, "reload": _op_reload,
             "status": _op_status, "info": _op_info, "fault": _op_fault,
-            "ping": _op_ping}
+            "ping": _op_ping, "stats": _op_stats}
 
     # -- server shell -----------------------------------------------------
 
@@ -687,10 +729,12 @@ class ShardServer:
                         raise ValueError(f"unknown command {cmd!r}")
                     rmeta, rarr = handler(self, meta, arrays)
                     op = MSG_RESPONSE
+                    self.obs.metrics.counter(f"server.op.{cmd}").inc()
                 except Exception as e:           # ships as MSG_ERROR
                     rmeta = {"error": f"{type(e).__name__}: {e}",
                              "kind": getattr(e, "kind", type(e).__name__)}
                     rarr, op = {}, MSG_ERROR
+                    self.obs.metrics.counter("server.op.errors").inc()
                 # fault injection never eats its OWN arming ack — the
                 # armed fault fires on the NEXT (non-fault) exchange
                 if cmd != "fault" and "close_next" in self._faults:
@@ -751,12 +795,19 @@ def main(argv=None) -> int:
     ap.add_argument("--workdir", help="scratch dir (scorer store fetches)")
     ap.add_argument("--backend", default=None)
     ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve this node's metrics registry as a text "
+                         "endpoint on the given port (0 = ephemeral)")
     args = ap.parse_args(argv)
     server = ShardServer(args.role, store=args.store, peer=args.peer,
                          shard=args.shard, num_shards=args.num_shards,
                          workdir=args.workdir, backend=args.backend)
     server.bootstrap()
     port = server.start(args.port)
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+        ms = start_metrics_server(server.obs.metrics, args.metrics_port)
+        print(f"METRICS {ms.port}", flush=True)
     print(f"READY {port}", flush=True)
     try:
         while not server._stop.is_set():

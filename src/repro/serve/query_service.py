@@ -74,6 +74,7 @@ from repro.core.engine import (Backend, IndexArrays, ScoringEngine,
                                query_fingerprint, release_index_arrays)
 from repro.core.sparse_index import sparse_queries_to_padded
 from repro.core.streaming import fanout_search, plan_overfetch
+from repro.obs import Observability
 
 __all__ = ["QueryService", "CacheInfo", "JitCacheInfo", "bucket_for",
            "pad_rows"]
@@ -228,6 +229,13 @@ class QueryService:
         under sustained ingest without waiting for a compaction.  ``None``
         (default) disables automatic checkpoints; ``checkpoint()`` is the
         explicit form.
+    obs:
+        The :class:`repro.obs.Observability` bundle (DESIGN.md §9): its
+        registry backs ``cache_info()``/``stats()``/``metrics()`` and the
+        WAL durability instruments; its tracer (off by default) emits one
+        ``serve.search`` root span per request with ``serve.batch``
+        children.  ``Observability.off()`` nulls everything — the no-obs
+        baseline for overhead measurement (§9.4).
     """
 
     def __init__(self, engine: ScoringEngine | None = None, *,
@@ -244,7 +252,21 @@ class QueryService:
                  restore_from: str | None = None,
                  persist_sync: bool = True,
                  compact_retrain: bool | None = None,
-                 delta_snapshot_records: int | None = None):
+                 delta_snapshot_records: int | None = None,
+                 obs: Observability | None = None):
+        # one observability bundle for the whole service (DESIGN.md §9):
+        # default keeps the metrics registry ON (cache_info()/stats() read
+        # its counters) with tracing OFF; Observability.off() nulls both.
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
+        self._c_hits = m.counter("serve.cache.hits")
+        self._c_misses = m.counter("serve.cache.misses")
+        self._c_evictions = m.counter("serve.cache.evictions")
+        self._c_requests = m.counter("serve.requests")
+        self._c_batches = m.counter("serve.batches")
+        self._c_refreshes = m.counter("serve.refreshes")
+        self._h_compact = m.histogram("serve.compact_s")
+        self._g_delta = m.gauge("serve.delta_rows")
         self._durability = None
         self._recovery = None
         if restore_from is not None:
@@ -252,7 +274,8 @@ class QueryService:
                 raise ValueError("restore_from= recovers the index from the "
                                  "store; don't also pass index=/persist_dir=")
             from repro import persist
-            rec = persist.recover(restore_from, sync=persist_sync)
+            rec = persist.recover(restore_from, sync=persist_sync,
+                                  metrics=m)
             index, self._durability, self._recovery = \
                 rec.index, rec.durability, rec
         elif persist_dir is not None:
@@ -262,7 +285,8 @@ class QueryService:
                                  "resume an existing one")
             from repro import persist
             self._durability = persist.bootstrap(persist_dir, index,
-                                                 sync=persist_sync)
+                                                 sync=persist_sync,
+                                                 metrics=m)
         if index is not None:
             if index.mutable_state is None:
                 raise ValueError("index= needs HybridIndex.build(..., "
@@ -289,9 +313,7 @@ class QueryService:
         self._cache: OrderedDict[str, tuple[np.ndarray, np.ndarray]] = \
             OrderedDict()
         self._cache_cap = cache_size
-        self._hits = self._misses = self._evictions = 0
         self._jit_keys: set[tuple] = set()
-        self._requests = self._batches = self._refreshes = 0
         self._executor: ThreadPoolExecutor | None = None
         self._max_workers = max_workers
         # streaming mutation state (all guarded by _mut_lock except the
@@ -425,7 +447,7 @@ class QueryService:
             old = self._gen
             self._gen = new
             self._version = new.version
-            self._refreshes += 1
+            self._c_refreshes.inc()
             old.retired = True
             old.donate = donate and \
                 old.engine.arrays is not new.engine.arrays
@@ -460,6 +482,7 @@ class QueryService:
         with self._lock:
             self._delta_view = view
             self._mutation_version += 1
+        self._g_delta.set(view.live)
 
     def insert(self, x_sparse, x_dense, ids=None) -> np.ndarray:
         """Insert (or upsert) rows into the delta shard; they are searchable
@@ -623,6 +646,8 @@ class QueryService:
                 self._mutation_version += 1
                 self._compactions += 1
                 self._last_compaction_s = time.perf_counter() - t0
+                self._h_compact.observe(self._last_compaction_s)
+                self._g_delta.set(0)
 
             out = self._swap(new_gen, donate=True, on_swap=on_swap)
             if self._durability is not None:
@@ -703,38 +728,53 @@ class QueryService:
                 for i in range(qn)] if use_cache else None
         out_s = np.empty((qn, h), np.float32)
         out_i = np.empty((qn, h), np.int64)
-        with self._lock:
-            self._requests += qn
-            if not use_cache:
-                self._misses += qn
-                miss = list(range(qn))
-            else:
-                miss = []
-                for i, key in enumerate(keys):
-                    hit = self._cache.get(key)
-                    if hit is not None:
-                        self._cache.move_to_end(key)
-                        self._hits += 1
-                        out_s[i], out_i[i] = hit
-                    else:
-                        self._misses += 1
-                        miss.append(i)
-
-        max_bucket = self.buckets[-1]
-        for lo in range(0, len(miss), max_bucket):
-            rows = miss[lo:lo + max_bucket]
-            s, ids = self._run_batch(gen, view, q_dims[rows],
-                                     q_vals[rows], q_dense[rows],
-                                     h, alpha, beta)
+        sp = self.obs.tracer.root("serve.search", qn=qn, h=h,
+                                  gen=gen.version)
+        hits = evictions = 0
+        with sp:
             with self._lock:
-                for j, i in enumerate(rows):
-                    out_s[i], out_i[i] = s[j], ids[j]
-                    if use_cache:
-                        self._cache[keys[i]] = (s[j].copy(), ids[j].copy())
-                        self._cache.move_to_end(keys[i])
-                        while len(self._cache) > self._cache_cap:
-                            self._cache.popitem(last=False)
-                            self._evictions += 1
+                if not use_cache:
+                    miss = list(range(qn))
+                else:
+                    miss = []
+                    for i, key in enumerate(keys):
+                        hit = self._cache.get(key)
+                        if hit is not None:
+                            self._cache.move_to_end(key)
+                            hits += 1
+                            out_s[i], out_i[i] = hit
+                        else:
+                            miss.append(i)
+            max_bucket = self.buckets[-1]
+            for lo in range(0, len(miss), max_bucket):
+                rows = miss[lo:lo + max_bucket]
+                with sp.child("serve.batch", rows=len(rows),
+                              bucket=bucket_for(len(rows),
+                                                self.buckets)) as bs:
+                    s, ids = self._run_batch(gen, view, q_dims[rows],
+                                             q_vals[rows], q_dense[rows],
+                                             h, alpha, beta, span=bs)
+                with self._lock:
+                    for j, i in enumerate(rows):
+                        out_s[i], out_i[i] = s[j], ids[j]
+                        if use_cache:
+                            self._cache[keys[i]] = (s[j].copy(),
+                                                    ids[j].copy())
+                            self._cache.move_to_end(keys[i])
+                            while len(self._cache) > self._cache_cap:
+                                self._cache.popitem(last=False)
+                                evictions += 1
+            sp.set("cache_hits", hits)
+            sp.set("cache_misses", len(miss))
+        # counters fold ONCE per request, not per row — exact totals with
+        # a bounded number of instrument-lock round-trips (DESIGN.md §9.4)
+        self._c_requests.inc(qn)
+        if hits:
+            self._c_hits.inc(hits)
+        if miss:
+            self._c_misses.inc(len(miss))
+        if evictions:
+            self._c_evictions.inc(evictions)
         return out_s, out_i
 
     def submit(self, q_dims, q_vals, q_dense, **kw) -> Future:
@@ -753,8 +793,8 @@ class QueryService:
 
     def _run_batch(self, gen: _Generation, view: _DeltaView | None,
                    q_dims: np.ndarray, q_vals: np.ndarray,
-                   q_dense: np.ndarray, h: int, alpha: int, beta: int
-                   ) -> tuple[np.ndarray, np.ndarray]:
+                   q_dense: np.ndarray, h: int, alpha: int, beta: int,
+                   span=None) -> tuple[np.ndarray, np.ndarray]:
         """Pad one miss-batch to its bucket, fan out over the main engine(s)
         plus the delta shard, merge on host.
 
@@ -779,8 +819,8 @@ class QueryService:
         h_fetch = plan_overfetch(engines, h, deleted)
         delta_engine = view.engine if view is not None else None
 
+        self._c_batches.inc()
         with self._lock:
-            self._batches += 1
             c1, c2 = engines[0].candidate_counts(h_fetch[0], alpha, beta)
             self._jit_keys.add((bucket, q_dims.shape[1], q_dense.shape[1],
                                 engines[0].num_points, h_fetch[0], c1, c2,
@@ -795,19 +835,26 @@ class QueryService:
         # the shared fan-out merge (core/streaming.py::fanout_search — the
         # same helper search_mutable uses): dispatch every engine before
         # syncing any, assemble in the common id space, merge on host.
-        return fanout_search(engines, h_fetch, offsets, gen.id_map,
-                             delta_engine,
-                             view.ids if view is not None else None,
-                             deleted, qd, qv, qe, h=h, alpha=alpha,
-                             beta=beta, qn=qn)
+        timing = {} if span else None
+        out = fanout_search(engines, h_fetch, offsets, gen.id_map,
+                            delta_engine,
+                            view.ids if view is not None else None,
+                            deleted, qd, qv, qe, h=h, alpha=alpha,
+                            beta=beta, qn=qn, timing=timing)
+        if timing:
+            span.set("dispatch_s", timing["dispatch_s"])
+            span.set("merge_s", timing["merge_s"])
+        return out
 
     # -- introspection ----------------------------------------------------
 
     def cache_info(self) -> CacheInfo:
-        """Exact LRU counters: hits, misses, evictions, size, capacity."""
+        """Exact LRU counters: hits, misses, evictions, size, capacity.
+        (Registry-backed — reads 0 under ``Observability.off()``.)"""
         with self._lock:
-            return CacheInfo(hits=self._hits, misses=self._misses,
-                             evictions=self._evictions,
+            return CacheInfo(hits=self._c_hits.value,
+                             misses=self._c_misses.value,
+                             evictions=self._c_evictions.value,
                              size=len(self._cache),
                              capacity=self._cache_cap)
 
@@ -821,13 +868,21 @@ class QueryService:
                                 bound=len(self.buckets) * max(1, len(combos)))
 
     def stats(self) -> dict:
-        """Service counters for dashboards/benchmarks (plain dict)."""
+        """Service counters for dashboards/benchmarks (plain dict).  On a
+        durable service this includes the WAL durability gauges (DESIGN.md
+        §9.1): the most recent fsync latency, the number of records that
+        fsync covered (group-commit batch size), and the current
+        flushed-but-unsynced backlog."""
+        wal = self._durability.wal if self._durability is not None else None
         with self._lock:
             view = self._delta_view
-            return {"requests": self._requests, "batches": self._batches,
-                    "refreshes": self._refreshes, "version": self._version,
-                    "cache_hits": self._hits, "cache_misses": self._misses,
-                    "cache_evictions": self._evictions,
+            return {"requests": self._c_requests.value,
+                    "batches": self._c_batches.value,
+                    "refreshes": self._c_refreshes.value,
+                    "version": self._version,
+                    "cache_hits": self._c_hits.value,
+                    "cache_misses": self._c_misses.value,
+                    "cache_evictions": self._c_evictions.value,
                     "num_shards": self.num_shards, "buckets": self.buckets,
                     "mutation_version": self._mutation_version,
                     "delta_rows": view.live if view is not None else 0,
@@ -837,13 +892,23 @@ class QueryService:
                         len(view.deleted) if view is not None else 0,
                     "compactions": self._compactions,
                     "last_compaction_s": self._last_compaction_s,
-                    "durable": self._durability is not None,
-                    "wal_next_seq": (self._durability.wal.next_seq
-                                     if self._durability is not None
-                                     else 0),
+                    "durable": wal is not None,
+                    "wal_next_seq": wal.next_seq if wal is not None else 0,
+                    "wal_last_fsync_s":
+                        wal.last_fsync_s if wal is not None else None,
+                    "wal_group_commit_batch":
+                        wal.last_group_batch if wal is not None else 0,
+                    "wal_unsynced_backlog":
+                        wal.unsynced_backlog if wal is not None else 0,
                     "recovered_replayed":
                         (self._recovery.replayed
                          if self._recovery is not None else 0)}
+
+    def metrics(self) -> dict:
+        """JSON-ready snapshot of every registry instrument this service
+        (and its WAL, when durable) feeds — the in-process analogue of the
+        ``--metrics-port`` endpoint (DESIGN.md §9.1)."""
+        return self.obs.metrics.snapshot()
 
     @property
     def version(self) -> int:

@@ -1,0 +1,335 @@
+"""Cluster-wire tracing (ISSUE 10 acceptance, DESIGN.md §9.2): one
+cluster search produces a COMPLETE trace — a chunk root plus one hop
+span per shard RPC whose serialize/wire/queue/score stages sum exactly
+to the hop's measured wall time (wire_s is the residual, so the
+reconciliation is an identity whenever the residual is positive), with
+the shard's own ``shard.search`` span attached as a child — across both
+the pipelined fan-out path AND the ``part="full"`` direct path.  The
+trace also survives the fault paths: a torn-connection reconnect heal
+annotates the live hop span, a zombie primary's fenced ack annotates
+the mutation span, and a primary failover leaves an election trace and
+keeps producing complete search traces afterwards."""
+
+import numpy as np
+import pytest
+
+from repro.core.hybrid import HybridIndex, HybridIndexParams
+from repro.data import make_hybrid_dataset
+from repro.serve import QueryService
+from repro.serve.cluster import (ClusterRouter, LocalCluster, ShardClient,
+                                 StaleTermError, wait_ready)
+
+# -- shared tiny workload (mirrors tests/test_cluster.py) ---------------------
+
+N0, N_POOL, NQ = 96, 140, 3
+D_SPARSE, NNZ = 240, 8
+
+_DS = make_hybrid_dataset(num_points=N_POOL, num_queries=NQ,
+                          d_sparse=D_SPARSE, d_dense=16,
+                          nnz_per_row=NNZ, seed=11)
+
+
+def _build(n0=N0):
+    return HybridIndex.build(
+        _DS.x_sparse[:n0], _DS.x_dense[:n0],
+        HybridIndexParams(keep_top=16, head_dims=8, kmeans_iters=2,
+                          backend="ref", pq_subspaces=4), mutable=True)
+
+
+def _comparator():
+    return QueryService(index=_build(), h=8, cache_size=0,
+                        auto_compact=False)
+
+
+def _walk(node):
+    yield node
+    for c in node.get("children", ()):
+        yield from _walk(c)
+
+
+def _annotations(trace):
+    out = []
+    for node in _walk(trace):
+        out.extend(node.get("annotations", ()))
+    return out
+
+
+HOP_STAGES = ("serialize_s", "wire_s", "queue_s", "score_s")
+
+
+def _check_hop(hop):
+    """One finished hop span: every stage tag present and non-negative,
+    and serialize + wire + queue + score reconciles with the measured
+    wall.  ``wire_s`` is the residual ``max(0, wall - measured)``: when
+    it is positive the stages sum EXACTLY to wall; when the server-side
+    stages overshoot the client wall (clock granularity) the sum may
+    only exceed it — never undershoot."""
+    tags = hop["tags"]
+    for k in HOP_STAGES:
+        assert k in tags, f"hop missing stage {k}: {tags}"
+        assert tags[k] >= 0.0
+    wall = tags["wall_s"]
+    assert wall > 0.0
+    total = sum(tags[k] for k in HOP_STAGES)
+    assert total >= wall - 1e-9
+    if tags["wire_s"] > 0.0:
+        assert total == pytest.approx(wall, abs=1e-9)
+    assert hop["duration_s"] is not None and hop["duration_s"] > 0.0
+
+
+def _remote_children(hop):
+    return [c for c in hop["children"] if c["name"] == "shard.search"]
+
+
+# -- the acceptance property --------------------------------------------------
+
+def test_fanout_trace_complete_and_reconciled(tmp_path):
+    """The pipelined fan-out: each chunk root carries one ``rpc`` hop per
+    scorer plus the delta hop, every hop reconciles stage-by-stage with
+    its wall, each carries the shard's serialized ``shard.search`` child
+    (stripped of queue_s/score_s — those live as hop stage tags, the
+    double-count guard), and the cumulative ``hops()`` counters equal the
+    span-sourced stage totals over the drained ring."""
+    from repro.obs import stage_totals
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator()
+        try:
+            assert router.obs.tracer.enabled    # router default: trace ON
+            router.obs.tracer.take()            # drop bootstrap traces
+            for _ in range(2):
+                s_r, i_r = router.search_sparse(_DS.q_sparse, _DS.q_dense)
+            s_c, i_c = comp.search_sparse(_DS.q_sparse, _DS.q_dense)
+            np.testing.assert_array_equal(i_r, i_c)
+            np.testing.assert_array_equal(s_r, s_c)
+
+            traces = router.obs.tracer.take()
+            roots = [t for t in traces if t["name"] == "cluster.search"]
+            assert len(roots) == 2              # NQ=3 → one chunk each
+            for root in roots:
+                assert root["tags"]["qn"] == NQ
+                assert root["tags"]["path"] == "fanout"
+                assert root["tags"]["gen"] == 1
+                assert root["tags"]["merge_s"] > 0.0
+                root_wall = root["tags"]["wall_s"]
+                hops = [c for c in root["children"] if c["name"] == "rpc"]
+                assert sorted(h["tags"]["part"] for h in hops) == \
+                    ["delta", "main", "main"]
+                for hop in hops:
+                    _check_hop(hop)
+                    # hop walls are measured inside the root's window
+                    assert hop["tags"]["wall_s"] <= root_wall + 1e-6
+                    (remote,) = _remote_children(hop)
+                    assert remote["duration_s"] > 0.0
+                    assert remote["tags"]["part"] in ("main", "delta")
+                    assert "queue_s" not in remote["tags"]
+                    assert "score_s" not in remote["tags"]
+                    # same trace id end to end
+                    assert hop["trace_id"] == root["trace_id"]
+                    assert remote["trace_id"] == root["trace_id"]
+                    assert remote["parent_id"] == hop["span_id"]
+
+            # span-sourced totals == the cumulative hop counters (same
+            # folds, so bit-equal up to summation order)
+            totals = stage_totals(traces)
+            assert totals["score_s"] > 0.0 and totals["merge_s"] > 0.0
+            for k, v in router.hops().items():
+                assert v == pytest.approx(totals[k], rel=1e-9)
+
+            # the registry snapshot exposes the same counters
+            snap = router.metrics()
+            assert snap["cluster.hop.score_s"] == \
+                pytest.approx(totals["score_s"], rel=1e-9)
+        finally:
+            router.close()
+            comp.close()
+
+
+def test_direct_path_trace_complete(tmp_path):
+    """The adaptive-cutoff path (``part="full"``, Q=1): ONE hop to the
+    primary, same stage reconciliation, same attached shard span."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        try:
+            router.obs.tracer.take()
+            router.search_sparse(_DS.q_sparse[:1], _DS.q_dense[:1])
+            assert router.stats["direct_reads"] == 1
+            roots = [t for t in router.obs.tracer.take()
+                     if t["name"] == "cluster.search"]
+            (root,) = roots
+            assert root["tags"]["path"] == "direct"
+            assert root["tags"]["merge_s"] > 0.0
+            (hop,) = [c for c in root["children"] if c["name"] == "rpc"]
+            assert hop["tags"]["part"] == "full"
+            _check_hop(hop)
+            (remote,) = _remote_children(hop)
+            assert remote["tags"]["part"] == "full"
+            assert remote["parent_id"] == hop["span_id"]
+        finally:
+            router.close()
+
+
+def test_mutation_traces(tmp_path):
+    """Mutations trace too: ``cluster.insert`` / ``cluster.delete`` roots
+    each carry one primary hop with a reconciled stage breakdown."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        try:
+            router.obs.tracer.take()
+            router.insert(_DS.x_sparse[N0], _DS.x_dense[N0])
+            router.delete([3])
+            traces = router.obs.tracer.take()
+            names = [t["name"] for t in traces]
+            assert names == ["cluster.insert", "cluster.delete"]
+            for t in traces:
+                (hop,) = [c for c in t["children"] if c["name"] == "rpc"]
+                _check_hop(hop)
+        finally:
+            router.close()
+
+
+# -- fault paths --------------------------------------------------------------
+
+def test_trace_survives_reconnect_heal(tmp_path):
+    """A connection dropped mid-exchange heals with a fresh-socket resend
+    — and the SAME hop span times the resend and records the heal as a
+    ``reconnect_resend`` annotation, so the trace stays complete."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        comp = _comparator()
+        try:
+            router.obs.tracer.take()
+            sc = ShardClient("127.0.0.1", cluster.scorers[0].port)
+            sc.call("fault", {"mode": "close_next"})
+            sc.close()
+            before = sum(c.reconnects for c in router.scorers)
+            s_r, i_r = router.search_sparse(_DS.q_sparse, _DS.q_dense)
+            s_c, i_c = comp.search_sparse(_DS.q_sparse, _DS.q_dense)
+            np.testing.assert_array_equal(i_r, i_c)
+            np.testing.assert_array_equal(s_r, s_c)
+            assert sum(c.reconnects for c in router.scorers) == before + 1
+            (root,) = [t for t in router.obs.tracer.take()
+                       if t["name"] == "cluster.search"]
+            notes = _annotations(root)
+            assert any(n.startswith("reconnect_resend") for n in notes)
+            # the healed hop still reconciles
+            for hop in (c for c in root["children"] if c["name"] == "rpc"):
+                _check_hop(hop)
+        finally:
+            router.close()
+            comp.close()
+
+
+def test_failover_and_term_fence_traces(tmp_path):
+    """The election leaves a ``cluster.failover`` trace (candidate poll +
+    promote-winner annotations, the new term as a tag); a zombie
+    primary's fenced ack leaves a ``term_fenced`` annotation on the
+    refused mutation's span; and the promoted cluster keeps producing
+    complete search traces."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"), num_scorers=2,
+                             num_replicas=1) as cluster:
+        r1 = cluster.router(h=8)
+        try:
+            r1.insert(_DS.x_sparse[N0], _DS.x_dense[N0])
+            rc = ShardClient("127.0.0.1", cluster.replicas[0].port)
+            try:
+                import time
+                deadline = time.monotonic() + 60.0
+                while wait_ready(rc)["applied_seq"] < r1._last_seq:
+                    assert time.monotonic() < deadline
+                    time.sleep(0.05)
+            finally:
+                rc.close()
+            promoted_port = cluster.replicas[0].port
+            r1.obs.tracer.take()
+            assert r1.failover() == 2          # old primary left ALIVE
+            (fo,) = [t for t in r1.obs.tracer.take()
+                     if t["name"] == "cluster.failover"]
+            assert fo["tags"]["term"] == 2
+            notes = fo["annotations"]
+            assert any(n.startswith("candidate") for n in notes)
+            assert any(n.startswith("promote winner=") for n in notes)
+
+            # a second router that knows term 2, pointed at the zombie:
+            # the refused ack is annotated on the mutation's own span
+            r2 = ClusterRouter(f"127.0.0.1:{promoted_port}",
+                               [s.addr for s in cluster.scorers], [])
+            try:
+                assert r2.term == 2 and r2.obs.tracer.enabled
+                r2.primary.close()
+                r2.primary = ShardClient("127.0.0.1",
+                                         cluster.primary.port)
+                r2.obs.tracer.take()
+                with pytest.raises(StaleTermError, match="deposed"):
+                    r2.insert(_DS.x_sparse[N0 + 1], _DS.x_dense[N0 + 1])
+                (mt,) = [t for t in r2.obs.tracer.take()
+                         if t["name"] == "cluster.insert"]
+                assert any(n.startswith("term_fenced:")
+                           for n in _annotations(mt))
+            finally:
+                r2.close()
+
+            # the promoted primary serves — with a complete trace
+            r1.obs.tracer.take()
+            r1.search_sparse(_DS.q_sparse, _DS.q_dense)
+            (root,) = [t for t in r1.obs.tracer.take()
+                       if t["name"] == "cluster.search"]
+            hops = [c for c in root["children"] if c["name"] == "rpc"]
+            assert sorted(h["tags"]["part"] for h in hops) == \
+                ["delta", "main", "main"]
+            for hop in hops:
+                _check_hop(hop)
+                assert _remote_children(hop)
+        finally:
+            r1.close()
+
+
+# -- server-side introspection ------------------------------------------------
+
+def test_stats_rpc_op(tmp_path):
+    """The ``stats`` RPC: role/gen/applied_seq plus the server's own
+    registry snapshot — per-op counters and the score-time histogram fed
+    by the searches above it."""
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8)
+        try:
+            router.search_sparse(_DS.q_sparse, _DS.q_dense)
+            c = ShardClient("127.0.0.1", cluster.scorers[0].port)
+            try:
+                st, _ = c.call("stats")
+            finally:
+                c.close()
+            assert st["role"] == "scorer" and st["gen"] == 1
+            m = st["metrics"]
+            assert m["server.op.search"] >= 1
+            assert m["server.score_s"]["count"] >= 1
+            assert m["server.score_s"]["sum"] > 0.0
+        finally:
+            router.close()
+
+
+def test_tracing_disabled_router_adds_no_wire_overhead(tmp_path):
+    """An ``Observability.off()`` router sends NO trace meta, gets NO
+    trace replies, records NO spans — and still serves bit-identically
+    (the per-request opt-in contract: servers only trace when asked)."""
+    from repro.obs import Observability
+    with LocalCluster.launch(_build(), str(tmp_path / "c"),
+                             num_scorers=2) as cluster:
+        router = cluster.router(h=8, obs=Observability.off())
+        comp = _comparator()
+        try:
+            s_r, i_r = router.search_sparse(_DS.q_sparse, _DS.q_dense)
+            s_c, i_c = comp.search_sparse(_DS.q_sparse, _DS.q_dense)
+            np.testing.assert_array_equal(i_r, i_c)
+            np.testing.assert_array_equal(s_r, s_c)
+            assert router.obs.tracer.take() == []
+            assert router.metrics() == {}
+            assert router.hops() == {k: 0 for k in router.hops()}
+        finally:
+            router.close()
+            comp.close()

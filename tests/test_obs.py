@@ -1,0 +1,254 @@
+"""Observability layer (repro/obs, DESIGN.md §9): registry get-or-create
+identity and type safety, exact counters under threaded stress, the
+zero-allocation null path, bounded-bucket histograms, span trees + their
+wire roundtrip (wire_context → from_wire → to_wire → attach_remote), the
+tracer's bounded ring, stage_totals aggregation, and the /metrics HTTP
+exporter on an ephemeral port."""
+
+import json
+import threading
+import urllib.request
+
+import pytest
+
+from repro.obs import (DEFAULT_BOUNDS, NULL_COUNTER, NULL_GAUGE,
+                       NULL_HISTOGRAM, NULL_SPAN, MetricsRegistry,
+                       Observability, Tracer, stage_totals,
+                       start_metrics_server)
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_get_or_create_identity():
+    """Same name → the SAME instrument object (call sites hoist the
+    lookup once); same name under a different kind is a hard error, not a
+    silent shadow."""
+    reg = MetricsRegistry()
+    c1 = reg.counter("a.b")
+    c2 = reg.counter("a.b")
+    assert c1 is c2
+    g = reg.gauge("a.g")
+    assert reg.gauge("a.g") is g
+    h = reg.histogram("a.h")
+    assert reg.histogram("a.h") is h
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("a.b")
+    with pytest.raises(TypeError, match="already registered"):
+        reg.counter("a.h")
+
+
+def test_registry_thread_safety_exact_counts():
+    """8 threads × 5000 increments through racing get-or-create lookups
+    land on ONE instrument and lose nothing: the exact-count contract
+    cache_info()/stats() rely on."""
+    reg = MetricsRegistry()
+    n_threads, n_incs = 8, 5000
+    seen = []
+
+    def worker():
+        c = reg.counter("stress.c")       # racing get-or-create
+        seen.append(c)
+        g = reg.gauge("stress.g")
+        h = reg.histogram("stress.h")
+        for i in range(n_incs):
+            c.inc()
+            g.add(1.0)
+            h.observe(1e-4)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(c is seen[0] for c in seen)
+    assert reg.counter("stress.c").value == n_threads * n_incs
+    assert reg.gauge("stress.g").value == float(n_threads * n_incs)
+    assert reg.histogram("stress.h").count == n_threads * n_incs
+
+
+def test_disabled_registry_null_path():
+    """A disabled registry hands out the shared null singletons, stays
+    empty, and reads zeros — instrumented code runs unchanged."""
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("x")
+    assert c is NULL_COUNTER
+    assert reg.gauge("y") is NULL_GAUGE
+    assert reg.histogram("z") is NULL_HISTOGRAM
+    c.inc(100)
+    NULL_GAUGE.set(5.0)
+    NULL_HISTOGRAM.observe(1.0)
+    assert c.value == 0 and NULL_GAUGE.value == 0.0
+    assert NULL_HISTOGRAM.snapshot()["count"] == 0
+    assert reg.snapshot() == {}
+
+
+def test_histogram_buckets_and_aggregates():
+    """Samples land in their cumulative bucket (overflow included) and
+    the running aggregates (count/sum/mean/min/max/last) are exact."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", bounds=(0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.05, 5.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(5.0555)
+    assert snap["mean"] == pytest.approx(5.0555 / 4)
+    assert snap["min"] == 0.0005 and snap["max"] == 5.0
+    assert snap["last"] == 5.0
+    assert snap["buckets"] == {"0.001": 1, "0.01": 1, "0.1": 1, "+inf": 1}
+    # default bounds are the fixed latency ladder — bounded, never a
+    # per-sample append
+    hd = reg.histogram("lat.default")
+    assert hd.bounds == DEFAULT_BOUNDS
+
+
+def test_render_text_exposition():
+    """Prometheus-style text: one line per counter/gauge, _count/_sum/
+    _last per histogram, dots flattened to underscores."""
+    reg = MetricsRegistry()
+    reg.counter("serve.cache.hits").inc(3)
+    reg.gauge("wal.unsynced_backlog").set(2)
+    reg.histogram("wal.fsync_s").observe(0.002)
+    text = reg.render_text()
+    assert "serve_cache_hits 3" in text
+    assert "wal_unsynced_backlog 2" in text
+    assert "wal_fsync_s_count 1" in text
+    assert "wal_fsync_s_last 0.002" in text
+
+
+# -- spans + tracer ----------------------------------------------------------
+
+
+def test_span_tree_wire_roundtrip():
+    """The cluster propagation cycle in miniature: a client hop span
+    ships its wire_context, the server builds a child via from_wire,
+    serializes it with to_wire, and the client folds it back in with
+    attach_remote — ids line up, tags and annotations survive."""
+    tr = Tracer(enabled=True)
+    root = tr.root("cluster.search", qn=3)
+    hop = root.child("rpc", peer="127.0.0.1:1", part="main")
+    ctx = hop.wire_context()
+    assert ctx == {"tid": root.trace_id, "sid": hop.span_id}
+
+    srv = Tracer(enabled=True)
+    remote = srv.from_wire(ctx, "shard.search", role="scorer")
+    assert remote.trace_id == root.trace_id
+    assert remote.parent_id == hop.span_id
+    remote.set("rows", 48)
+    remote.annotate("reloaded gen=2")
+    wire = remote.to_wire()
+    assert wire["name"] == "shard.search"
+    assert wire["duration_s"] is not None
+    assert wire["rows"] == 48 and wire["role"] == "scorer"
+
+    hop.attach_remote(wire)
+    hop.add("serialize_s", 0.001)
+    hop.end()
+    hop.end()                              # idempotent: duration frozen
+    d0 = hop.duration_s
+    assert d0 is not None and hop.duration_s == d0
+    root.end()
+
+    (trace,) = tr.take()
+    assert trace["name"] == "cluster.search" and trace["tags"]["qn"] == 3
+    (hd,) = trace["children"]
+    assert hd["tags"]["serialize_s"] == 0.001
+    (rd,) = hd["children"]
+    assert rd["span_id"] == wire["sid"]
+    assert rd["tags"]["rows"] == 48
+    assert rd["annotations"] == ["reloaded gen=2"]
+    # attach_remote(None) is a no-op so callers pass rmeta.get("trace")
+    hop.attach_remote(None)
+    assert len(hd["children"]) == 1
+
+
+def test_null_span_and_disabled_tracer():
+    """The disabled path: falsy NULL_SPAN whose children are itself,
+    whose wire_context is None (nothing added to request meta), usable as
+    a context manager; a disabled tracer roots to it and records
+    nothing."""
+    tr = Tracer(enabled=False)
+    sp = tr.root("x")
+    assert sp is NULL_SPAN and not sp
+    assert sp.child("y") is sp
+    assert sp.wire_context() is None
+    assert sp.to_wire() is None and sp.to_dict() is None
+    with sp as s:
+        s.set("k", 1)
+        s.add("t", 0.5)
+        s.annotate("e")
+    assert tr.take() == [] and tr.last() is None
+    # absent wire context → NULL_SPAN server-side (per-request opt-in)
+    live = Tracer(enabled=True)
+    assert live.from_wire(None, "shard.search") is NULL_SPAN
+
+
+def test_tracer_ring_bounded_and_drained():
+    """Finished roots land in a deque(maxlen=keep): only the newest
+    ``keep`` survive, take() drains, last() peeks without draining."""
+    tr = Tracer(enabled=True, keep=4)
+    for i in range(7):
+        with tr.root("r", i=i):
+            pass
+    assert tr.last()["tags"]["i"] == 6
+    got = tr.take()
+    assert [t["tags"]["i"] for t in got] == [3, 4, 5, 6]
+    assert tr.take() == []
+
+
+def test_stage_totals_sums_all_spans():
+    """stage_totals sums every STAGES tag over every span of every tree —
+    root merge_s plus per-hop stage tags, non-stage tags ignored."""
+    tr = Tracer(enabled=True)
+    for _ in range(2):
+        root = tr.root("cluster.search")
+        root.add("merge_s", 0.25)
+        for _ in range(2):
+            h = root.child("rpc")
+            h.add("serialize_s", 0.5)
+            h.add("wire_s", 0.125)
+            h.add("queue_s", 0.0625)
+            h.add("score_s", 1.0)
+            h.set("wall_s", 2.0)           # not a stage: ignored
+            h.end()
+        root.end()
+    totals = stage_totals(tr.take())
+    assert totals == {"serialize_s": 2.0, "wire_s": 0.5, "queue_s": 0.25,
+                      "score_s": 4.0, "merge_s": 0.5}
+
+
+# -- Observability bundle + exporter -----------------------------------------
+
+
+def test_observability_defaults_and_off():
+    """Default bundle: metrics ON, tracing OFF; .off() nulls both."""
+    obs = Observability()
+    assert obs.metrics.enabled and not obs.tracer.enabled
+    assert obs.enabled
+    off = Observability.off()
+    assert not off.enabled
+    assert off.metrics.counter("x") is NULL_COUNTER
+    assert off.tracer.root("y") is NULL_SPAN
+
+
+def test_metrics_http_exporter():
+    """The --metrics-port endpoint on an ephemeral port: /metrics serves
+    the text exposition, /metrics.json the snapshot, anything else 404s."""
+    reg = MetricsRegistry()
+    reg.counter("serve.requests").inc(7)
+    reg.histogram("wal.fsync_s").observe(0.001)
+    srv = start_metrics_server(reg, port=0)
+    try:
+        assert srv.port > 0
+        base = f"http://127.0.0.1:{srv.port}"
+        text = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert "serve_requests 7" in text
+        assert "wal_fsync_s_count 1" in text
+        snap = json.loads(
+            urllib.request.urlopen(f"{base}/metrics.json").read())
+        assert snap["serve.requests"] == 7
+        assert snap["wal.fsync_s"]["count"] == 1
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{base}/nope")
+    finally:
+        srv.close()

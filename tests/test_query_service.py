@@ -512,3 +512,51 @@ def test_refresh_version_invalidates_cache(small_hybrid):
     svc.search(q_dims[:1], q_vals[:1], q_dense[:1])
     info = svc.cache_info()
     assert info.hits == 1 and info.misses == 2
+
+
+def test_metrics_exact_under_threaded_search(served):
+    """Registry-backed counters stay EXACT under threaded load (ISSUE 10
+    satellite): N threads race single-row searches through one service;
+    afterwards ``serve.requests`` equals the total rows served,
+    hits + misses account for every cache lookup, and the span ring holds
+    (at most ``keep_traces``) finished ``serve.search`` roots whose qn
+    tags also sum to the total."""
+    from repro.obs import Observability
+    _, idx, q_dims, q_vals, q_dense = served
+    svc = QueryService(idx.engine, h=5, cache_size=256,
+                       obs=Observability(trace=True, keep_traces=4096))
+    n_threads, n_iters = 4, 40
+    errors: list[BaseException] = []
+
+    def worker(tid):
+        try:
+            for i in range(n_iters):
+                j = (tid + i) % q_dims.shape[0]
+                svc.search(q_dims[j:j + 1], q_vals[j:j + 1],
+                           q_dense[j:j + 1])
+        except BaseException as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    total = n_threads * n_iters
+    snap = svc.metrics()
+    assert snap["serve.requests"] == total
+    assert snap["serve.cache.hits"] + snap["serve.cache.misses"] == total
+    info = svc.cache_info()
+    assert (info.hits, info.misses) == (snap["serve.cache.hits"],
+                                        snap["serve.cache.misses"])
+    # misses are bounded by distinct fingerprints × racing threads (two
+    # threads may miss the same cold query before either populates it)
+    assert snap["serve.cache.misses"] <= q_dims.shape[0] * n_threads
+    assert snap["serve.batches"] == snap["serve.cache.misses"]
+    traces = svc.obs.tracer.take()
+    roots = [t for t in traces if t["name"] == "serve.search"]
+    assert len(roots) == total
+    assert sum(t["tags"]["qn"] for t in roots) == total
+    assert sum(t["tags"]["cache_hits"] for t in roots) == info.hits

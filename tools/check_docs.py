@@ -114,14 +114,15 @@ def _public_defs(node: ast.Module | ast.ClassDef, prefix: str = ""):
                 yield from _public_defs(child, prefix + child.name + ".")
 
 
-DOC_GATED_PACKAGES = ("serve", "persist")
+DOC_GATED_PACKAGES = ("serve", "persist", "obs")
 
 
 def check_api_docstrings(errors: list[str]) -> None:
     """The serving layer (src/repro/serve/, DESIGN.md §5), the durability
-    layer (src/repro/persist/, DESIGN.md §7), and the cluster tier
-    (src/repro/serve/cluster/, DESIGN.md §8) are documented interfaces:
-    every public function, class, and method needs a docstring.  rglob so
+    layer (src/repro/persist/, DESIGN.md §7), the cluster tier
+    (src/repro/serve/cluster/, DESIGN.md §8), and the observability layer
+    (src/repro/obs/, DESIGN.md §9) are documented interfaces: every
+    public function, class, and method needs a docstring.  rglob so
     nested packages (serve/cluster/) are gated too."""
     for pkg in DOC_GATED_PACKAGES:
         for path in sorted((REPO / "src" / "repro" / pkg).rglob("*.py")):
